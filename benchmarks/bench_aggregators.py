@@ -1,0 +1,43 @@
+"""Aggregator micro-benchmarks: Pallas kernels (interpret mode on CPU;
+compiled on TPU) vs the pure-jnp references, plus the full tree aggregators
+on a model-sized gradient stack. On-CPU numbers are correctness-path timings;
+the derived column reports bytes processed per call."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._clf import timed
+from repro.core.aggregators import get_aggregator
+from repro.kernels.ops import cwmed_op, cwtm_op, pairwise_sqdist_op
+from repro.kernels.ref import cwmed_ref, cwtm_ref, pairwise_sqdist_ref
+
+
+def main(fast: bool = False):
+    out = []
+    m, d = 16, (1 << 16 if fast else 1 << 20)
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, d), jnp.float32)
+    mb = m * d * 4 / 1e6
+    for name, fn in [("cwmed_kernel", lambda: cwmed_op(x)),
+                     ("cwmed_ref", lambda: jax.jit(cwmed_ref)(x)),
+                     ("cwtm_kernel", lambda: cwtm_op(x, 4)),
+                     ("cwtm_ref", lambda: jax.jit(lambda a: cwtm_ref(a, 4))(x)),
+                     ("pairwise_kernel", lambda: pairwise_sqdist_op(x)),
+                     ("pairwise_ref", lambda: jax.jit(pairwise_sqdist_ref)(x))]:
+        _, us = timed(fn, iters=2 if "kernel" in name else 5)
+        out.append(f"aggregators/{name},{us:.0f},MB_in={mb:.1f}")
+    # tree aggregators on a gradient-like pytree
+    tree = {"w1": jax.random.normal(jax.random.PRNGKey(1), (m, 256, 256)),
+            "w2": jax.random.normal(jax.random.PRNGKey(2), (m, 256, 64)),
+            "b": jax.random.normal(jax.random.PRNGKey(3), (m, 256))}
+    for name in ("cwmed", "cwtm", "krum", "geomed", "nnm+cwmed"):
+        agg = get_aggregator(name, delta=0.25)
+        f = jax.jit(agg.tree)
+        _, us = timed(f, tree, iters=5)
+        out.append(f"aggregators/tree_{name},{us:.0f},leaves=3;m={m}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

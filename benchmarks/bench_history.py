@@ -1,0 +1,42 @@
+"""Table 1: history-window dependence of Byzantine-robust methods.
+
+Measured (not asserted): MLMC per-round per-worker gradient evaluations
+(expected O(log T), stochastic window 2^J with E[window] = O(log T)) vs the
+deterministic windows of ByzantineSGD (T), SafeguardSGD (T^{5/8}) and
+worker-momentum (1/(1-β) ≈ √T).
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core.mlmc import expected_cost, sample_level
+
+
+def run(T: int = 4096, n: int = 50_000):
+    rng = np.random.default_rng(0)
+    jmax = int(math.log2(T))
+    js = [min(sample_level(rng, jmax), jmax) for _ in range(n)]
+    cost = float(np.mean([expected_cost(j) for j in js]))
+    window = float(np.mean([2.0 ** j for j in js]))
+    beta = 1.0 - 1.0 / math.sqrt(T)
+    rows = [
+        ("byzantine_sgd", T, T, "deterministic"),
+        ("safeguard_sgd", T, round(T ** (5 / 8)), "deterministic"),
+        ("worker_momentum", T, round(1 / (1 - beta)), "deterministic"),
+        ("mlmc_ours_measured", round(cost * T), round(window), "stochastic"),
+    ]
+    derived = [f"theory: E[cost/round]=1+1.5*log2(T)={1 + 1.5 * jmax:.1f}, measured={cost:.2f}"]
+    return rows, derived
+
+
+def main(fast: bool = False):
+    rows, derived = run()
+    out = [f"history_table1/{n},,per_worker_cost={c};window={w};type={k}"
+           for n, c, w, k in rows]
+    return out + [f"history_table1/check,,{derived[0]}"]
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

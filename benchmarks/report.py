@@ -1,0 +1,122 @@
+"""Generate the §Dry-run / §Roofline markdown tables for EXPERIMENTS.md from
+the dry-run JSON artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report [--dir experiments/dryrun] [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12  # TPU v5e bf16 per chip
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+SHAPE_TOKENS = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
+                "decode_32k": 128, "long_500k": 1}
+
+
+def load(dirname):
+    recs = {}
+    for p in sorted(glob.glob(os.path.join(ROOT, dirname, "*.json"))):
+        name = os.path.basename(p)[:-5]
+        if "__probe" in name or "__opt" in name:
+            continue
+        with open(p) as f:
+            recs[name] = json.load(f)
+    return recs
+
+
+def fmt_s(x):
+    if x is None:
+        return "—"
+    if x == 0:
+        return "0"
+    for unit, f in (("s", 1), ("ms", 1e3), ("us", 1e6)):
+        if x * f >= 1:
+            return f"{x*f:.2f}{unit}"
+    return f"{x*1e6:.3f}us"
+
+
+def fmt_b(x):
+    if not x:
+        return "0"
+    for unit, f in (("TB", 2**40), ("GB", 2**30), ("MB", 2**20)):
+        if x >= f:
+            return f"{x/f:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def terms(rec):
+    if rec.get("skipped"):
+        return None
+    w = rec.get("weighted") or {}
+    flops = w.get("flops_weighted") or rec.get("flops") or 0.0
+    byts = w.get("bytes_weighted") or rec.get("bytes_accessed") or 0.0
+    coll = rec["collectives"]["total_bytes"]
+    t = {"compute": flops / PEAK_FLOPS, "memory": byts / HBM_BW,
+         "collective": coll / ICI_BW}
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    mult = {"train": 3.0, "prefill": 1.0, "decode": 1.0}[rec["kind"]]
+    mf = mult * 2.0 * rec["active_params"] * SHAPE_TOKENS[rec["shape"]] / chips
+    return t, max(t, key=t.get), mf, flops
+
+
+def dryrun_table(recs, mesh):
+    rows = ["| arch | shape | compiled | t_compile | HBM temp | HBM args | collectives (count) | collective bytes/dev |",
+            "|---|---|---|---|---|---|---|---|"]
+    for name, r in sorted(recs.items()):
+        if r.get("skipped"):
+            if mesh in name:
+                rows.append(f"| {r['arch']} | {r['shape']} | SKIP ({r['reason'][:40]}…) | | | | | |")
+            continue
+        if r["mesh"] != mesh:
+            continue
+        c = r["collectives"]
+        cnt = ", ".join(f"{k.split('-')[-1][:3]}:{int(v)}" for k, v in
+                        c["counts"].items() if v)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ✓ | {r['t_compile_s']}s | "
+            f"{fmt_b(r['memory'].get('temp_size_in_bytes'))} | "
+            f"{fmt_b(r['memory'].get('argument_size_in_bytes'))} | "
+            f"{cnt} | {fmt_b(c['total_bytes'])} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs, mesh):
+    rows = ["| arch | shape | compute | memory | collective | dominant | 6ND/HLO | note |",
+            "|---|---|---|---|---|---|---|---|"]
+    notes = {
+        ("collective",): "drive down the dominant collective (see §Perf)",
+    }
+    for name, r in sorted(recs.items()):
+        if r.get("skipped") or r["mesh"] != mesh:
+            continue
+        t, dom, mf, flops = terms(r)
+        ratio = f"{mf/flops*100:.0f}%" if flops else "—"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(t['compute'])} | "
+            f"{fmt_s(t['memory'])} | {fmt_s(t['collective'])} | **{dom}** | "
+            f"{ratio} | |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--kind", default="roofline", choices=["roofline", "dryrun"])
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if args.kind == "dryrun":
+        print(dryrun_table(recs, args.mesh))
+    else:
+        print(roofline_table(recs, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

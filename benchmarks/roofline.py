@@ -1,0 +1,131 @@
+"""§Roofline report: read experiments/dryrun/*.json, derive the three roofline
+terms per (arch × shape × mesh), identify the dominant bottleneck, and emit
+the markdown tables for EXPERIMENTS.md.
+
+    compute term    = HLO_FLOPs / (chips × 197e12 FLOP/s)
+    memory term     = HLO_bytes / (chips × 819e9 B/s)
+    collective term = collective_bytes_per_device / 50e9 B/s  (per-link)
+
+cost_analysis() on the SPMD-partitioned module reports per-device FLOPs/bytes
+already, so no division by chip count is applied to those; collective bytes
+are parsed per device from the HLO (ring (n-1)/n conventions, scan
+trip-weighted).
+
+  PYTHONPATH=src python -m benchmarks.roofline [--write-md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12  # TPU v5e bf16
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def model_flops(rec) -> float:
+    """6·N_active·D tokens processed per step (training) or per token
+    (decode); prefill uses 2·N_active·D (forward only)."""
+    n = rec["active_params"]
+    if rec["kind"] == "train":
+        toks = {"train_4k": 256 * 4096}.get(rec["shape"], 0)
+        return 6.0 * n * toks
+    if rec["kind"] == "prefill":
+        toks = {"prefill_32k": 32 * 32768}.get(rec["shape"], 0)
+        return 2.0 * n * toks
+    toks = {"decode_32k": 128, "long_500k": 1}.get(rec["shape"], 1)
+    return 2.0 * n * toks
+
+
+def load(mesh_filter=None):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if mesh_filter and r.get("mesh") != mesh_filter:
+            continue
+        recs.append(r)
+    return recs
+
+
+def analyze(rec):
+    if rec.get("skipped"):
+        return None
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    flops = rec.get("flops") or 0.0
+    byts = rec.get("bytes_accessed") or 0.0
+    coll = rec["collectives"]["total_bytes"]
+    # cost_analysis is per-device on the partitioned module
+    t_comp = flops / PEAK_FLOPS
+    t_mem = byts / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec) / chips
+    useful = mf / flops if flops else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dom,
+        "model_flops_per_chip": mf, "useful_flops_frac": useful,
+        "hbm_temp_gb": (rec["memory"].get("temp_size_in_bytes") or 0) / 2**30,
+        "hbm_args_gb": (rec["memory"].get("argument_size_in_bytes") or 0) / 2**30,
+        "coll_bytes_gb": coll / 2**30,
+    }
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    for unit, f in (("s", 1), ("ms", 1e3), ("us", 1e6)):
+        if x * f >= 1:
+            return f"{x*f:.2f}{unit}"
+    return f"{x*1e6:.3f}us"
+
+
+def table(recs, mesh):
+    rows = [analyze(r) for r in recs if r.get("mesh") == mesh or r.get("skipped")]
+    out = ["| arch | shape | compute | memory | collective | dominant | useful-FLOPs | temp HBM | args HBM |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r is None:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['t_compute_s'])} | "
+            f"{fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])} | "
+            f"**{r['dominant']}** | {r['useful_flops_frac']*100:.0f}% | "
+            f"{r['hbm_temp_gb']:.1f}GB | {r['hbm_args_gb']:.1f}GB |")
+    skipped = [r for r in recs if r.get("skipped")]
+    for r in skipped:
+        out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped: "
+                   f"{r['reason']} | | | |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    recs = load()
+    if args.csv:
+        print("name,us_per_call,derived")
+        for r in recs:
+            a = analyze(r)
+            if not a:
+                continue
+            dom_t = max(a["t_compute_s"], a["t_memory_s"], a["t_collective_s"])
+            print(f"roofline/{a['arch']}/{a['shape']}/{a['mesh']},"
+                  f"{dom_t*1e6:.0f},dominant={a['dominant']};useful="
+                  f"{a['useful_flops_frac']*100:.0f}%")
+        return
+    print(table(recs, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

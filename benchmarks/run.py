@@ -1,0 +1,50 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. ``--fast`` shrinks rounds/seeds;
+the full run reproduces the qualitative claims of Section 6.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+
+MODULES = [
+    "benchmarks.bench_history",        # Table 1
+    "benchmarks.bench_mlmc",           # Lemma 3.1
+    "benchmarks.bench_aggregators",    # kernels micro
+    "benchmarks.bench_momentum_fails",  # Fig 3/4 (App. E)
+    "benchmarks.bench_periodic",       # Fig 1/5
+    "benchmarks.bench_bernoulli",      # Fig 2/8
+    "benchmarks.bench_failsafe",       # Eq. 6 / Thm 4.1 ablation
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None, help="substring filter on module")
+    args, _ = ap.parse_known_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(mod_name)
+            rows = mod.main(fast=args.fast)
+            for r in rows:
+                print(r, flush=True)
+            print(f"{mod_name},{(time.time()-t0)*1e6:.0f},module_wall_s="
+                  f"{time.time()-t0:.1f}", flush=True)
+        except Exception as e:  # keep the suite going, report at the end
+            failures += 1
+            print(f"{mod_name},,ERROR={type(e).__name__}:{e}", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: Byzantine-robust training in ~40 lines (Mode A simulation).
+
+Runs DynaBRO (Algorithm 2) on a small classifier with m=17 workers of which 8
+are Byzantine (sign-flip), under the Periodic(10) identity-switching strategy
+— the paper's Figure 1 setting, shrunk to run in ~a minute on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks._clf import make_task
+from repro.core.mlmc import MLMCConfig
+from repro.core.robust_train import DynaBROConfig, run_dynabro
+from repro.core.switching import get_switcher
+from repro.optim.optimizers import sgd
+
+
+def main():
+    m, n_byz, T = 17, 8, 150
+    params0, grad_fn, sampler, eval_fn = make_task(m, seed=0)
+
+    cfg = DynaBROConfig(
+        mlmc=MLMCConfig(T=T, m=m, V=5.0, option=1, kappa=1.0, j_cap=5),
+        aggregator="cwtm",          # coordinate-wise trimmed mean
+        delta=n_byz / m + 1e-3,
+        attack="sign_flip")          # Byzantine workers negate their gradients
+
+    switcher = get_switcher("periodic", m, n_byz=n_byz, K=10)
+
+    params, logs, evals = run_dynabro(
+        grad_fn, params0, sgd(0.1), cfg, switcher, sampler, T,
+        eval_fn=eval_fn, eval_every=30)
+
+    for t, ev in evals:
+        print(f"round {t:4d}  test_acc={ev['test_acc']:.3f}")
+    levels = [l.level for l in logs]
+    print(f"\nMLMC levels used: {sorted(set(levels))}, "
+          f"mean per-worker cost/round: "
+          f"{sum(l.cost for l in logs) / len(logs):.2f} gradient evals")
+    acc = evals[-1][1]["test_acc"]
+    print("final accuracy:", acc, "(>0.8 expected despite 8/17 Byzantine)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""End-to-end Mode B driver: distributed DynaBRO on a (simulated) mesh.
+
+Trains a reduced llama-family model with FSDP + tensor parallelism and the
+robust all-to-all aggregation, one Byzantine worker sign-flipping, with full
+MLMC levels and the fail-safe filter — the production path of
+``repro.launch.train`` (this example just invokes it with a CPU-sized mesh).
+
+  PYTHONPATH=src python examples/train_multipod.py
+"""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def main():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", "qwen3-0.6b", "--reduced",
+           "--devices", "8", "--mesh", "2x2x2",  # pod x data x model
+           "--steps", "30", "--global-batch", "8", "--seq-len", "128",
+           "--mlmc", "--aggregator", "cwmed", "--attack", "sign_flip",
+           "--switch", "periodic", "--switch-k", "5", "--n-byz", "1",
+           "--ckpt-every", "15"]
+    print("+", " ".join(cmd))
+    sys.exit(subprocess.call(cmd, env=env, cwd=ROOT))
+
+
+if __name__ == "__main__":
+    main()

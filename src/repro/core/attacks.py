@@ -1,0 +1,117 @@
+"""Byzantine attacks (Appendix J) + the momentum-tailored dynamic attack (App. E).
+
+Every attack maps a stacked honest-gradient tree (leading worker axis m) and a
+boolean Byzantine mask (m,) to the attacked stack. Honest statistics (mean,
+std) are computed over the honest workers only — the strongest, omniscient
+variant used in the paper.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def _honest_mean(l, mask):
+    w = (~mask).astype(jnp.float32)
+    w = w / jnp.maximum(w.sum(), 1.0)
+    return jnp.einsum("i,i...->...", w, l.astype(jnp.float32))
+
+
+def _apply(stacked, mask, fn):
+    def leaf(l):
+        byz = fn(l)
+        mk = mask.reshape((-1,) + (1,) * (l.ndim - 1))
+        return jnp.where(mk, byz.astype(l.dtype), l)
+    return jax.tree.map(leaf, stacked)
+
+
+def sign_flip(stacked, mask, key=None, scale: float = 1.0):
+    """SF (Allen-Zhu et al., 2020): negate own gradient."""
+    return _apply(stacked, mask, lambda l: -scale * l.astype(jnp.float32))
+
+
+def ipm(stacked, mask, key=None, eps: float = 0.1):
+    """Inner-product manipulation (Xie et al., 2020): send −ε · mean(honest)."""
+    def leaf(l):
+        mu = _honest_mean(l, mask)
+        return jnp.broadcast_to(-eps * mu, l.shape)
+    return _apply(stacked, mask, leaf)
+
+
+def alie(stacked, mask, key=None, z: float = 1.22):
+    """A Little Is Enough (Baruch et al., 2019): mean − z·std, element-wise."""
+    def leaf(l):
+        w = (~mask).astype(jnp.float32)
+        wn = w / jnp.maximum(w.sum(), 1.0)
+        wb = wn.reshape((-1,) + (1,) * (l.ndim - 1))
+        mu = (l.astype(jnp.float32) * wb).sum(0)
+        var = (jnp.square(l.astype(jnp.float32) - mu) * wb).sum(0)
+        return jnp.broadcast_to(mu - z * jnp.sqrt(var + 1e-12), l.shape)
+    return _apply(stacked, mask, leaf)
+
+
+def random_noise(stacked, mask, key, scale: float = 10.0):
+    """Gaussian garbage."""
+    def leaf_fn(l, k):
+        return scale * jax.random.normal(k, l.shape, jnp.float32)
+    leaves, treedef = jax.tree.flatten(stacked)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for l, k in zip(leaves, keys):
+        mk = mask.reshape((-1,) + (1,) * (l.ndim - 1))
+        out.append(jnp.where(mk, leaf_fn(l, k).astype(l.dtype), l))
+    return jax.tree.unflatten(treedef, out)
+
+
+def shift(stacked, mask, key=None, v: float = 1.0):
+    """Constant-shift attack g + v·1 (used by the App. E dynamic attack)."""
+    return _apply(stacked, mask, lambda l: l.astype(jnp.float32) + v)
+
+
+ATTACKS: Dict[str, Callable] = {
+    "none": lambda s, m, key=None, **kw: s,
+    "sign_flip": sign_flip,
+    "ipm": ipm,
+    "alie": alie,
+    "random": random_noise,
+    "shift": shift,
+}
+
+
+def get_attack(name: str, **kw) -> Callable:
+    fn = ATTACKS[name]
+    if kw:
+        return lambda s, m, key=None: fn(s, m, key=key, **kw)
+    return fn
+
+
+# ----------------------------------------------------- App. E dynamic attack
+
+
+def momentum_attack_v(t: int, alpha: float, lam: float = 1.0):
+    """Attack magnitude v_t of the momentum-tailored dynamic attack (App. E).
+
+    Keeps every worker's momentum biased by ≈ λ despite each worker being
+    Byzantine for only 1/(3α) of the time. Returns the scalar multiplier of
+    the fixed direction v.
+    """
+    period = max(int(round(1.0 / alpha)), 3)
+    third = max(period // 3, 1)
+    tm = t % period
+    if t < period:  # first epoch
+        if tm in (third, 2 * third):
+            return lam / alpha
+        return lam
+    if tm == 0:  # first round of later epochs (t mod 1/α == 1 in 1-based)
+        return lam * (1.0 - (1.0 - alpha) ** (2 * third)) / alpha
+    return lam
+
+
+def momentum_attack_byz_index(t: int, alpha: float, m: int = 3) -> int:
+    """Which worker (of 3 groups) is Byzantine at round t under App. E."""
+    period = max(int(round(1.0 / alpha)), 3)
+    third = max(period // 3, 1)
+    return (t % period) // third % 3

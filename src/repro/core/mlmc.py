@@ -1,0 +1,94 @@
+"""MLMC gradient estimation with the DynaBRO fail-safe filter (Alg. 1 & 2).
+
+Per round: sample ``J ~ Geom(1/2)`` (host side — the level picks which
+compiled step runs); aggregate worker mini-batch gradients at levels
+``0, J-1, J``; combine ``g = ĝ⁰ + 2^J (ĝ^J − ĝ^{J−1})`` guarded by the
+fail-safe event
+
+    E_t = { ‖ĝ^J − ĝ^{J−1}‖ ≤ (1+√2) · c_E · C · V / √(2^J) }      (Eq. 6)
+
+with ``C = sqrt(8 log(16 m² T))``; Option 1 sets ``c_E = √γ``
+(γ = 2κ_δ + 1/m), Option 2 (MFM) sets ``c_E = 6√2`` (δ-oblivious).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def sample_level(rng: np.random.Generator, j_max: int) -> int:
+    """J ~ Geom(1/2) (support 1, 2, ...), truncated at j_max for dispatch."""
+    j = int(rng.geometric(0.5))
+    return min(j, j_max + 1)  # j_max+1 encodes 'beyond cap' -> correction dropped
+
+
+def universal_C(m: int, T: int) -> float:
+    return math.sqrt(8.0 * math.log(16.0 * m * m * T))
+
+
+@dataclasses.dataclass(frozen=True)
+class MLMCConfig:
+    T: int  # total rounds (sets J_max = floor(log2 T) and the C constant)
+    m: int  # number of workers
+    V: float  # bounded-noise level (Assumption 2.2)
+    option: int = 1  # 1: (δ,κ)-robust agg, 2: MFM
+    kappa: float = 1.0  # κ_δ of the aggregator (Option 1)
+    use_failsafe: bool = True
+    j_cap: int = 7  # practical cap (Appendix J uses J_max=7)
+
+    @property
+    def j_max(self) -> int:
+        return min(int(math.log2(max(self.T, 2))), self.j_cap)
+
+    @property
+    def gamma(self) -> float:
+        return 2.0 * self.kappa + 1.0 / self.m
+
+    @property
+    def c_E(self) -> float:
+        if self.option == 2:
+            return 6.0 * math.sqrt(2.0)
+        return math.sqrt(self.gamma)
+
+    def threshold(self, j) -> jax.Array:
+        """Fail-safe bound (1+√2)·c_E·C·V/√(2^j)."""
+        C = universal_C(self.m, self.T)
+        return (1.0 + math.sqrt(2.0)) * self.c_E * C * self.V / jnp.sqrt(2.0 ** j)
+
+    def mfm_tau(self, n: int) -> float:
+        """MFM threshold T^N = 2·C·V/√N (Option 2)."""
+        return 2.0 * universal_C(self.m, self.T) * self.V / math.sqrt(n)
+
+
+def tree_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def mlmc_combine(g0, gjm1, gj, j: int, cfg: MLMCConfig):
+    """Combine aggregated level gradients into the MLMC estimate.
+
+    g0/gjm1/gj: pytrees (aggregated gradients at batch sizes 1, 2^{j-1}, 2^j).
+    ``j`` is static (host-sampled). Returns (g, info dict).
+    """
+    if j > cfg.j_max or gj is None:
+        info = {"level": j, "failsafe_ok": jnp.array(True), "corr_norm": jnp.zeros(())}
+        return g0, info
+    diff = jax.tree.map(lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32), gj, gjm1)
+    dn = tree_norm(diff)
+    ok = dn <= cfg.threshold(j) if cfg.use_failsafe else jnp.array(True)
+    scale = jnp.where(ok, 2.0 ** j, 0.0)
+    g = jax.tree.map(lambda a, d: (a.astype(jnp.float32) + scale * d).astype(a.dtype),
+                     g0, diff)
+    info = {"level": j, "failsafe_ok": ok, "corr_norm": dn}
+    return g, info
+
+
+def expected_cost(j: int) -> int:
+    """Per-worker stochastic-gradient evaluations this round: 1 + 2^{j-1} + 2^j."""
+    return 1 + (2 ** (j - 1) + 2 ** j if j >= 1 else 0)

@@ -1,0 +1,126 @@
+"""Identity-switching strategies (Section 6).
+
+Host-side, seeded, reproducible. Each strategy yields a boolean mask (m,)
+per round: True = Byzantine. ``within_round(t, k)`` supports the dynamic-round
+model of Section 4 where identities may flip between the k-th gradient
+computations of one round (data poisoning); the default strategies only switch
+*between* rounds (τ_d = ∅ w.r.t. within-round changes).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class Switcher:
+    def __init__(self, m: int, seed: int = 0):
+        self.m = m
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+
+    def mask(self, t: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def within_round(self, t: int, k: int) -> np.ndarray:
+        """Mask at the k-th gradient computation of round t (default: static)."""
+        return self.mask(t)
+
+    def switch_rounds(self, T: int) -> int:
+        """|rounds with a different mask than the previous round| (≈ |τ_d|
+        in the between-round sense used by the experiments)."""
+        n, prev = 0, None
+        for t in range(T):
+            cur = tuple(self.mask(t))
+            if prev is not None and cur != prev:
+                n += 1
+            prev = cur
+        return n
+
+
+class Static(Switcher):
+    """Fixed Byzantine set (the classical setting)."""
+
+    def __init__(self, m: int, n_byz: int, seed: int = 0):
+        super().__init__(m, seed)
+        self._mask = np.zeros(m, bool)
+        idx = self.rng.choice(m, n_byz, replace=False)
+        self._mask[idx] = True
+
+    def mask(self, t):
+        return self._mask
+
+
+class Periodic(Switcher):
+    """Periodic(K): resample the δm Byzantine workers every K rounds."""
+
+    def __init__(self, m: int, n_byz: int, K: int, seed: int = 0):
+        super().__init__(m, seed)
+        self.n_byz = n_byz
+        self.K = K
+        self._cache = {}
+
+    def mask(self, t):
+        e = t // self.K
+        if e not in self._cache:
+            rng = np.random.default_rng(self.seed * 1_000_003 + e)
+            mask = np.zeros(self.m, bool)
+            mask[rng.choice(self.m, self.n_byz, replace=False)] = True
+            self._cache[e] = mask
+        return self._cache[e]
+
+
+class Bernoulli(Switcher):
+    """Bernoulli(p, D, δmax): each worker independently turns Byzantine with
+    prob p per round, for a fixed duration of D rounds, capped at δmax·m
+    simultaneous Byzantine workers."""
+
+    def __init__(self, m: int, p: float, D: int, delta_max: float, seed: int = 0):
+        super().__init__(m, seed)
+        self.p = p
+        self.D = D
+        self.cap = int(delta_max * m)
+        self._until = np.zeros(m, np.int64)  # byz until round (exclusive)
+        self._computed_to = 0
+
+    def _advance(self, t):
+        while self._computed_to <= t:
+            s = self._computed_to
+            active = (self._until > s).sum()
+            draws = self.rng.random(self.m) < self.p
+            for i in np.nonzero(draws)[0]:
+                if self._until[i] <= s and active < self.cap:
+                    self._until[i] = s + self.D
+                    active += 1
+            self._computed_to += 1
+
+    def mask(self, t):
+        self._advance(t)
+        return self._until > t
+
+
+class MomentumTailored(Switcher):
+    """Appendix E: rotate the single Byzantine worker among 3 groups, once per
+    1/(3α) rounds — defeats worker-momentum with only O(√T) switches."""
+
+    def __init__(self, m: int, alpha: float, seed: int = 0):
+        super().__init__(m, seed)
+        self.alpha = alpha
+        self.period = max(int(round(1.0 / alpha)), 3)
+        self.third = max(self.period // 3, 1)
+
+    def mask(self, t):
+        g = (t % self.period) // self.third % 3
+        mask = np.zeros(self.m, bool)
+        # group g of 3 equal groups is Byzantine
+        lo = g * self.m // 3
+        hi = (g + 1) * self.m // 3
+        mask[lo:hi] = True
+        return mask
+
+
+def get_switcher(name: str, m: int, seed: int = 0, **kw) -> Switcher:
+    return {
+        "static": Static,
+        "periodic": Periodic,
+        "bernoulli": Bernoulli,
+        "momentum_tailored": MomentumTailored,
+    }[name](m, seed=seed, **kw)

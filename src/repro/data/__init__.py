@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLMData, gaussian_mixture_dataset
+
+__all__ = ["SyntheticLMData", "gaussian_mixture_dataset"]

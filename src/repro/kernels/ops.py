@@ -1,0 +1,33 @@
+"""Jitted public wrappers for the aggregation kernels.
+
+On TPU the Pallas kernels run compiled; on CPU (this container) they run in
+``interpret=True`` mode, executing the same kernel bodies for correctness.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cwmed as _cwmed_mod
+from repro.kernels import pairwise as _pairwise_mod
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d",))
+def cwmed_op(x: jax.Array, tile_d: int = 2048) -> jax.Array:
+    return _cwmed_mod.cwmed(x, tile_d=tile_d, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("trim", "tile_d"))
+def cwtm_op(x: jax.Array, trim: int, tile_d: int = 2048) -> jax.Array:
+    return _cwmed_mod.cwtm(x, trim, tile_d=tile_d, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d",))
+def pairwise_sqdist_op(x: jax.Array, tile_d: int = 4096) -> jax.Array:
+    return _pairwise_mod.pairwise_sqdist(x, tile_d=tile_d, interpret=_interpret())

@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: m×m pairwise squared distances over a huge feature dim.
+
+Used by the distance-based aggregators (Krum / NNM / MFM / GeoMed init): the
+(m, m) Gram/statistics are tiny but the reduction runs over d ~ 1e9+ floats,
+so this is a bandwidth-bound streaming reduction. The grid walks d tiles; each
+step does an (m, TILE_D) x (TILE_D, m) MXU matmul and accumulates
+sq-norm/gram partials straight into the (m, m) output block (output revisited
+across the sequential TPU grid => accumulation is safe).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pairwise_kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)  # (m, tile)
+    gram = jax.lax.dot_general(x, x, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (m, m)
+    sq = jnp.diagonal(gram)
+    part = sq[:, None] + sq[None, :] - 2.0 * gram
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(i != 0)
+    def _acc():
+        o_ref[...] += part
+
+
+def pairwise_sqdist(x: jax.Array, *, tile_d: int = 4096,
+                    interpret: bool = False) -> jax.Array:
+    """x: (m, d) -> (m, m) squared L2 distances, f32."""
+    m, d = x.shape
+    dp = -(-d // tile_d) * tile_d
+    if dp != d:
+        x = jnp.pad(x, ((0, 0), (0, dp - d)))
+    out = pl.pallas_call(
+        _pairwise_kernel,
+        grid=(dp // tile_d,),
+        in_specs=[pl.BlockSpec((m, tile_d), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((m, m), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, m), jnp.float32),
+        interpret=interpret,
+    )(x)
+    return jnp.maximum(out, 0.0)

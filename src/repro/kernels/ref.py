@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the aggregation kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cwmed_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (m, d) -> (d,) coordinate-wise median (float32)."""
+    return jnp.median(x.astype(jnp.float32), axis=0)
+
+
+def cwtm_ref(x: jnp.ndarray, trim: int) -> jnp.ndarray:
+    """x: (m, d) -> (d,) trimmed mean dropping `trim` lowest/highest."""
+    m = x.shape[0]
+    xs = jnp.sort(x.astype(jnp.float32), axis=0)
+    if trim == 0:
+        return xs.mean(0)
+    return xs[trim:m - trim].mean(0)
+
+
+def pairwise_sqdist_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (m, d) -> (m, m) squared L2 distances (float32)."""
+    x = x.astype(jnp.float32)
+    sq = jnp.sum(x * x, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
+    return jnp.maximum(d2, 0.0)

@@ -1,0 +1,34 @@
+"""Production meshes.
+
+Single pod: 16×16 = 256 chips, axes ("data", "model").
+Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model").
+
+DynaBRO workers = the data-parallel groups: m=16 (single pod) or m=32
+(pod × data combined) — each worker is one model-parallel slice of 16 chips.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def worker_axes(mesh) -> tuple:
+    """The axes across which DynaBRO workers are laid out."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def n_workers(mesh) -> int:
+    n = 1
+    for a in worker_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
+    return jax.make_mesh(shape, axes)

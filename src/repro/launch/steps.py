@@ -1,0 +1,320 @@
+"""Jittable step builders for every (arch × shape) combination.
+
+* ``build_train_step``   — Mode-B DynaBRO robust training step: FSDP params,
+  partial-manual shard_map (manual over worker axes, auto over 'model'),
+  robust-aggregating custom-VJP gathers, simulated Byzantine mask input.
+  MLMC level j is expressed as a 2^j× larger per-worker batch (a mini-batch
+  gradient of 2^j unit batches IS the level-j gradient — see DESIGN.md §3),
+  so the aggregation applies to worker *means* exactly as in Algorithm 2.
+* ``build_prefill_step`` — inference prefill (logits + cache).
+* ``build_decode_step``  — one token against a seq_len KV cache.
+
+Each returns (jitted_fn, example_inputs) where example_inputs are
+ShapeDtypeStructs with NamedShardings — ready for ``.lower().compile()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.sharded import ShardedByzConfig, make_param_hook
+from repro.launch import sharding as shl
+from repro.launch.mesh import worker_axes, n_workers
+from repro.models import init_cache, init_params, loss_fn, decode_step, prefill
+from repro.optim.optimizers import Optimizer, apply_updates, sgd
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _strip_model(spec_tree):
+    """shard_map in_specs may only mention manual (worker) axes."""
+    def strip(s):
+        return P(*[None if e == "model" else e for e in s])
+    return jax.tree.map(strip, spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Any  # jitted callable
+    inputs: Tuple  # ShapeDtypeStruct pytrees (positional)
+    name: str
+
+
+def _perf_cfg(cfg: ModelConfig, mesh: Mesh) -> ModelConfig:
+    """Per-mesh perf knobs (§Perf). Env overrides allow A/B dry-runs:
+    REPRO_ATTN_IMPL=chunked REPRO_MOE_GROUP=0 reproduces the baseline."""
+    ms = mesh.shape["model"]
+    impl = os.environ.get("REPRO_ATTN_IMPL", cfg.attn_impl)
+    seq_shard = ""
+    if impl == "flash" and not (cfg.n_heads % ms == 0 and cfg.n_kv_heads % ms == 0):
+        # heads don't divide the model axis: shard the q-sequence dim instead
+        seq_shard = os.environ.get("REPRO_ATTN_SEQ_SHARD", "model")
+    tg = int(os.environ.get("REPRO_MOE_GROUP", str(cfg.moe_token_group)))
+    es = ""
+    if cfg.is_moe and cfg.n_experts % ms == 0 and impl == "flash":
+        es = os.environ.get("REPRO_MOE_EXPERT_SHARD", "model")
+    return dataclasses.replace(cfg, attn_impl=impl, attn_seq_shard=seq_shard,
+                               moe_token_group=tg, moe_expert_shard=es)
+
+
+# ================================================================ train
+
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                     *, aggregator: str = "cwmed", attack: str = "none",
+                     level: int = 0, lr: float = 1e-3, delta: float = 0.25,
+                     opt: Optional[Optimizer] = None,
+                     dtype=jnp.bfloat16) -> BuiltStep:
+    cfg = _perf_cfg(cfg, mesh)
+    waxes = worker_axes(mesh)
+    m = n_workers(mesh)
+    byz = ShardedByzConfig(axis_names=waxes, m=m, aggregator=aggregator,
+                           delta=delta, attack=attack)
+    specs, plans = shl.plan_params(cfg, mesh, fsdp=True, dtype=dtype)
+    opt = opt or sgd(lr)
+
+    B = shape.global_batch * (2 ** level)
+    S = shape.seq_len
+    wspec = waxes if len(waxes) > 1 else waxes[0]
+
+    def step_local(params, opt_state, batch, maskf):
+        hook = make_param_hook(byz, plans, maskf)
+        loss, g = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg, param_hook=hook))(params)
+        updates, opt_state = opt.update(g, opt_state, params)
+        params = apply_updates(params, updates)
+        loss = jax.lax.pmean(loss, waxes)
+        return params, opt_state, loss
+
+    pspecs_manual = _strip_model(specs)
+    batch_spec = {"tokens": P(wspec, None), "labels": P(wspec, None)}
+    extra_spec = {}
+    if cfg.family == "audio":
+        extra_spec["frames"] = P(wspec, None, None)
+    if cfg.family == "vlm":
+        extra_spec["patches"] = P(wspec, None, None)
+    if extra_spec:
+        batch_spec["extra"] = extra_spec
+
+    opt_state_shapes = jax.eval_shape(
+        lambda: opt.init(shl.abstract_params(cfg, dtype)))
+    opt_specs = _opt_specs(opt_state_shapes, specs)
+
+    smapped = jax.shard_map(
+        step_local, mesh=mesh,
+        in_specs=(pspecs_manual, _strip_model(opt_specs), batch_spec, P(None)),
+        out_specs=(pspecs_manual, _strip_model(opt_specs), P()),
+        axis_names=set(waxes), check_vma=False)
+
+    jitted = jax.jit(
+        smapped,
+        in_shardings=(shl.named(mesh, specs), shl.named(mesh, opt_specs),
+                      shl.named(mesh, batch_spec), NamedSharding(mesh, P(None))),
+        out_shardings=(shl.named(mesh, specs), shl.named(mesh, opt_specs), None),
+        donate_argnums=(0, 1))
+
+    params_in = _sds_tree(shl.abstract_params(cfg, dtype), specs, mesh)
+    opt_in = _sds_tree(opt_state_shapes, opt_specs, mesh)
+    batch = {"tokens": _sds((B, S), jnp.int32, mesh, batch_spec["tokens"]),
+             "labels": _sds((B, S), jnp.int32, mesh, batch_spec["labels"])}
+    if cfg.family == "audio":
+        batch["extra"] = {"frames": _sds((B, cfg.encoder_seq, cfg.d_model), dtype,
+                                         mesh, extra_spec["frames"])}
+    if cfg.family == "vlm":
+        batch["extra"] = {"patches": _sds((B, cfg.n_image_tokens, cfg.d_model), dtype,
+                                          mesh, extra_spec["patches"])}
+    maskf = _sds((m,), jnp.float32, mesh, P(None))
+    return BuiltStep(jitted, (params_in, opt_in, batch, maskf),
+                     f"train[{cfg.arch_id}/{shape.name}/l{level}]")
+
+
+def _opt_specs(opt_state_shapes, param_specs):
+    """Optimizer-state specs: mirror the param specs for param-shaped state
+    (momentum/adam), replicate scalars, empty for stateless SGD."""
+    state = opt_state_shapes
+    if isinstance(state, tuple) and not state:  # sgd
+        return ()
+    if isinstance(state, dict) and set(state) == {"m", "v", "t"}:  # adam
+        return {"m": param_specs, "v": param_specs, "t": P()}
+    pstruct = jax.tree_util.tree_structure(param_specs,
+                                           is_leaf=lambda x: isinstance(x, P))
+    if jax.tree_util.tree_structure(state) == jax.tree_util.tree_structure(
+            jax.tree.map(lambda _: 0, state)):
+        pass
+    try:
+        if jax.tree_util.tree_structure(state) == pstruct:  # momentum
+            return param_specs
+    except Exception:
+        pass
+    return jax.tree.map(lambda _: P(), state)  # adagrad-norm scalar etc.
+
+
+def _sds_tree(shapes, specs, mesh):
+    flat_sh, treedef = jax.tree_util.tree_flatten(shapes)
+    flat_sp = treedef.flatten_up_to(specs)
+    return jax.tree_util.tree_unflatten(
+        treedef, [_sds(a.shape, a.dtype, mesh, s) for a, s in zip(flat_sh, flat_sp)])
+
+
+# ================================================================ inference
+
+
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                       dtype=jnp.bfloat16) -> BuiltStep:
+    cfg = _perf_cfg(cfg, mesh)
+    if shape.global_batch % mesh.shape["data"] == 0:
+        cfg = dataclasses.replace(cfg, attn_batch_shard="data")
+    specs, _ = shl.plan_params(cfg, mesh, fsdp=_infer_fsdp(cfg, mesh), dtype=dtype)
+    B, S = shape.global_batch, shape.seq_len
+    bspec = shl.batch_specs(cfg, mesh, B, "prefill")
+
+    def fn(params, tokens, extra):
+        return prefill(params, tokens, cfg, extra=extra)
+
+    jitted = jax.jit(fn, in_shardings=(shl.named(mesh, specs),
+                                       NamedSharding(mesh, bspec["tokens"]),
+                                       shl.named(mesh, bspec.get("extra", {}))),
+                     out_shardings=None)
+    params_in = _sds_tree(shl.abstract_params(cfg, dtype), specs, mesh)
+    tokens = _sds((B, S), jnp.int32, mesh, bspec["tokens"])
+    extra = {}
+    if cfg.family == "audio":
+        extra = {"frames": _sds((B, cfg.encoder_seq, cfg.d_model), dtype, mesh,
+                                bspec["extra"]["frames"])}
+    if cfg.family == "vlm":
+        extra = {"patches": _sds((B, cfg.n_image_tokens, cfg.d_model), dtype, mesh,
+                                 bspec["extra"]["patches"])}
+    return BuiltStep(jitted, (params_in, tokens, extra),
+                     f"prefill[{cfg.arch_id}/{shape.name}]")
+
+
+def build_decode_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                      dtype=jnp.bfloat16) -> BuiltStep:
+    cfg = _perf_cfg(cfg.for_shape(shape), mesh)
+    specs, _ = shl.plan_params(cfg, mesh, fsdp=_infer_fsdp(cfg, mesh), dtype=dtype)
+    B, S = shape.global_batch, shape.seq_len
+    cache_shapes, cache_specs = shl.cache_spec_tree(cfg, mesh, B, S)
+    tok_spec = P("data") if B % mesh.shape["data"] == 0 else P(None)
+
+    def fn(params, cache, token, pos):
+        return decode_step(params, cache, token, pos, cfg)
+
+    jitted = jax.jit(fn, in_shardings=(shl.named(mesh, specs),
+                                       shl.named(mesh, cache_specs),
+                                       NamedSharding(mesh, tok_spec),
+                                       NamedSharding(mesh, P())),
+                     out_shardings=None,
+                     donate_argnums=(1,))
+    params_in = _sds_tree(shl.abstract_params(cfg, dtype), specs, mesh)
+    cache_in = _sds_tree(cache_shapes, cache_specs, mesh)
+    token = _sds((B,), jnp.int32, mesh, tok_spec)
+    pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
+    return BuiltStep(jitted, (params_in, cache_in, token, pos),
+                     f"decode[{cfg.arch_id}/{shape.name}]")
+
+
+def _infer_fsdp(cfg: ModelConfig, mesh: Mesh) -> bool:
+    """Inference: FSDP the weights too once model-parallel alone would not fit
+    comfortably (~> 4 GB/chip of the 16 GB v5e HBM)."""
+    return cfg.param_count() * 2 / mesh.shape["model"] > 4e9
+
+
+def build_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, **kw) -> BuiltStep:
+    cfg = cfg.for_shape(shape)
+    if shape.kind == "train":
+        return build_train_step(cfg, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, mesh, shape)
+    return build_decode_step(cfg, mesh, shape)
+
+
+# ================================================================ MLMC train
+
+
+def build_mlmc_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                          mlmc_cfg, level: int,
+                          *, aggregator: str = "cwmed", attack: str = "none",
+                          delta: float = 0.25, opt: Optional[Optimizer] = None,
+                          lr: float = 1e-3, dtype=jnp.bfloat16) -> BuiltStep:
+    """Algorithm 2 at MLMC level J=`level` in Mode B.
+
+    One round computes three robust-aggregated gradients from nested slices of
+    a (B·2^J)-sized per-worker batch — levels 0, J−1, J — then applies the
+    MLMC combine guarded by the fail-safe event E_t (Eq. 6). ‖ĝ^J − ĝ^{J−1}‖
+    is a global norm assembled with one scalar psum over the worker axes.
+    """
+    from repro.core.mlmc import mlmc_combine
+    from repro.core.sharded import tree_sq_norm
+
+    waxes = worker_axes(mesh)
+    m = n_workers(mesh)
+    byz = ShardedByzConfig(axis_names=waxes, m=m, aggregator=aggregator,
+                           delta=delta, attack=attack)
+    specs, plans = shl.plan_params(cfg, mesh, fsdp=True, dtype=dtype)
+    plans_full = {k: v for k, v in plans["top"].items()}
+    plans_full["blocks"] = plans["blocks"]
+    opt = opt or sgd(lr)
+    j = level
+    B = shape.global_batch
+    S = shape.seq_len
+    wspec = waxes if len(waxes) > 1 else waxes[0]
+
+    def _slice_batch(batch, n_units):
+        # local (per-worker) batch holds (B/m)·2^j rows; level-n slice = prefix
+        return jax.tree.map(lambda x: x[: x.shape[0] * n_units // (2 ** j)], batch)
+
+    def step_local(params, opt_state, batch, maskf):
+        hook = make_param_hook(byz, plans, maskf)
+
+        def agg_grad(b):
+            return jax.grad(lambda p: loss_fn(p, b, cfg, param_hook=hook))(params)
+
+        g0 = agg_grad(_slice_batch(batch, 1))
+        if j >= 1:
+            gjm1 = agg_grad(_slice_batch(batch, 2 ** (j - 1)))
+            gj = agg_grad(_slice_batch(batch, 2 ** j))
+            diff = jax.tree.map(lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                                gj, gjm1)
+            dn = jnp.sqrt(tree_sq_norm(diff, plans_full, waxes))
+            ok = dn <= mlmc_cfg.threshold(j)
+            scale = jnp.where(ok, 2.0 ** j, 0.0)
+            g = jax.tree.map(lambda a, d: (a.astype(jnp.float32) + scale * d).astype(a.dtype),
+                             g0, diff)
+        else:
+            g, ok, dn = g0, jnp.array(True), jnp.zeros(())
+        updates, opt_state = opt.update(g, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, (jax.lax.pmean(ok.astype(jnp.float32), waxes), dn)
+
+    pspecs_manual = _strip_model(specs)
+    batch_spec = {"tokens": P(wspec, None), "labels": P(wspec, None)}
+    opt_state_shapes = jax.eval_shape(lambda: opt.init(shl.abstract_params(cfg, dtype)))
+    opt_specs = _opt_specs(opt_state_shapes, specs)
+    smapped = jax.shard_map(
+        step_local, mesh=mesh,
+        in_specs=(pspecs_manual, _strip_model(opt_specs), batch_spec, P(None)),
+        out_specs=(pspecs_manual, _strip_model(opt_specs), (P(), P())),
+        axis_names=set(waxes), check_vma=False)
+    jitted = jax.jit(
+        smapped,
+        in_shardings=(shl.named(mesh, specs), shl.named(mesh, opt_specs),
+                      shl.named(mesh, batch_spec), NamedSharding(mesh, P(None))),
+        out_shardings=(shl.named(mesh, specs), shl.named(mesh, opt_specs), None),
+        donate_argnums=(0, 1))
+    Bj = B * (2 ** j)
+    params_in = _sds_tree(shl.abstract_params(cfg, dtype), specs, mesh)
+    opt_in = _sds_tree(opt_state_shapes, opt_specs, mesh)
+    batch = {"tokens": _sds((Bj, S), jnp.int32, mesh, batch_spec["tokens"]),
+             "labels": _sds((Bj, S), jnp.int32, mesh, batch_spec["labels"])}
+    maskf = _sds((m,), jnp.float32, mesh, P(None))
+    return BuiltStep(jitted, (params_in, opt_in, batch, maskf),
+                     f"mlmc_train[{cfg.arch_id}/{shape.name}/J{j}]")

@@ -1,0 +1,10 @@
+from repro.models.transformer import (
+    init_params,
+    forward,
+    loss_fn,
+    init_cache,
+    decode_step,
+    prefill,
+)
+
+__all__ = ["init_params", "forward", "loss_fn", "init_cache", "decode_step", "prefill"]

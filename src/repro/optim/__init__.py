@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (
+    Optimizer, sgd, momentum, adam, adagrad_norm, get_optimizer,
+)
+
+__all__ = ["Optimizer", "sgd", "momentum", "adam", "adagrad_norm", "get_optimizer"]

@@ -1,0 +1,94 @@
+"""Optimizers, including the AdaGrad-Norm rule of Section 5 / Eq. (7):
+
+    η_t = η₀ / sqrt(Σ_{s≤t} ‖g_s‖²)
+
+which adapts to L and (with Option 2's δ-oblivious c_E) to δ.
+Minimal optax-like interface: ``init(params) -> state``,
+``update(grads, state, params) -> (updates, state)``; apply with
+``apply_updates`` (updates are *subtracted*).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+    name: str = ""
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) - u).astype(p.dtype),
+                        params, updates)
+
+
+def _global_norm_sq(tree) -> jax.Array:
+    return sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree))
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(g, state, params=None):
+        return jax.tree.map(lambda x: lr * x.astype(jnp.float32), g), state
+
+    return Optimizer(init, update, "sgd")
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    """Heavy-ball momentum (server-side)."""
+
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(g, state, params=None):
+        m = jax.tree.map(lambda mm, gg: beta * mm + (1 - beta) * gg.astype(jnp.float32),
+                         state, g)
+        return jax.tree.map(lambda mm: lr * mm, m), m
+
+    return Optimizer(init, update, "momentum")
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": z, "v": jax.tree.map(jnp.copy, z), "t": jnp.zeros((), jnp.int32)}
+
+    def update(g, state, params=None):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda mm, gg: b1 * mm + (1 - b1) * gg.astype(jnp.float32),
+                         state["m"], g)
+        v = jax.tree.map(lambda vv, gg: b2 * vv + (1 - b2) * jnp.square(gg.astype(jnp.float32)),
+                         state["v"], g)
+        mh = jax.tree.map(lambda mm: mm / (1 - b1 ** t.astype(jnp.float32)), m)
+        vh = jax.tree.map(lambda vv: vv / (1 - b2 ** t.astype(jnp.float32)), v)
+        upd = jax.tree.map(lambda mm, vv: lr * mm / (jnp.sqrt(vv) + eps), mh, vh)
+        return upd, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update, "adam")
+
+
+def adagrad_norm(eta0: float) -> Optimizer:
+    """AdaGrad-Norm (Eq. 7): single accumulated squared-norm scalar."""
+
+    def init(params):
+        return jnp.zeros((), jnp.float32)
+
+    def update(g, acc, params=None):
+        acc = acc + _global_norm_sq(g)
+        eta = eta0 / jnp.sqrt(jnp.maximum(acc, 1e-12))
+        return jax.tree.map(lambda x: eta * x.astype(jnp.float32), g), acc
+
+    return Optimizer(init, update, "adagrad_norm")
+
+
+def get_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    return {"sgd": sgd, "momentum": momentum, "adam": adam,
+            "adagrad_norm": adagrad_norm}[name](lr, **kw)

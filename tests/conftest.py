@@ -1,0 +1,8 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: no xla_force_host_platform_device_count here — smoke tests must see
+# one device. Multi-device tests (Mode B sharding) run in subprocesses that
+# set their own XLA_FLAGS.

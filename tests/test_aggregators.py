@@ -1,0 +1,154 @@
+"""Property tests for the robust aggregation rules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregators import (
+    CWMed, CWTM, GeoMed, Krum, MFM, Mean, NNM, get_aggregator,
+    pairwise_sqdists, tree_stack_to_mat, mat_to_tree,
+)
+
+AGGS = ["mean", "cwmed", "cwtm", "krum", "geomed", "nnm+cwmed", "nnm+cwtm"]
+ROBUST_AGGS = [a for a in AGGS if a != "mean"]
+
+
+def _mk(m, d, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=(m, d)).astype(np.float32))
+
+
+@pytest.mark.parametrize("name", AGGS)
+def test_agreement_matrix_vs_tree(name):
+    """Tree API must agree with the flat matrix API (global geometry)."""
+    x = _mk(9, 24)
+    agg = get_aggregator(name, delta=0.25)
+    flat = agg(x)
+    tree = {"a": x[:, :10].reshape(9, 2, 5), "b": x[:, 10:]}
+    out = agg.tree(tree)
+    got = jnp.concatenate([out["a"].reshape(-1), out["b"].reshape(-1)])
+    np.testing.assert_allclose(np.asarray(flat), np.asarray(got), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("name", AGGS)
+def test_identical_inputs_fixed_point(name):
+    """A(g, g, ..., g) == g for every rule (consistency)."""
+    g = _mk(1, 33)[0]
+    x = jnp.tile(g[None], (7, 1))
+    agg = get_aggregator(name, delta=0.25)
+    np.testing.assert_allclose(np.asarray(agg(x)), np.asarray(g), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(5, 12), st.integers(1, 30), st.floats(10.0, 1e4),
+       st.integers(0, 10_000))
+@pytest.mark.parametrize("name", ROBUST_AGGS)
+def test_robustness_bounded_by_honest_spread(name, m, d, atk_scale, seed):
+    """Definition 3.2 flavor: with < m/2 outliers at arbitrary magnitude, the
+    aggregation error vs the honest mean stays bounded by the honest spread
+    (it must NOT scale with the attack magnitude)."""
+    rng = np.random.default_rng(seed)
+    n_byz = max(1, int(0.25 * m))  # stay clearly below the 1/2 breakdown point
+    honest = rng.normal(size=(m - n_byz, d))
+    byz = rng.normal(size=(n_byz, d)) * atk_scale + atk_scale
+    x = jnp.asarray(np.concatenate([honest, byz]).astype(np.float32))
+    agg = get_aggregator(name, delta=max(n_byz / m, 0.26))
+    out = np.asarray(agg(x))
+    hm = honest.mean(0)
+    spread = np.sqrt(((honest - hm) ** 2).sum(1)).max() + 1e-6
+    err = np.sqrt(((out - hm) ** 2).sum())
+    assert err <= 6.0 * spread + 1e-3, (name, err, spread)
+
+
+def test_mean_not_robust():
+    """Sanity: the mean IS broken by a single Byzantine (Blanchard et al.)."""
+    x = _mk(8, 4).at[0].set(1e6)
+    assert float(jnp.abs(Mean()(x)).max()) > 1e4
+
+
+def test_cwmed_coordinatewise_median():
+    x = _mk(7, 13)
+    np.testing.assert_allclose(np.asarray(CWMed()(x)),
+                               np.median(np.asarray(x), axis=0), rtol=1e-6)
+
+
+def test_cwtm_trims_extremes():
+    x = _mk(10, 5)
+    x = x.at[0].set(1e9).at[1].set(-1e9)
+    out = np.asarray(CWTM(delta=0.2)(x))
+    assert np.abs(out).max() < 10.0
+
+
+def test_krum_selects_real_input():
+    x = _mk(9, 6)
+    x = x.at[0].set(500.0)
+    out = np.asarray(Krum(delta=0.2)(x))
+    dists = np.abs(np.asarray(x) - out[None]).sum(1)
+    assert dists.min() < 1e-6  # output is one of the inputs
+    assert not np.allclose(out, np.asarray(x[0]))  # and not the Byzantine one
+
+
+def test_geomed_minimizes_distance_sum():
+    x = _mk(9, 4)
+    gm = np.asarray(GeoMed(iters=64)(x))
+    xn = np.asarray(x)
+
+    def cost(z):
+        return np.sqrt(((xn - z[None]) ** 2).sum(1)).sum()
+
+    c = cost(gm)
+    for _ in range(50):  # random perturbations should not improve
+        assert cost(gm + np.random.default_rng(_).normal(size=4) * 0.05) >= c - 1e-3
+
+
+# ---------------------------------------------------------------- MFM
+
+
+def test_mfm_clean_equals_mean_dirty_filtered():
+    rng = np.random.default_rng(3)
+    honest = rng.normal(size=(7, 16)) * 0.1
+    x = jnp.asarray(np.concatenate([honest, honest[:1] + 100.0]).astype(np.float32))
+    out = np.asarray(MFM(tau=2.0)(x))
+    np.testing.assert_allclose(out, honest.mean(0), atol=0.25)
+
+
+def test_mfm_no_majority_outputs_zero():
+    """Algorithm 3: if no vector has a majority within tau/2, output 0."""
+    x = jnp.asarray((np.arange(6)[:, None] * 100.0 * np.ones((6, 3))).astype(np.float32))
+    out = np.asarray(MFM(tau=1.0)(x))
+    np.testing.assert_allclose(out, 0.0)
+
+
+def test_mfm_not_kappa_robust_construction():
+    """Appendix F.1: zero honest variance but nonzero aggregation error."""
+    tau = 4.0
+    d = 8
+    nabla = np.zeros(d, np.float32)
+    honest = np.tile(nabla, (5, 1))
+    v = np.ones(d, np.float32) / np.sqrt(d)
+    byz = np.tile(nabla + 0.75 * tau * v, (3, 1))
+    x = jnp.asarray(np.concatenate([honest, byz]))
+    out = np.asarray(MFM(tau=tau)(x))
+    # honest "variance" is 0, yet the error is strictly positive => not (δ,κ)-robust
+    assert np.linalg.norm(out - nabla) > 0.1
+
+
+# ---------------------------------------------------------------- helpers
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 9), st.integers(1, 40))
+def test_pairwise_matches_numpy(m, d):
+    x = _mk(m, d, seed=m * 100 + d)
+    got = np.asarray(pairwise_sqdists(x))
+    xn = np.asarray(x)
+    want = ((xn[:, None] - xn[None]) ** 2).sum(-1)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_tree_roundtrip():
+    tree = {"w": _mk(4, 6).reshape(4, 2, 3), "b": _mk(4, 2, seed=1)}
+    mat = tree_stack_to_mat(tree)
+    assert mat.shape == (4, 8)
+    back = mat_to_tree(mat[0], tree)
+    np.testing.assert_allclose(np.asarray(back["w"]), np.asarray(tree["w"][0]))

@@ -1,0 +1,105 @@
+"""Attacks (Appendix J) and identity-switching strategies (Section 6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attacks as atk
+from repro.core.switching import Bernoulli, MomentumTailored, Periodic, Static, get_switcher
+
+
+def _stack(m=8, d=5, seed=0):
+    return {"g": jnp.asarray(np.random.default_rng(seed).normal(size=(m, d)).astype(np.float32))}
+
+
+def test_sign_flip():
+    s = _stack()
+    mask = jnp.array([True] + [False] * 7)
+    out = atk.sign_flip(s, mask)
+    np.testing.assert_allclose(np.asarray(out["g"][0]), -np.asarray(s["g"][0]))
+    np.testing.assert_allclose(np.asarray(out["g"][1:]), np.asarray(s["g"][1:]))
+
+
+def test_ipm_sends_scaled_negative_mean():
+    s = _stack()
+    mask = jnp.array([True, True] + [False] * 6)
+    out = atk.ipm(s, mask, eps=0.1)
+    hm = np.asarray(s["g"][2:]).mean(0)
+    np.testing.assert_allclose(np.asarray(out["g"][0]), -0.1 * hm, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(out["g"][1]), -0.1 * hm, rtol=1e-5)
+
+
+def test_alie_within_noise_envelope():
+    s = _stack(m=20, d=3, seed=2)
+    mask = jnp.asarray([True] * 4 + [False] * 16)
+    out = atk.alie(s, mask, z=1.0)
+    h = np.asarray(s["g"][4:])
+    mu, sd = h.mean(0), h.std(0)
+    np.testing.assert_allclose(np.asarray(out["g"][0]), mu - 1.0 * sd, rtol=1e-4, atol=1e-5)
+
+
+def test_attack_registry_none_identity():
+    s = _stack()
+    out = atk.get_attack("none")(s, jnp.ones(8, bool))
+    np.testing.assert_allclose(np.asarray(out["g"]), np.asarray(s["g"]))
+
+
+# ------------------------------------------------------------- switching
+
+
+def test_static_mask_fixed():
+    sw = Static(10, 4, seed=1)
+    m0 = sw.mask(0)
+    assert m0.sum() == 4
+    for t in range(50):
+        assert (sw.mask(t) == m0).all()
+
+
+def test_periodic_switches_every_K():
+    sw = Periodic(17, 8, K=10, seed=0)
+    assert all(sw.mask(t).sum() == 8 for t in range(40))
+    m0, m10 = sw.mask(0), sw.mask(10)
+    assert (sw.mask(9) == m0).all()
+    assert not (m10 == m0).all()  # overwhelmingly likely with 17 choose 8
+    sw2 = Periodic(17, 8, K=10, seed=0)
+    assert (sw2.mask(25) == sw.mask(25)).all()  # deterministic
+
+
+def test_bernoulli_caps_fraction_and_duration():
+    sw = Bernoulli(25, p=0.05, D=10, delta_max=0.48, seed=0)
+    cap = int(0.48 * 25)
+    counts = [sw.mask(t).sum() for t in range(500)]
+    assert max(counts) <= cap
+    assert max(counts) > 0  # attacks do happen
+    # durations: once byzantine, stays for D rounds
+    m = np.stack([sw.mask(t) for t in range(500)])
+    for i in range(25):
+        runs = np.diff(np.flatnonzero(np.diff(m[:, i].astype(int)) != 0))
+        if len(runs) > 2:
+            byz_runs = runs[::2] if m[np.flatnonzero(np.diff(m[:, i].astype(int)))[0] + 1, i] else runs[1::2]
+            assert all(r == 10 for r in byz_runs[:-1])
+            break
+
+
+def test_momentum_tailored_single_worker_rotation():
+    sw = MomentumTailored(3, alpha=0.1)
+    period, third = 10, 3
+    masks = [sw.mask(t) for t in range(30)]
+    assert all(mk.sum() == 1 for mk in masks)
+    # rotates among the three workers, O(sqrt T) switches
+    seen = {tuple(mk) for mk in masks}
+    assert len(seen) == 3
+    assert sw.switch_rounds(300) <= 3 * 0.1 * 300 + 3
+
+
+def test_switch_rounds_counter():
+    sw = Periodic(8, 3, K=25, seed=0)
+    assert sw.switch_rounds(100) <= 4
+
+
+def test_get_switcher_registry():
+    for name, kw in [("static", {"n_byz": 2}), ("periodic", {"n_byz": 2, "K": 5}),
+                     ("bernoulli", {"p": 0.1, "D": 5, "delta_max": 0.5}),
+                     ("momentum_tailored", {"alpha": 0.1})]:
+        sw = get_switcher(name, 8, **kw)
+        assert sw.mask(0).shape == (8,)

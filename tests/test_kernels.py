@@ -1,0 +1,50 @@
+"""Pallas kernel sweeps (interpret mode on CPU) vs the ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import cwmed_op, cwtm_op, pairwise_sqdist_op
+from repro.kernels.ref import cwmed_ref, cwtm_ref, pairwise_sqdist_ref
+
+
+@pytest.mark.parametrize("m", [3, 8, 16, 17, 25, 32])
+@pytest.mark.parametrize("d", [64, 1000, 4096])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cwmed_sweep(m, d, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(m * d), (m, d)) * 3).astype(dtype)
+    got = np.asarray(cwmed_op(x))
+    want = np.asarray(cwmed_ref(x))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,trim", [(8, 0), (8, 2), (16, 4), (17, 5), (32, 8)])
+@pytest.mark.parametrize("d", [50, 2048])
+def test_cwtm_sweep(m, trim, d):
+    x = jax.random.normal(jax.random.PRNGKey(m + trim + d), (m, d))
+    got = np.asarray(cwtm_op(x, trim))
+    want = np.asarray(cwtm_ref(x, trim))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m", [2, 16, 25])
+@pytest.mark.parametrize("d", [128, 3000, 8192])
+def test_pairwise_sweep(m, d):
+    x = jax.random.normal(jax.random.PRNGKey(m * d + 1), (m, d))
+    got = np.asarray(pairwise_sqdist_op(x, tile_d=1024))
+    want = np.asarray(pairwise_sqdist_ref(x))
+    scale = want.max() + 1e-9
+    np.testing.assert_allclose(got / scale, want / scale, atol=2e-6)
+
+
+def test_cwmed_robust_to_inf_magnitude_outlier():
+    x = jax.random.normal(jax.random.PRNGKey(0), (9, 256))
+    x = x.at[0].set(1e30)
+    got = np.asarray(cwmed_op(x))
+    assert np.abs(got).max() < 10
+
+
+def test_cwmed_tile_not_dividing_d():
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 777))
+    np.testing.assert_allclose(np.asarray(cwmed_op(x, tile_d=256)),
+                               np.asarray(cwmed_ref(x)), rtol=1e-5, atol=1e-5)

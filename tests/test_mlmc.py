@@ -1,0 +1,114 @@
+"""MLMC estimator properties (Lemma 3.1) and the fail-safe filter (Eq. 6)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mlmc import (
+    MLMCConfig, expected_cost, mlmc_combine, sample_level, tree_norm, universal_C,
+)
+
+
+def test_sample_level_geometric():
+    rng = np.random.default_rng(0)
+    js = [sample_level(rng, j_max=20) for _ in range(20000)]
+    # P(J=j) = 2^-j
+    for j in (1, 2, 3):
+        frac = np.mean([x == j for x in js])
+        assert abs(frac - 2.0 ** -j) < 0.02
+
+
+def test_expected_cost_logarithmic():
+    """Lemma 3.1(3): E[cost] = 1 + 1.5*J_max <= O(log T)."""
+    rng = np.random.default_rng(1)
+    T = 1024
+    jmax = int(math.log2(T))
+    costs = [expected_cost(min(sample_level(rng, jmax), jmax)) for _ in range(20000)]
+    assert np.mean(costs) < 3.5 * math.log2(T)
+
+
+def _estimate(option, use_failsafe=True, corrupt_level=None, n_trials=4000, seed=0):
+    """Simulate the MLMC combine over a scalar-mean estimation problem where
+    M(x, N) = mean of N noisy samples + bias/sqrt(N) (matching Eq. (2))."""
+    rng = np.random.default_rng(seed)
+    T, m = 256, 8
+    cfg = MLMCConfig(T=T, m=m, V=1.0, option=option, kappa=0.5)
+    true = np.array([1.0, -2.0])
+    outs = []
+    costs = []
+    for _ in range(n_trials):
+        j = min(sample_level(rng, cfg.j_max), cfg.j_max + 1)
+
+        def level(n):
+            # biased mini-batch estimator: MSE ~ c^2/n
+            noise = rng.normal(size=2) / math.sqrt(n)
+            bias = 0.3 / math.sqrt(n)
+            return {"g": jnp.asarray(true + bias + noise, jnp.float32)}
+
+        g0 = level(1)
+        if j <= cfg.j_max:
+            gjm1, gj = level(2 ** (j - 1)), level(2 ** j)
+            if corrupt_level == j:
+                gj = {"g": gj["g"] + 100.0}
+            g, info = mlmc_combine(g0, gjm1, gj, j, cfg)
+        else:
+            g, info = mlmc_combine(g0, None, None, j, cfg)
+        outs.append(np.asarray(g["g"]))
+        costs.append(expected_cost(min(j, cfg.j_max)))
+    outs = np.stack(outs)
+    return outs, true, np.mean(costs), cfg
+
+
+def test_mlmc_reduces_bias():
+    """Lemma 3.1(1): MLMC bias ~ c/sqrt(T) << single-level bias c."""
+    outs, true, _, cfg = _estimate(option=1)
+    mlmc_bias = np.linalg.norm(outs.mean(0) - true)
+    single_bias = 0.3 * math.sqrt(2)  # the N=1 estimator's bias
+    assert mlmc_bias < 0.5 * single_bias, (mlmc_bias, single_bias)
+
+
+def test_mlmc_variance_logarithmic():
+    """Lemma 3.1(2): variance stays O(c^2 log T) (not O(2^J))."""
+    outs, _, _, cfg = _estimate(option=1)
+    var = outs.var(0).sum()
+    assert var < 50 * math.log(cfg.T)
+
+
+def test_mlmc_cost_logarithmic():
+    _, _, cost, cfg = _estimate(option=1, n_trials=2000)
+    assert cost < 4 * math.log2(cfg.T)
+
+
+def test_failsafe_blocks_corruption():
+    """A corrupted high level trips E_t and falls back to ĝ⁰."""
+    outs_fs, true, _, _ = _estimate(option=1, corrupt_level=2, use_failsafe=True,
+                                    n_trials=1500, seed=3)
+    # with the fail-safe, the 100-sized corruption (scaled by 2^j=4) never leaks
+    assert np.abs(outs_fs - true).max() < 50.0
+    # and the mean stays near the truth
+    assert np.linalg.norm(outs_fs.mean(0) - true) < 1.0
+
+
+def test_failsafe_threshold_monotone_in_level():
+    cfg = MLMCConfig(T=1024, m=16, V=2.0, option=1, kappa=0.3)
+    th = [float(cfg.threshold(j)) for j in range(1, 8)]
+    assert all(a > b for a, b in zip(th, th[1:]))  # ~ 2^{-j/2}
+    np.testing.assert_allclose(th[0] / th[2], 2.0, rtol=1e-5)
+
+
+def test_option2_threshold_is_delta_oblivious():
+    a = MLMCConfig(T=64, m=8, V=1.0, option=2, kappa=0.1)
+    b = MLMCConfig(T=64, m=8, V=1.0, option=2, kappa=9.0)
+    assert float(a.threshold(3)) == float(b.threshold(3))
+
+
+def test_universal_constant():
+    # C = sqrt(8 log(16 m^2 T))
+    assert abs(universal_C(17, 5000) - math.sqrt(8 * math.log(16 * 17 * 17 * 5000))) < 1e-9
+
+
+def test_tree_norm():
+    t = {"a": jnp.ones((3,)), "b": jnp.full((4,), 2.0)}
+    np.testing.assert_allclose(float(tree_norm(t)), math.sqrt(3 + 16), rtol=1e-6)

@@ -1,0 +1,296 @@
+"""Per-architecture smoke tests (reduced configs) + layer unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, reduced
+from repro.models import decode_step, init_cache, init_params, loss_fn, prefill
+from repro.models.layers import chunked_attention, decode_attention, rms_norm
+from repro.models.moe import moe_ffn
+from repro.models.ssm import selective_scan, selective_step
+from repro.models.transformer import forward
+
+
+def _batch(cfg, key, B=2, S=16):
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    if cfg.family == "audio":
+        batch["extra"] = {"frames": 0.1 * jax.random.normal(
+            key, (B, cfg.encoder_seq, cfg.d_model))}
+    if cfg.family == "vlm":
+        batch["extra"] = {"patches": 0.1 * jax.random.normal(
+            key, (B, cfg.n_image_tokens, cfg.d_model))}
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """Reduced variant (<=2-group depth, d<=512, <=4 experts): one forward +
+    one SGD step on CPU; asserts shapes and finiteness."""
+    cfg = reduced(get_config(arch))
+    assert cfg.d_model <= 512 and (not cfg.is_moe or cfg.n_experts <= 4)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    batch = _batch(cfg, key)
+    logits, aux = forward(params, batch["tokens"], cfg, extra=batch.get("extra"))
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    loss, g = jax.value_and_grad(loss_fn)(params, batch, cfg)
+    assert bool(jnp.isfinite(loss))
+    gn = sum(float(jnp.sum(jnp.abs(l))) for l in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0
+    p2 = jax.tree.map(lambda p, gg: p - 0.01 * gg, params, g)
+    l2 = loss_fn(p2, batch, cfg)
+    assert bool(jnp.isfinite(l2))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_decode_matches_forward(arch):
+    """prefill + decode_step reproduces the full-forward logits exactly."""
+    cfg = reduced(get_config(arch))
+    key = jax.random.PRNGKey(1)
+    params = init_params(cfg, key)
+    B, S = 2, 9
+    batch = _batch(cfg, key, B=B, S=S + 1)
+    toks = batch["tokens"]
+    full, _ = forward(params, toks, cfg, extra=batch.get("extra"), remat=False)
+    _, cache = prefill(params, toks[:, :S], cfg, extra=batch.get("extra"),
+                       pad_to=S + 4)
+    got, _ = decode_step(params, cache, toks[:, S], jnp.int32(S), cfg)
+    want = full[:, S]
+    rel = float(jnp.max(jnp.abs(want - got))) / (float(jnp.max(jnp.abs(want))) + 1e-9)
+    assert rel < 5e-3, rel
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_init_cache_structure(arch):
+    cfg = reduced(get_config(arch)).for_shape(SHAPES["decode_32k"])
+    cache = init_cache(cfg, 2, 64)
+    for leaf in jax.tree.leaves(cache):
+        assert leaf.shape[0] == cfg.n_groups
+
+
+# ---------------------------------------------------------------- attention
+
+
+def _naive_attention(q, k, v, causal=True, window=0):
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qh = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qh, k) / (hd ** 0.5)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p, v)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 2), st.sampled_from([(4, 2), (6, 3), (8, 8)]),
+       st.sampled_from([7, 16, 33]), st.booleans(), st.sampled_from([0, 8]))
+def test_chunked_attention_matches_naive(B, heads, S, causal, window):
+    H, KV = heads
+    hd = 8
+    key = jax.random.PRNGKey(B * 1000 + S)
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd))
+    got = chunked_attention(q, k, v, causal=causal, window=window,
+                            q_chunk=8, kv_chunk=8)
+    want = _naive_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attention_matches_naive_last_row():
+    key = jax.random.PRNGKey(7)
+    B, S, H, KV, hd = 2, 12, 6, 3, 8
+    q = jax.random.normal(key, (B, 1, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd))
+    got = decode_attention(q, k, v)
+    qf = jnp.broadcast_to(q, (B, 1, H, hd))
+    want = _naive_attention(qf, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------- mamba
+
+
+def test_selective_scan_matches_stepwise():
+    """Chunked associative scan == sequential single-step recurrence."""
+    key = jax.random.PRNGKey(3)
+    Bt, L, di, ds = 2, 13, 4, 3
+    x = jax.random.normal(key, (Bt, L, di))
+    delta = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1), (Bt, L, di)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (di, ds)))
+    B = jax.random.normal(jax.random.fold_in(key, 3), (Bt, L, ds))
+    C = jax.random.normal(jax.random.fold_in(key, 4), (Bt, L, ds))
+    D = jnp.ones((di,))
+    y, h = selective_scan(x, delta, A, B, C, D, chunk=4)
+    hs = jnp.zeros((Bt, di, ds))
+    ys = []
+    for t in range(L):
+        yt, hs = selective_step(x[:, t], delta[:, t], A, B[:, t], C[:, t], D, hs)
+        ys.append(yt)
+    want = jnp.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hs), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- MoE
+
+
+def test_moe_capacity_and_combine_weights():
+    key = jax.random.PRNGKey(5)
+    B, S, D, E, F = 2, 8, 16, 4, 32
+    x = jax.random.normal(key, (B, S, D))
+    p = {
+        "router": jax.random.normal(jax.random.fold_in(key, 1), (D, E)),
+        "we1": jax.random.normal(jax.random.fold_in(key, 2), (E, D, F)) * 0.1,
+        "we3": jax.random.normal(jax.random.fold_in(key, 3), (E, D, F)) * 0.1,
+        "we2": jax.random.normal(jax.random.fold_in(key, 4), (E, F, D)) * 0.1,
+    }
+    out, aux = moe_ffn(x, p, top_k=2, capacity_factor=2.0)
+    assert out.shape == (B, S, D)
+    assert bool(jnp.isfinite(out).all()) and bool(jnp.isfinite(aux))
+    assert float(aux) > 0.5  # load-balance loss ~ E * sum(p_e * f_e) >= 1 at balance
+
+
+def test_moe_dropped_tokens_with_tiny_capacity():
+    """capacity_factor -> tiny: most tokens dropped, output ~ 0 for them."""
+    key = jax.random.PRNGKey(6)
+    x = jax.random.normal(key, (1, 32, 8))
+    p = {
+        "router": jnp.zeros((8, 2)).at[0, 0].set(10.0),  # everyone -> expert 0
+        "we1": jnp.ones((2, 8, 4)) * 0.1,
+        "we3": jnp.ones((2, 8, 4)) * 0.1,
+        "we2": jnp.ones((2, 4, 8)) * 0.1,
+    }
+    out, _ = moe_ffn(x, p, top_k=1, capacity_factor=0.1)
+    # capacity = 32*1*0.1/2 = 1 -> at most 1 token per expert served
+    nz = jnp.sum(jnp.any(jnp.abs(out[0]) > 1e-7, axis=-1))
+    assert int(nz) <= 2
+
+
+# ---------------------------------------------------------------- misc
+
+
+def test_rms_norm_unit_scale():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 10
+    y = rms_norm(x, jnp.ones(64))
+    rms = jnp.sqrt(jnp.mean(y * y, axis=-1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, atol=1e-2)
+
+
+def test_sliding_window_config_swap():
+    cfg = get_config("qwen2.5-32b")
+    assert cfg.sliding_window == 0
+    c2 = cfg.for_shape(SHAPES["long_500k"])
+    assert c2.sliding_window == 8192
+    assert cfg.for_shape(SHAPES["decode_32k"]).sliding_window == 0
+
+
+def test_whisper_skips_long500k():
+    cfg = get_config("whisper-base")
+    assert not cfg.supports_shape(SHAPES["long_500k"])
+    assert cfg.supports_shape(SHAPES["decode_32k"])
+
+
+def test_param_counts_match_names():
+    for arch, lo, hi in [("jamba-1.5-large-398b", 380e9, 410e9),
+                         ("arctic-480b", 460e9, 500e9),
+                         ("qwen2.5-32b", 30e9, 35e9),
+                         ("smollm-360m", 0.3e9, 0.5e9),
+                         ("rwkv6-1.6b", 1.3e9, 1.8e9)]:
+        n = get_config(arch).param_count()
+        assert lo < n < hi, (arch, n)
+
+
+# ---------------------------------------------------------------- flash
+
+
+def test_flash_attention_matches_chunked_oracle():
+    """flash custom-VJP (fwd+bwd) vs the pure scan oracle across GQA shapes."""
+    from repro.models.flash import flash_attention
+    key = jax.random.PRNGKey(11)
+    for (B, S, H, KV, hd, causal, window) in [
+            (2, 33, 6, 3, 8, True, 0), (1, 16, 4, 4, 8, False, 0),
+            (2, 40, 8, 2, 16, True, 8), (1, 64, 2, 1, 4, True, 0)]:
+        q = jax.random.normal(key, (B, S, H, hd))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd))
+        f = lambda q, k, v: flash_attention(q, k, v, causal, window, 0, 8, "")
+        r = lambda q, k, v: chunked_attention(q, k, v, causal=causal,
+                                              window=window, q_chunk=8, kv_chunk=8)
+        np.testing.assert_allclose(np.asarray(f(q, k, v)), np.asarray(r(q, k, v)),
+                                   rtol=2e-4, atol=2e-4)
+        gf = jax.grad(lambda *a: jnp.sum(jnp.sin(f(*a))), argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(lambda *a: jnp.sum(jnp.sin(r(*a))), argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(gf, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=2e-4)
+
+
+def test_selective_scan_remat_grads_match_oracle():
+    """Mamba remat (§Perf it.4) must not change gradients."""
+    key = jax.random.PRNGKey(4)
+    Bt, L, di, ds = 1, 11, 3, 2
+    x = jax.random.normal(key, (Bt, L, di))
+    delta = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1), (Bt, L, di)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (di, ds)))
+    B = jax.random.normal(jax.random.fold_in(key, 3), (Bt, L, ds))
+    C = jax.random.normal(jax.random.fold_in(key, 4), (Bt, L, ds))
+    D = jnp.ones((di,))
+
+    def loss_scan(x):
+        y, _ = selective_scan(x, delta, A, B, C, D, chunk=4)
+        return jnp.sum(jnp.tanh(y))
+
+    def loss_steps(x):
+        hs = jnp.zeros((Bt, di, ds))
+        tot = 0.0
+        for t in range(L):
+            yt, hs = selective_step(x[:, t], delta[:, t], A, B[:, t], C[:, t], D, hs)
+            tot = tot + jnp.sum(jnp.tanh(yt))
+        return tot
+
+    g1 = jax.grad(loss_scan)(x)
+    g2 = jax.grad(loss_steps)(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "rwkv6-1.6b", "jamba-1.5-large-398b"])
+def test_greedy_generation_matches_full_forward(arch):
+    """Multi-step decode: greedy generation with the cache must equal greedy
+    generation by repeated full forwards (end-to-end serving correctness)."""
+    cfg = reduced(get_config(arch))
+    key = jax.random.PRNGKey(9)
+    params = init_params(cfg, key)
+    B, S, n_new = 2, 7, 4
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+
+    # reference: repeated full forward
+    ref = toks
+    for _ in range(n_new):
+        logits, _ = forward(params, ref, cfg, remat=False)
+        ref = jnp.concatenate([ref, jnp.argmax(logits[:, -1:], -1)], axis=1)
+
+    # cached path
+    logits, cache = prefill(params, toks, cfg, pad_to=S + n_new + 1)
+    cur = jnp.argmax(logits, -1)
+    got = [cur]
+    for i in range(n_new - 1):
+        logits, cache = decode_step(params, cache, cur, jnp.int32(S + i), cfg)
+        cur = jnp.argmax(logits, -1)
+        got.append(cur)
+    got = jnp.stack(got, 1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref[:, S:]))

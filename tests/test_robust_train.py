@@ -1,0 +1,136 @@
+"""End-to-end Mode A training behaviour: the paper's core claims at test scale.
+
+Problem: 2D quadratic f(x) = 0.5 xᵀAx (Appendix E's setup) — exact optimum 0.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mlmc import MLMCConfig
+from repro.core.robust_train import (
+    DynaBROConfig, make_dynabro_step, run_dynabro, run_momentum,
+)
+from repro.core.switching import get_switcher
+from repro.optim.optimizers import adagrad_norm, sgd
+
+A = jnp.array([[2.0, 1.0], [1.0, 2.0]])
+SIGMA = 0.5
+
+
+def grad_fn(params, unit_key):
+    return {"x": A @ params["x"] + SIGMA * jax.random.normal(unit_key, (2,))}
+
+
+def sampler(m, seed=0):
+    def sample(t, n):
+        keys = jax.random.split(
+            jax.random.fold_in(jax.random.PRNGKey(seed), t), m * n)
+        return keys.reshape(m, n, *keys.shape[1:])
+    return sample
+
+
+def f_val(p):
+    return float(0.5 * p["x"] @ A @ p["x"])
+
+
+P0 = {"x": jnp.array([3.0, -2.0])}
+
+
+def _cfg(agg="cwmed", attack="sign_flip", m=9, T=300, option=1, delta=0.25, **akw):
+    return DynaBROConfig(
+        mlmc=MLMCConfig(T=T, m=m, V=4 * SIGMA + 1, option=option, kappa=1.0),
+        aggregator=agg, delta=delta, attack=attack, attack_kwargs=akw or None)
+
+
+def test_dynabro_converges_under_static_signflip():
+    m, T = 9, 300
+    sw = get_switcher("static", m, n_byz=4)
+    p, logs, _ = run_dynabro(grad_fn, P0, sgd(2e-2), _cfg(m=m, T=T), sw,
+                             sampler(m), T)
+    assert f_val(p) < 0.1 * f_val(P0)
+    assert {l.level for l in logs} >= {1, 2}  # geometric levels exercised
+
+
+def test_dynabro_converges_under_periodic_switching():
+    """Fig. 1's qualitative claim: stability across switching rates K."""
+    m, T = 9, 300
+    finals = []
+    for K in (5, 50):
+        sw = get_switcher("periodic", m, n_byz=4, K=K)
+        p, _, _ = run_dynabro(grad_fn, P0, sgd(2e-2),
+                              _cfg(agg="cwtm", m=m, T=T, delta=4 / 9 + 0.01),
+                              sw, sampler(m), T)
+        finals.append(f_val(p))
+    assert max(finals) < 0.15 * f_val(P0)
+    # stability: fast switching is not catastrophically worse
+    assert finals[0] < 10 * max(finals[1], 1e-3)
+
+
+def test_mean_aggregation_fails_where_cwmed_survives():
+    m, T = 9, 200
+    sw = get_switcher("static", m, n_byz=4)
+    cfg_mean = _cfg(agg="mean", attack="sign_flip", m=m, T=T)
+    cfg_med = _cfg(agg="cwmed", attack="sign_flip", m=m, T=T)
+    p_mean, _, _ = run_dynabro(grad_fn, P0, sgd(2e-2), cfg_mean, sw, sampler(m), T)
+    p_med, _, _ = run_dynabro(grad_fn, P0, sgd(2e-2), cfg_med, sw, sampler(m), T)
+    assert f_val(p_med) < f_val(p_mean)
+
+
+def test_momentum_breaks_under_tailored_dynamic_attack():
+    """Appendix E: the dynamic attack defeats worker-momentum while DynaBRO
+    (MLMC + fail-safe) keeps converging under the same switch budget."""
+    m, T = 3, 600
+    sw = get_switcher("momentum_tailored", m, alpha=0.05)
+    cfg = _cfg(agg="cwmed", attack="shift", m=m, T=T, v=3.0)
+    p_mom, _ = run_momentum(grad_fn, P0, cfg, sw, sampler(m), T,
+                            lr=2e-2, beta=0.95)
+    p_dyn, _, _ = run_dynabro(grad_fn, P0, sgd(2e-2), cfg, sw, sampler(m), T)
+    assert f_val(p_dyn) < f_val(p_mom), (f_val(p_dyn), f_val(p_mom))
+
+
+def test_adagrad_norm_needs_no_smoothness_knowledge():
+    """Section 5: Option 2 (MFM) + AdaGrad-Norm converges without L or δ."""
+    m, T = 9, 300
+    sw = get_switcher("static", m, n_byz=3)
+    cfg = _cfg(agg="mfm", attack="sign_flip", m=m, T=T, option=2)
+    p, logs, _ = run_dynabro(grad_fn, P0, adagrad_norm(1.0), cfg, sw,
+                             sampler(m), T)
+    assert f_val(p) < 0.2 * f_val(P0)
+
+
+def test_failsafe_fires_on_within_round_switches():
+    """Dynamic rounds (Section 4): identities flipping *within* a round can
+    corrupt the high MLMC levels; the fail-safe must bound the damage."""
+    m, T = 8, 60
+
+    class WithinRound:
+        m = 8
+
+        def mask(self, t):
+            return np.zeros(8, bool)
+
+        def within_round(self, t, k):
+            mk = np.zeros(8, bool)
+            if k % 2 == 1:  # half the computations are Byzantine for 4 workers
+                mk[:4] = True
+            return mk
+
+    cfg = _cfg(agg="cwmed", attack="shift", m=m, T=T, v=200.0)
+    p, logs, _ = run_dynabro(grad_fn, P0, sgd(1e-2), cfg, WithinRound(),
+                             sampler(m), T, seed=5)
+    trips = [l for l in logs if l.level >= 1 and not l.failsafe_ok]
+    assert trips, "fail-safe never fired under within-round corruption"
+    assert np.isfinite(f_val(p)) and f_val(p) < 100.0
+
+
+def test_step_is_jittable_and_deterministic():
+    m = 5
+    cfg = _cfg(m=m, T=64)
+    step = make_dynabro_step(grad_fn, cfg, sgd(1e-2))
+    batches = sampler(m)(0, 2)
+    masks = jnp.zeros((2, m), bool)
+    key = jax.random.PRNGKey(0)
+    p1, _, _ = step(P0, (), batches, masks, key, 1)
+    p2, _, _ = step(P0, (), batches, masks, key, 1)
+    np.testing.assert_allclose(np.asarray(p1["x"]), np.asarray(p2["x"]))

@@ -1,0 +1,106 @@
+"""Substrate: optimizers, data pipeline, checkpointing, config registry."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs import ARCH_IDS, SHAPES, get_config, reduced
+from repro.data import SyntheticLMData, gaussian_mixture_dataset
+from repro.optim.optimizers import adagrad_norm, adam, apply_updates, momentum, sgd
+
+
+def test_sgd_step():
+    opt = sgd(0.5)
+    p = {"w": jnp.array([2.0])}
+    g = {"w": jnp.array([1.0])}
+    u, _ = opt.update(g, opt.init(p))
+    p2 = apply_updates(p, u)
+    np.testing.assert_allclose(np.asarray(p2["w"]), [1.5])
+
+
+def test_momentum_accumulates():
+    opt = momentum(1.0, beta=0.5)
+    p = {"w": jnp.zeros(1)}
+    s = opt.init(p)
+    g = {"w": jnp.ones(1)}
+    u1, s = opt.update(g, s)
+    u2, s = opt.update(g, s)
+    assert float(u2["w"][0]) > float(u1["w"][0])  # momentum builds up
+
+
+def test_adam_bias_correction_first_step():
+    opt = adam(1e-1)
+    p = {"w": jnp.zeros(3)}
+    s = opt.init(p)
+    u, s = opt.update({"w": jnp.full(3, 0.5)}, s)
+    np.testing.assert_allclose(np.asarray(u["w"]), 0.1, rtol=1e-3)
+
+
+def test_adagrad_norm_monotone_lr():
+    """Eq. (7): effective lr is non-increasing; scale-free in eta0."""
+    opt = adagrad_norm(1.0)
+    p = {"w": jnp.zeros(2)}
+    acc = opt.init(p)
+    g = {"w": jnp.ones(2)}
+    norms = []
+    for _ in range(5):
+        u, acc = opt.update(g, acc)
+        norms.append(float(jnp.linalg.norm(u["w"])))
+    assert all(a >= b for a, b in zip(norms, norms[1:]))
+    np.testing.assert_allclose(norms[0], 1.0 / np.sqrt(2) * np.sqrt(2), rtol=1e-4)
+
+
+def test_synthetic_lm_deterministic_and_sharded():
+    ds = SyntheticLMData(vocab_size=100, seq_len=16, global_batch=8, seed=3)
+    b1, b2 = ds.batch(5), ds.batch(5)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    assert not np.array_equal(np.asarray(ds.batch(6)["tokens"]), np.asarray(b1["tokens"]))
+    w0 = ds.worker_batch(5, 0, 4)
+    w1 = ds.worker_batch(5, 1, 4)
+    assert not np.array_equal(np.asarray(w0["tokens"]), np.asarray(w1["tokens"]))
+    assert int(b1["tokens"].max()) < 100
+    np.testing.assert_array_equal(np.asarray(b1["labels"][:, :-1]),
+                                  np.asarray(b1["tokens"][:, 1:]))
+
+
+def test_gaussian_mixture_learnable():
+    X, y = gaussian_mixture_dataset(4, 8, 2000, seed=0, noise=0.3)
+    # nearest-mean classifier should beat chance by a lot
+    means = np.stack([X[y == c].mean(0) for c in range(4)])
+    pred = ((X[:, None] - means[None]) ** 2).sum(-1).argmin(1)
+    assert (pred == y).mean() > 0.9
+
+
+def test_checkpoint_roundtrip():
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)},
+            "d": [jnp.zeros((2,)), jnp.full((1,), 7.0)]}
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "ckpt")
+        save_checkpoint(path, tree, step=11)
+        back = load_checkpoint(path, tree)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            assert a.dtype == b.dtype
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32))
+
+
+def test_config_registry_complete():
+    assert len(ARCH_IDS) == 10
+    fams = {get_config(a).family for a in ARCH_IDS}
+    assert fams == {"dense", "moe", "hybrid", "ssm", "audio", "vlm"}
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    assert SHAPES["long_500k"].seq_len == 524_288
+
+
+def test_reduced_configs_small():
+    for a in ARCH_IDS:
+        c = reduced(get_config(a))
+        assert c.d_model <= 512
+        assert c.n_layers <= max(8, c.group_size)
+        if c.is_moe:
+            assert c.n_experts <= 4
