@@ -1,7 +1,9 @@
 """Aggregator micro-benchmarks: Pallas kernels (interpret mode on CPU;
-compiled on TPU) vs the pure-jnp references, plus the full tree aggregators
-on a model-sized gradient stack. On-CPU numbers are correctness-path timings;
-the derived column reports bytes processed per call."""
+compiled on TPU) vs the pure-jnp references, plus the full engine rules on a
+model-sized gradient stack, per backend. On-CPU numbers are correctness-path
+timings; the derived column reports bytes processed per call. Each ref/pallas
+pair is asserted numerically equal before it is timed, so a kernel regression
+fails the benchmark instead of silently reporting a fast wrong answer."""
 from __future__ import annotations
 
 import jax
@@ -10,32 +12,69 @@ import numpy as np
 
 from benchmarks._clf import timed
 from repro.core.aggregators import get_aggregator
-from repro.kernels.ops import cwmed_op, cwtm_op, pairwise_sqdist_op
-from repro.kernels.ref import cwmed_ref, cwtm_ref, pairwise_sqdist_ref
+from repro.kernels.ops import (cwmed_op, cwtm_op, pairwise_sqdist_op,
+                               weighted_combine_op)
+from repro.kernels.ref import (cwmed_ref, cwtm_ref, pairwise_sqdist_ref,
+                               weighted_combine_ref)
+
+TREE_RULES = ("mean", "cwmed", "cwtm", "krum", "geomed", "nnm+cwmed")
+
+
+def _assert_close(a, b, name, tol=2e-4):
+    a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+    scale = np.abs(b).max() + 1e-9
+    err = np.abs(a - b).max() / scale
+    assert err < tol, f"ref/pallas parity broke for {name}: rel err {err:.2e}"
+
+
+def _model_stack(m):
+    """Model-shaped gradient pytree, ~4.3M params per worker."""
+    return {
+        "embed": jax.random.normal(jax.random.PRNGKey(1), (m, 4096, 512)),
+        "blocks": {
+            "wqkv": jax.random.normal(jax.random.PRNGKey(2), (m, 2, 512, 1536)),
+            "norm": jax.random.normal(jax.random.PRNGKey(3), (m, 2, 512)),
+        },
+        "head": jax.random.normal(jax.random.PRNGKey(4), (m, 512, 1024)),
+    }
 
 
 def main(fast: bool = False):
     out = []
     m, d = 16, (1 << 16 if fast else 1 << 20)
     x = jax.random.normal(jax.random.PRNGKey(0), (m, d), jnp.float32)
+    w = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(5), (1, m)))
     mb = m * d * 4 / 1e6
-    for name, fn in [("cwmed_kernel", lambda: cwmed_op(x)),
-                     ("cwmed_ref", lambda: jax.jit(cwmed_ref)(x)),
-                     ("cwtm_kernel", lambda: cwtm_op(x, 4)),
-                     ("cwtm_ref", lambda: jax.jit(lambda a: cwtm_ref(a, 4))(x)),
-                     ("pairwise_kernel", lambda: pairwise_sqdist_op(x)),
-                     ("pairwise_ref", lambda: jax.jit(pairwise_sqdist_ref)(x))]:
-        _, us = timed(fn, iters=2 if "kernel" in name else 5)
-        out.append(f"aggregators/{name},{us:.0f},MB_in={mb:.1f}")
-    # tree aggregators on a gradient-like pytree
-    tree = {"w1": jax.random.normal(jax.random.PRNGKey(1), (m, 256, 256)),
-            "w2": jax.random.normal(jax.random.PRNGKey(2), (m, 256, 64)),
-            "b": jax.random.normal(jax.random.PRNGKey(3), (m, 256))}
-    for name in ("cwmed", "cwtm", "krum", "geomed", "nnm+cwmed"):
-        agg = get_aggregator(name, delta=0.25)
-        f = jax.jit(agg.tree)
-        _, us = timed(f, tree, iters=5)
-        out.append(f"aggregators/tree_{name},{us:.0f},leaves=3;m={m}")
+    kernel_pairs = [
+        ("cwmed", lambda: cwmed_op(x), lambda: jax.jit(cwmed_ref)(x)),
+        ("cwtm", lambda: cwtm_op(x, 4), lambda: jax.jit(lambda a: cwtm_ref(a, 4))(x)),
+        ("pairwise", lambda: pairwise_sqdist_op(x),
+         lambda: jax.jit(pairwise_sqdist_ref)(x)),
+        ("combine", lambda: weighted_combine_op(x, w),
+         lambda: jax.jit(weighted_combine_ref)(x, w)),
+    ]
+    for name, kfn, rfn in kernel_pairs:
+        _assert_close(kfn(), rfn(), name)
+        _, kus = timed(kfn, iters=2)
+        _, rus = timed(rfn, iters=5)
+        out.append(f"aggregators/{name}_kernel,{kus:.0f},MB_in={mb:.1f}")
+        out.append(f"aggregators/{name}_ref,{rus:.0f},MB_in={mb:.1f}")
+    # engine rules on a model-sized gradient stack, per backend
+    mt = 4 if fast else 16
+    tree = _model_stack(mt)
+    nbytes = sum(l.size * 4 for l in jax.tree.leaves(tree)) / 1e6
+    for name in TREE_RULES:
+        results = {}
+        for backend in ("ref",) if fast else ("ref", "pallas"):
+            agg = get_aggregator(name, delta=0.25, backend=backend)
+            f = jax.jit(agg.tree)
+            results[backend], us = timed(f, tree, iters=2)
+            out.append(f"aggregators/tree_{name}_{backend},{us:.0f},"
+                       f"MB_in={nbytes:.0f};m={mt}")
+        if "pallas" in results:
+            for rl, pl in zip(jax.tree.leaves(results["ref"]),
+                              jax.tree.leaves(results["pallas"])):
+                _assert_close(pl, rl, f"tree_{name}")
     return out
 
 

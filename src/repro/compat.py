@@ -1,0 +1,12 @@
+"""Single source of truth for legacy-jax detection.
+
+``jax.shard_map`` appeared in the same release window in which XLA learned to
+lower collectives, ``axis_index``, while loops and gather/scatter inside a
+*partial*-manual shard_map region — so its absence is the proxy every
+legacy-path workaround keys on (DESIGN.md §3). Keep the predicate here:
+mixing legacy and new-path code (e.g. unrolled scans without psum-emulated
+gathers) reintroduces the partial-manual compile crashes piecemeal.
+"""
+import jax
+
+LEGACY_PARTIAL_MANUAL = not hasattr(jax, "shard_map")

@@ -1,0 +1,239 @@
+"""Backend-dispatching aggregation engine (DESIGN.md §4).
+
+Every robust aggregation rule in this repo — Mean / CWMed / CWTM / Krum /
+GeoMed / NNM / MFM — decomposes into three primitives:
+
+  1. **coordinate-wise reduce**: ``(m, d) -> (d,)`` median / trimmed mean,
+  2. **pairwise-distance accumulate**: per-leaf ``(m, d)`` contributions
+     summed into global ``(m, m)`` (or ``(m, k)`` cross) squared distances,
+  3. **weighted-combine**: ``(k, m) @ (m, d) -> (k, d)`` applied per leaf.
+
+Each primitive has two backends: ``ref`` (pure jnp) and ``pallas`` (the
+kernels under ``repro.kernels``, interpret-mode on CPU, compiled on TPU).
+``backend="auto"`` picks per platform: pallas on TPU, ref elsewhere.
+
+The crucial consequence for gradient pytrees: only the ``(m, m)`` distance
+statistics are global.  Rules therefore *stream leaf by leaf* through the
+primitives — pairwise distances sum per-leaf contributions and the combine is
+per-leaf too — so no rule ever materializes the full ``(m, d_total)`` float32
+matrix that ``tree_stack_to_mat`` used to build.
+
+Both training modes dispatch here: Mode A (`core.robust_train`) through
+``get_aggregator(...).tree``, Mode B (`core.sharded`) through
+``get_aggregator(...).leaf`` on its post-all-to-all ``(m, shard)`` stacks.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+Tree = object
+
+BACKENDS = ("ref", "pallas")
+
+
+def resolve_backend(backend: str) -> str:
+    """'auto' -> 'pallas' on TPU (compiled), 'ref' elsewhere. Explicit
+    'pallas' off-TPU runs the same kernel bodies in interpret mode."""
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; want one of "
+                         f"{BACKENDS + ('auto',)}")
+    return backend
+
+
+# ============================================================ primitives
+#
+# All matrix primitives take x: (m, d) and return float32.
+
+
+def cw_mean(x: jax.Array, *, backend: str = "auto") -> jax.Array:
+    """(m, d) -> (d,) mean. Pallas path: uniform-weight combine kernel."""
+    if resolve_backend(backend) == "pallas":
+        m = x.shape[0]
+        w = jnp.full((1, m), 1.0 / m, jnp.float32)
+        return kops.weighted_combine_op(x, w)[0]
+    return jnp.mean(x.astype(jnp.float32), axis=0)
+
+
+def cw_median(x: jax.Array, *, backend: str = "auto") -> jax.Array:
+    """(m, d) -> (d,) coordinate-wise median."""
+    if resolve_backend(backend) == "pallas":
+        return kops.cwmed_op(x)
+    return kref.cwmed_ref(x)
+
+
+def cw_trimmed_mean(x: jax.Array, trim: int, *, backend: str = "auto") -> jax.Array:
+    """(m, d) -> (d,) mean after dropping `trim` lowest/highest per coord."""
+    if trim == 0:
+        return cw_mean(x, backend=backend)
+    if resolve_backend(backend) == "pallas":
+        return kops.cwtm_op(x, trim)
+    return kref.cwtm_ref(x, trim)
+
+
+def pairwise_sqdist(x: jax.Array, *, backend: str = "auto") -> jax.Array:
+    """(m, d) -> (m, m) squared L2 distances."""
+    if resolve_backend(backend) == "pallas":
+        return kops.pairwise_sqdist_op(x)
+    return kref.pairwise_sqdist_ref(x)
+
+
+def cross_sqdist(x: jax.Array, y: jax.Array, *, backend: str = "auto") -> jax.Array:
+    """(m, d), (k, d) -> (m, k) squared L2 distances."""
+    if resolve_backend(backend) == "pallas":
+        return kops.cross_sqdist_op(x, y)
+    return kref.cross_sqdist_ref(x, y)
+
+
+def weighted_combine(x: jax.Array, w: jax.Array, *, backend: str = "auto") -> jax.Array:
+    """(m, d) rows combined with weights w: (k, m) -> (k, d), or (m,) -> (d,)."""
+    w2 = w[None] if w.ndim == 1 else w
+    if resolve_backend(backend) == "pallas":
+        out = kops.weighted_combine_op(x, w2)
+    else:
+        out = kref.weighted_combine_ref(x, w2)
+    return out[0] if w.ndim == 1 else out
+
+
+# ------------------------------------------------------------ tree forms
+#
+# Leaves carry a leading worker axis m; primitives stream per leaf.
+
+
+def _as_mat(l: jax.Array) -> jax.Array:
+    return l.reshape(l.shape[0], -1).astype(jnp.float32)
+
+
+def tree_pairwise_sqdist(stacked: Tree, *, backend: str = "auto") -> jax.Array:
+    """Global (m, m) squared distances summed over per-leaf contributions."""
+    parts = [pairwise_sqdist(_as_mat(l), backend=backend)
+             for l in jax.tree.leaves(stacked)]
+    return jnp.maximum(sum(parts), 0.0)
+
+
+def tree_cross_sqdist(stacked: Tree, z: Tree, *, backend: str = "auto") -> jax.Array:
+    """Global (m,) squared distances from the m stacked entries to point z
+    (a tree shaped like one worker's entry), summed per leaf."""
+    zl = jax.tree.leaves(z)
+    parts = [cross_sqdist(_as_mat(l), zl[i].reshape(1, -1).astype(jnp.float32),
+                          backend=backend)[:, 0]
+             for i, l in enumerate(jax.tree.leaves(stacked))]
+    return jnp.maximum(sum(parts), 0.0)
+
+
+def tree_weighted_combine(stacked: Tree, w: jax.Array, *, backend: str = "auto",
+                          out_dtype: Optional[object] = None) -> Tree:
+    """Per-leaf weighted combine.
+
+    w: (m,)  -> tree shaped like one worker's entry (the aggregate);
+    w: (m, m)-> tree with the worker axis kept (each row re-mixed).
+    ``out_dtype=None`` keeps each leaf's dtype; pass e.g. jnp.float32 to
+    keep full precision across Weiszfeld iterations."""
+    def leaf(l):
+        out = weighted_combine(_as_mat(l), w, backend=backend)
+        shape = l.shape if w.ndim == 2 else l.shape[1:]
+        return out.reshape(shape).astype(out_dtype or l.dtype)
+    return jax.tree.map(leaf, stacked)
+
+
+# ============================================================ rule bases
+
+
+class Aggregator:
+    """Base: ``__call__`` on (m, d) matrices, ``.tree()`` on worker-stacked
+    pytrees. Both conventions run through the same per-leaf primitives (a
+    matrix is just a one-leaf tree), so they agree by construction."""
+
+    name = "base"
+    coordinate_wise = False
+
+    def __init__(self, backend: str = "auto"):
+        self.backend = backend
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return self.tree(jnp.asarray(x).astype(jnp.float32))
+
+    def tree(self, stacked: Tree) -> Tree:
+        raise NotImplementedError
+
+    def leaf(self, l: jax.Array) -> jax.Array:
+        """(m, ...) -> (...). Exact only for coordinate-wise rules — this is
+        the Mode B entry point, applied independently per parameter shard."""
+        raise NotImplementedError(
+            f"{self.name} needs global geometry; only coordinate-wise rules "
+            "support per-shard aggregation (DESIGN.md §3)")
+
+
+class CoordinateWiseRule(Aggregator):
+    """Rules that reduce each coordinate independently (exact per-leaf and
+    per-shard: Mean / CWMed / CWTM)."""
+
+    coordinate_wise = True
+
+    def _reduce(self, mat: jax.Array) -> jax.Array:  # (m, d) f32 -> (d,) f32
+        raise NotImplementedError
+
+    def leaf(self, l: jax.Array) -> jax.Array:
+        out = self._reduce(_as_mat(l))
+        return out.reshape(l.shape[1:]).astype(l.dtype)
+
+    def tree(self, stacked: Tree) -> Tree:
+        return jax.tree.map(self.leaf, stacked)
+
+
+class GeometryRule(Aggregator):
+    """Rules driven by global pairwise geometry: the (m, m) statistics are
+    computed once from summed per-leaf contributions, turned into per-worker
+    weights, and applied per leaf by the combine primitive."""
+
+    def _weights(self, d2: jax.Array) -> jax.Array:  # (m, m) -> (m,)|(m, m)
+        raise NotImplementedError
+
+    def tree(self, stacked: Tree) -> Tree:
+        d2 = tree_pairwise_sqdist(stacked, backend=self.backend)
+        return tree_weighted_combine(stacked, self._weights(d2),
+                                     backend=self.backend)
+
+
+# ============================================================ registry
+
+_REGISTRY: Dict[str, Callable[..., Aggregator]] = {}
+
+
+def register(name: str, factory: Callable[..., Aggregator]) -> None:
+    _REGISTRY[name] = factory
+
+
+def registered_rules():
+    """Names registered by ``repro.core.aggregators`` (composites like
+    ``nnm+<base>`` are resolved dynamically and not listed)."""
+    import repro.core.aggregators  # noqa: F401  (registers the rules)
+    return tuple(sorted(_REGISTRY))
+
+
+def get_aggregator(name: str, delta: float = 0.25, tau: Optional[float] = None,
+                   backend: str = "auto") -> Aggregator:
+    """One registry for both training modes: Mode A consumes ``.tree()``,
+    Mode B consumes ``.leaf()`` (coordinate-wise rules only)."""
+    import repro.core.aggregators as _rules  # registers on first import
+    name = name.lower()
+    if name.startswith("nnm+"):
+        return _rules.NNM(get_aggregator(name[4:], delta, tau, backend),
+                          delta, backend=backend)
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown aggregator {name!r}; known: "
+                         f"{registered_rules()} and nnm+<base>")
+    return _REGISTRY[name](delta=delta, tau=tau, backend=backend)
+
+
+def trim_count(delta: float, m: int) -> int:
+    """⌈δm⌉ clipped to keep at least one row after two-sided trimming."""
+    return min(math.ceil(delta * m), (m - 1) // 2)

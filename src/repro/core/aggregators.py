@@ -1,4 +1,4 @@
-"""Robust aggregation rules.
+"""Robust aggregation rules, expressed over the ``core.agg_engine`` primitives.
 
 Two call conventions:
   * matrix:  ``agg(x)`` with ``x: (m, d)`` -> ``(d,)``
@@ -7,7 +7,13 @@ Two call conventions:
 Coordinate-wise rules (Mean/CWMed/CWTM) apply leaf-by-leaf and are exact in
 both conventions. Distance-based rules (Krum/GeoMed/MFM/NNM) need the global
 geometry: the tree convention computes *global* pairwise distances by summing
-per-leaf contributions, then combines per-leaf — also exact.
+per-leaf contributions, then combines per-leaf — also exact.  No rule
+materializes the flat ``(m, d_total)`` matrix: only the tiny ``(m, m)``
+statistics are global, everything else streams per leaf (DESIGN.md §4).
+
+Every rule runs on either engine backend — ``ref`` (pure jnp) or ``pallas``
+(the repro.kernels TPU kernels; interpret mode on CPU) — selected by the
+``backend`` argument of ``get_aggregator`` (``"auto"`` picks per platform).
 
 ``(δ, κ_δ)-robustness`` (Def. 3.2, Allouah et al. 2023) holds for CWMed, CWTM,
 Krum and GeoMed (with κ_δ listed in ``KAPPA``); MFM (Alg. 3 of the paper) is
@@ -16,22 +22,35 @@ under bounded noise (Lemma 5.1).
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Optional
+from typing import Optional
 
 import math
 
 import jax
 import jax.numpy as jnp
 
-Tree = object
+from repro.core.agg_engine import (
+    Aggregator, CoordinateWiseRule, GeometryRule, Tree,
+    cw_mean, cw_median, cw_trimmed_mean, get_aggregator, register,
+    tree_cross_sqdist, tree_pairwise_sqdist, tree_weighted_combine,
+    trim_count,
+)
+
+__all__ = [
+    "Aggregator", "Mean", "CWMed", "CWTM", "Krum", "GeoMed", "NNM", "MFM",
+    "KAPPA", "get_aggregator", "pairwise_sqdists", "tree_pairwise_sqdists",
+    "tree_stack_to_mat", "mat_to_tree",
+]
 
 
 # ---------------------------------------------------------------- helpers
+#
+# Flat-matrix helpers kept for tests/diagnostics; the rules themselves no
+# longer go through tree_stack_to_mat.
 
 
 def tree_stack_to_mat(stacked: Tree) -> jax.Array:
-    """(m, ...)-leaf tree -> (m, d) matrix."""
+    """(m, ...)-leaf tree -> (m, d) matrix (diagnostics only — O(m·d) f32)."""
     leaves = jax.tree.leaves(stacked)
     m = leaves[0].shape[0]
     return jnp.concatenate([l.reshape(m, -1).astype(jnp.float32) for l in leaves], axis=1)
@@ -49,92 +68,54 @@ def mat_to_tree(vec: jax.Array, like: Tree) -> Tree:
 
 
 def pairwise_sqdists(x: jax.Array) -> jax.Array:
-    """x: (m, d) -> (m, m) squared L2 distances."""
-    sq = jnp.sum(x * x, axis=1)
-    d2 = sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
-    return jnp.maximum(d2, 0.0)
+    """x: (m, d) -> (m, m) squared L2 distances (ref backend)."""
+    from repro.core.agg_engine import pairwise_sqdist
+    return pairwise_sqdist(x.astype(jnp.float32), backend="ref")
 
 
 def tree_pairwise_sqdists(stacked: Tree) -> jax.Array:
-    """Global (m, m) squared distances summed over all leaves."""
-    def leaf_d2(l):
-        m = l.shape[0]
-        return pairwise_sqdists(l.reshape(m, -1).astype(jnp.float32))
-    return sum(jax.tree.leaves(jax.tree.map(leaf_d2, stacked)))
-
-
-def _tree_weighted_mean(stacked: Tree, w: jax.Array) -> Tree:
-    """Per-worker weights w: (m,), sum need not be 1 (caller normalizes)."""
-    def leaf(l):
-        wl = w.reshape((-1,) + (1,) * (l.ndim - 1)).astype(jnp.float32)
-        return (l.astype(jnp.float32) * wl).sum(0).astype(l.dtype)
-    return jax.tree.map(leaf, stacked)
+    """Global (m, m) squared distances summed over all leaves (ref backend)."""
+    return tree_pairwise_sqdist(stacked, backend="ref")
 
 
 # ---------------------------------------------------------------- rules
 
 
-class Aggregator:
-    """Base: subclasses implement __call__ on (m, d) and tree() on stacked trees."""
-
-    name = "base"
-    coordinate_wise = False
-
-    def __call__(self, x: jax.Array) -> jax.Array:
-        raise NotImplementedError
-
-    def tree(self, stacked: Tree) -> Tree:
-        if self.coordinate_wise:
-            return jax.tree.map(lambda l: self._leaf(l), stacked)
-        # exact global-geometry path
-        mat = tree_stack_to_mat(stacked)
-        return mat_to_tree(self(mat), stacked)
-
-    def _leaf(self, l: jax.Array) -> jax.Array:
-        m = l.shape[0]
-        return self(l.reshape(m, -1)).reshape(l.shape[1:]).astype(l.dtype)
-
-
-class Mean(Aggregator):
+class Mean(CoordinateWiseRule):
     name = "mean"
-    coordinate_wise = True
 
-    def __call__(self, x):
-        return jnp.mean(x, axis=0)
+    def _reduce(self, mat):
+        return cw_mean(mat, backend=self.backend)
 
 
-class CWMed(Aggregator):
+class CWMed(CoordinateWiseRule):
     """Coordinate-wise median (Yin et al., 2018)."""
     name = "cwmed"
-    coordinate_wise = True
 
-    def __call__(self, x):
-        return jnp.median(x.astype(jnp.float32), axis=0)
+    def _reduce(self, mat):
+        return cw_median(mat, backend=self.backend)
 
 
-class CWTM(Aggregator):
+class CWTM(CoordinateWiseRule):
     """Coordinate-wise trimmed mean: drop ⌈δm⌉ highest/lowest per coordinate."""
     name = "cwtm"
-    coordinate_wise = True
 
-    def __init__(self, delta: float = 0.25):
+    def __init__(self, delta: float = 0.25, backend: str = "auto"):
+        super().__init__(backend)
         self.delta = delta
 
-    def __call__(self, x):
-        m = x.shape[0]
-        t = min(math.ceil(self.delta * m), (m - 1) // 2)
-        xs = jnp.sort(x.astype(jnp.float32), axis=0)
-        if t == 0:
-            return xs.mean(0)
-        return xs[t:m - t].mean(0)
+    def _reduce(self, mat):
+        return cw_trimmed_mean(mat, trim_count(self.delta, mat.shape[0]),
+                               backend=self.backend)
 
 
-class Krum(Aggregator):
+class Krum(GeometryRule):
     """(Multi-)Krum (Blanchard et al., 2017): pick the vector(s) with the
     smallest sum of distances to its m - ⌈δm⌉ - 2 nearest neighbours."""
     name = "krum"
 
-    def __init__(self, delta: float = 0.25, multi: int = 1):
+    def __init__(self, delta: float = 0.25, multi: int = 1, backend: str = "auto"):
+        super().__init__(backend)
         self.delta = delta
         self.multi = multi
 
@@ -146,71 +127,49 @@ class Krum(Aggregator):
         nearest = jnp.sort(d2, axis=1)[:, :k]
         return nearest.sum(1)
 
-    def __call__(self, x):
-        s = self.scores(pairwise_sqdists(x))
+    def _weights(self, d2):
+        s = self.scores(d2)
         if self.multi == 1:
-            return x[jnp.argmin(s)]
+            return jax.nn.one_hot(jnp.argmin(s), s.shape[0])
         _, idx = jax.lax.top_k(-s, self.multi)
-        return x[idx].mean(0)
-
-    def tree(self, stacked):
-        s = self.scores(tree_pairwise_sqdists(stacked))
-        if self.multi == 1:
-            w = jax.nn.one_hot(jnp.argmin(s), s.shape[0])
-        else:
-            _, idx = jax.lax.top_k(-s, self.multi)
-            w = jnp.zeros_like(s).at[idx].set(1.0 / self.multi)
-        return _tree_weighted_mean(stacked, w)
+        return jnp.zeros_like(s).at[idx].set(1.0 / self.multi)
 
 
 class GeoMed(Aggregator):
-    """Geometric median via Weiszfeld iterations (Pillutla et al., 2022)."""
+    """Geometric median via Weiszfeld iterations (Pillutla et al., 2022).
+    Each iteration is one cross-distance accumulate (x vs the iterate z) plus
+    one weighted combine — both streamed per leaf."""
     name = "geomed"
 
-    def __init__(self, iters: int = 8, eps: float = 1e-8):
+    def __init__(self, iters: int = 8, eps: float = 1e-8, backend: str = "auto"):
+        super().__init__(backend)
         self.iters = iters
         self.eps = eps
 
-    def __call__(self, x):
-        x = x.astype(jnp.float32)
-
-        def body(_, z):
-            d = jnp.sqrt(jnp.sum((x - z[None]) ** 2, axis=1) + self.eps)
-            w = 1.0 / d
-            return (w[:, None] * x).sum(0) / w.sum()
-
-        return jax.lax.fori_loop(0, self.iters, body, x.mean(0))
-
     def tree(self, stacked):
-        # Weiszfeld on the tree: weights from global distances each iteration
-        def dist_to(z):
-            def leaf_d2(l, zl):
-                m = l.shape[0]
-                dl = l.astype(jnp.float32).reshape(m, -1) - zl.astype(jnp.float32).reshape(1, -1)
-                return jnp.sum(dl * dl, axis=1)
-            return sum(jax.tree.leaves(jax.tree.map(leaf_d2, stacked, z)))
-
-        z = jax.tree.map(lambda l: l.astype(jnp.float32).mean(0), stacked)
+        m = jax.tree.leaves(stacked)[0].shape[0]
+        z = tree_weighted_combine(stacked, jnp.full((m,), 1.0 / m, jnp.float32),
+                                  backend=self.backend, out_dtype=jnp.float32)
         for _ in range(self.iters):
-            w = 1.0 / jnp.sqrt(dist_to(z) + self.eps)
-            wn = w / w.sum()
-            z = _tree_weighted_mean(stacked, wn)
-            z = jax.tree.map(lambda l: l.astype(jnp.float32), z)
-        like = jax.tree.map(lambda l: l, stacked)
-        return jax.tree.map(lambda zl, l: zl.astype(l.dtype), z, like)
+            d2 = tree_cross_sqdist(stacked, z, backend=self.backend)
+            w = 1.0 / jnp.sqrt(d2 + self.eps)
+            z = tree_weighted_combine(stacked, w / w.sum(),
+                                      backend=self.backend, out_dtype=jnp.float32)
+        return jax.tree.map(lambda zl, l: zl.astype(l.dtype), z, stacked)
 
 
-class NNM(Aggregator):
+class NNM(GeometryRule):
     """Nearest-Neighbor Mixing (Allouah et al., 2023): replace each input by
     the mean of its m - ⌈δm⌉ nearest neighbours, then apply a base rule."""
     name = "nnm"
 
-    def __init__(self, base: Aggregator, delta: float = 0.25):
+    def __init__(self, base: Aggregator, delta: float = 0.25, backend: str = "auto"):
+        super().__init__(backend)
         self.base = base
         self.delta = delta
         self.name = f"nnm+{base.name}"
 
-    def _mix_weights(self, d2: jax.Array) -> jax.Array:
+    def _weights(self, d2: jax.Array) -> jax.Array:
         m = d2.shape[0]
         f = math.ceil(self.delta * m)
         k = m - f
@@ -218,27 +177,23 @@ class NNM(Aggregator):
         w = jax.vmap(lambda ix: jnp.zeros((m,)).at[ix].set(1.0 / k))(idx)
         return w  # (m, m) row i = mixing weights for worker i
 
-    def __call__(self, x):
-        w = self._mix_weights(pairwise_sqdists(x))
-        return self.base(w @ x.astype(jnp.float32))
-
     def tree(self, stacked):
-        w = self._mix_weights(tree_pairwise_sqdists(stacked))
-        mixed = jax.tree.map(
-            lambda l: jnp.einsum("ij,j...->i...", w,
-                                 l.astype(jnp.float32)).astype(l.dtype), stacked)
+        d2 = tree_pairwise_sqdist(stacked, backend=self.backend)
+        mixed = tree_weighted_combine(stacked, self._weights(d2),
+                                      backend=self.backend)
         return self.base.tree(mixed)
 
 
-class MFM(Aggregator):
+class MFM(GeometryRule):
     """Median-Filtered Mean (Alg. 3). Threshold ``tau`` must be supplied per
     call (it scales as 2·C·V/√N with the mini-batch size N)."""
     name = "mfm"
 
-    def __init__(self, tau: Optional[float] = None):
+    def __init__(self, tau: Optional[float] = None, backend: str = "auto"):
+        super().__init__(backend)
         self.tau = tau
 
-    def _weights(self, d2: jax.Array, tau) -> jax.Array:
+    def _mfm_weights(self, d2: jax.Array, tau) -> jax.Array:
         m = d2.shape[0]
         d = jnp.sqrt(d2)
         within_half = (d <= tau / 2).sum(1)  # includes self
@@ -251,16 +206,14 @@ class MFM(Aggregator):
         return w  # all-zero => output 0 (the algorithm's fallback)
 
     def __call__(self, x, tau: Optional[float] = None):
-        tau = tau if tau is not None else self.tau
-        assert tau is not None, "MFM needs a threshold"
-        w = self._weights(pairwise_sqdists(x), tau)
-        return (w[:, None] * x.astype(jnp.float32)).sum(0)
+        return self.tree(jnp.asarray(x).astype(jnp.float32), tau)
 
     def tree(self, stacked, tau: Optional[float] = None):
         tau = tau if tau is not None else self.tau
         assert tau is not None, "MFM needs a threshold"
-        w = self._weights(tree_pairwise_sqdists(stacked), tau)
-        return _tree_weighted_mean(stacked, w)
+        d2 = tree_pairwise_sqdist(stacked, backend=self.backend)
+        return tree_weighted_combine(stacked, self._mfm_weights(d2, tau),
+                                     backend=self.backend)
 
 
 # ---------------------------------------------------------------- registry
@@ -274,16 +227,9 @@ KAPPA = {
     "geomed": lambda d, m: 4 * (1 + d / (1 - 2 * d)) ** 2 if d < 0.5 else float("inf"),
 }
 
-
-def get_aggregator(name: str, delta: float = 0.25, tau: Optional[float] = None) -> Aggregator:
-    name = name.lower()
-    if name.startswith("nnm+"):
-        return NNM(get_aggregator(name[4:], delta, tau), delta)
-    return {
-        "mean": Mean,
-        "cwmed": CWMed,
-        "cwtm": functools.partial(CWTM, delta),
-        "krum": functools.partial(Krum, delta),
-        "geomed": GeoMed,
-        "mfm": functools.partial(MFM, tau),
-    }[name]()
+register("mean", lambda delta=0.25, tau=None, backend="auto": Mean(backend=backend))
+register("cwmed", lambda delta=0.25, tau=None, backend="auto": CWMed(backend=backend))
+register("cwtm", lambda delta=0.25, tau=None, backend="auto": CWTM(delta, backend=backend))
+register("krum", lambda delta=0.25, tau=None, backend="auto": Krum(delta, backend=backend))
+register("geomed", lambda delta=0.25, tau=None, backend="auto": GeoMed(backend=backend))
+register("mfm", lambda delta=0.25, tau=None, backend="auto": MFM(tau, backend=backend))

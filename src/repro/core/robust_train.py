@@ -32,11 +32,12 @@ GradFn = Callable[[Any, Any], Any]  # (params, unit_batch) -> grad tree
 @dataclasses.dataclass
 class DynaBROConfig:
     mlmc: MLMCConfig
-    aggregator: str = "cwtm"
+    aggregator: str = "cwtm"  # any core.agg_engine registry rule
     delta: float = 0.25
     attack: str = "sign_flip"
     attack_kwargs: Optional[dict] = None
     use_mlmc: bool = True  # False -> plain robust-aggregated SGD
+    agg_backend: str = "auto"  # engine backend: ref | pallas | auto
 
 
 def _per_worker_grads(grad_fn: GradFn, params, batches):
@@ -57,9 +58,9 @@ def _attack_stack(cfg: DynaBROConfig, grads, masks, key):
 def _aggregate(cfg: DynaBROConfig, stacked, n: int):
     """Robustly aggregate a worker-stacked tree; MFM threshold scales 1/√n."""
     if cfg.aggregator == "mfm":
-        agg = MFM()
+        agg = MFM(backend=cfg.agg_backend)
         return agg.tree(stacked, tau=cfg.mlmc.mfm_tau(n))
-    agg = get_aggregator(cfg.aggregator, delta=cfg.delta)
+    agg = get_aggregator(cfg.aggregator, delta=cfg.delta, backend=cfg.agg_backend)
     return agg.tree(stacked)
 
 

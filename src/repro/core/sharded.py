@@ -19,10 +19,16 @@ Because the hook is applied *inside* the layer-group scan, per-worker full
 gradients only ever exist one layer-group at a time — this is what makes
 Byzantine-robust training of the mega-architectures fit in HBM.
 
+The per-shard aggregation itself dispatches through the shared engine
+registry (``core.agg_engine``, DESIGN.md §4): the same rule objects Mode A
+uses, with ref/pallas backends — so the Pallas kernels serve the Mode B
+backward too.
+
 Byzantine workers are *simulated*: the attack corrupts the cotangent of the
-workers flagged by the (m,)-float mask (worker index = flattened
-``lax.axis_index`` over the worker axes). IPM/ALIE compute honest statistics
-with psum collectives — the exact omniscient attacks of Appendix J.
+workers flagged by the (m,)-float mask (worker index = flattened position
+along the worker axes, delivered as data — see ``make_param_hook``). IPM/ALIE
+compute honest statistics with psum collectives — the exact omniscient
+attacks of Appendix J.
 """
 from __future__ import annotations
 
@@ -34,6 +40,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.agg_engine import get_aggregator
+
 
 @dataclasses.dataclass(frozen=True)
 class ShardedByzConfig:
@@ -43,31 +51,31 @@ class ShardedByzConfig:
     delta: float = 0.25
     attack: str = "none"  # none | sign_flip | ipm | alie
     attack_param: float = 0.1
+    backend: str = "auto"  # agg_engine backend: ref | pallas | auto
 
 
 # ------------------------------------------------------------ aggregation
 
 
-def _agg_subaxis(stack: jax.Array, cfg: ShardedByzConfig) -> jax.Array:
-    """stack: (m, ...) -> (...). Coordinate-wise robust aggregation."""
-    x = stack.astype(jnp.float32)
-    if cfg.aggregator == "mean":
-        return x.mean(0)
-    if cfg.aggregator == "cwmed":
-        return jnp.median(x, axis=0)
-    if cfg.aggregator == "cwtm":
-        m = x.shape[0]
-        t = min(int(-(-cfg.delta * m // 1)), (m - 1) // 2)
-        xs = jnp.sort(x, axis=0)
-        return xs[t:m - t].mean(0) if t else xs.mean(0)
-    raise ValueError(f"sharded mode supports coordinate-wise rules, got {cfg.aggregator}")
+def _make_leaf_agg(cfg: ShardedByzConfig):
+    """(m, ...) -> (...) robust aggregation via the shared engine registry.
+
+    Mode B aggregates each parameter shard independently, which is exact only
+    for coordinate-wise rules (DESIGN.md §3) — the engine's registry carries
+    that metadata, so misconfiguration fails at build time, not in backward."""
+    agg = get_aggregator(cfg.aggregator, delta=cfg.delta, backend=cfg.backend)
+    if not agg.coordinate_wise:
+        raise ValueError(
+            f"sharded mode supports coordinate-wise rules, got {cfg.aggregator}")
+    return agg.leaf
 
 
-def _attack_cotangent(g: jax.Array, maskf: jax.Array, cfg: ShardedByzConfig) -> jax.Array:
-    """Corrupt this worker's cotangent if it is flagged Byzantine."""
+def _attack_cotangent(g: jax.Array, maskf: jax.Array, idx: jax.Array,
+                      cfg: ShardedByzConfig) -> jax.Array:
+    """Corrupt this worker's cotangent if it is flagged Byzantine. ``idx`` is
+    this device's flattened worker index (scalar int32, arrives as data)."""
     if cfg.attack == "none":
         return g
-    idx = lax.axis_index(cfg.axis_names)
     byz = maskf[idx] > 0.5
     gf = g.astype(jnp.float32)
     n_honest = jnp.maximum(cfg.m - maskf.sum(), 1.0)
@@ -87,30 +95,80 @@ def _attack_cotangent(g: jax.Array, maskf: jax.Array, cfg: ShardedByzConfig) -> 
     return jnp.where(byz, bad, gf).astype(g.dtype)
 
 
+# ------------------------------------------------------------ collectives
+#
+# jax <= 0.4.x cannot lower worker-axis all_gather / all_to_all inside a
+# *partial*-manual shard_map (the XLA SPMD partitioner check-fails on the
+# ManualSubgroup sharding), and ``lax.axis_index`` lowers to a PartitionId op
+# XLA rejects under partial SPMD. The worker index therefore always arrives
+# as *data* (an iota sharded over the worker axes — see ``make_param_hook``),
+# and on legacy jax the gathers are emulated with psum + dynamic slicing:
+# identical results, m× the gather bytes, never on the production (new-jax
+# TPU) path.
+
+from repro.compat import LEGACY_PARTIAL_MANUAL as _LEGACY_PARTIAL_MANUAL  # noqa: E402
+
+
+def _gather_tiled(p: jax.Array, cfg: ShardedByzConfig, axis: int,
+                  idx: jax.Array) -> jax.Array:
+    """FSDP all-gather along `axis` over the worker axes."""
+    if not _LEGACY_PARTIAL_MANUAL:
+        return lax.all_gather(p, cfg.axis_names, axis=axis, tiled=True)
+    full = jnp.zeros(p.shape[:axis] + (p.shape[axis] * cfg.m,)
+                     + p.shape[axis + 1:], p.dtype)
+    starts = (0,) * axis + (idx * p.shape[axis],) + (0,) * (p.ndim - axis - 1)
+    return lax.psum(lax.dynamic_update_slice(full, p, starts), cfg.axis_names)
+
+
+def _gather_stack(g: jax.Array, cfg: ShardedByzConfig, idx: jax.Array) -> jax.Array:
+    """(...) -> (m, ...): stack the m workers' values of a same-shape array."""
+    if not _LEGACY_PARTIAL_MANUAL:
+        return lax.all_gather(g, cfg.axis_names, axis=0, tiled=False)
+    full = jnp.zeros((cfg.m,) + g.shape, g.dtype)
+    starts = (idx,) + (0,) * g.ndim
+    return lax.psum(lax.dynamic_update_slice(full, g[None], starts), cfg.axis_names)
+
+
+def _exchange_worker_blocks(g: jax.Array, cfg: ShardedByzConfig, axis: int,
+                            idx: jax.Array) -> jax.Array:
+    """Worker all-to-all: full-size cotangent -> (m, ..., blk, ...) holding
+    every worker's values for this device's own parameter shard."""
+    if not _LEGACY_PARTIAL_MANUAL:
+        ex = lax.all_to_all(g, cfg.axis_names, split_axis=axis,
+                            concat_axis=axis, tiled=True)
+        shp = ex.shape
+        blk = shp[axis] // cfg.m
+        ex = ex.reshape(shp[:axis] + (cfg.m, blk) + shp[axis + 1:])
+        return jnp.moveaxis(ex, axis, 0)
+    stack = _gather_stack(g, cfg, idx)  # (m, ..., d, ...)
+    blk = g.shape[axis] // cfg.m
+    starts = (0,) * (axis + 1) + (idx * blk,) + (0,) * (g.ndim - axis - 1)
+    sizes = (cfg.m,) + g.shape[:axis] + (blk,) + g.shape[axis + 1:]
+    return lax.dynamic_slice(stack, starts, sizes)
+
+
 # ------------------------------------------------------------ custom VJPs
 
 
 def make_robust_gather(cfg: ShardedByzConfig, gather_axis: int):
     """FSDP all-gather whose backward robust-aggregates instead of summing."""
+    leaf_agg = _make_leaf_agg(cfg)
 
     @jax.custom_vjp
-    def rg(p, maskf):
-        return lax.all_gather(p, cfg.axis_names, axis=gather_axis, tiled=True)
+    def rg(p, maskf, widx):  # widx: f32 scalar worker index (see make_param_hook)
+        return _gather_tiled(p, cfg, gather_axis, widx.astype(jnp.int32))
 
-    def fwd(p, maskf):
-        return rg(p, maskf), maskf
+    def fwd(p, maskf, widx):
+        return rg(p, maskf, widx), (maskf, widx)
 
-    def bwd(maskf, g):
-        g = _attack_cotangent(g, maskf, cfg)
+    def bwd(res, g):
+        maskf, widx = res
+        idx = widx.astype(jnp.int32)
+        g = _attack_cotangent(g, maskf, idx, cfg)
         # exchange: every device ends up with the m worker values of its shard
-        ex = lax.all_to_all(g, cfg.axis_names, split_axis=gather_axis,
-                            concat_axis=gather_axis, tiled=True)
-        shp = ex.shape
-        blk = shp[gather_axis] // cfg.m
-        ex = ex.reshape(shp[:gather_axis] + (cfg.m, blk) + shp[gather_axis + 1:])
-        ex = jnp.moveaxis(ex, gather_axis, 0)  # (m, ..., blk, ...)
-        agg = _agg_subaxis(ex, cfg)
-        return agg.astype(g.dtype), jnp.zeros_like(maskf)
+        ex = _exchange_worker_blocks(g, cfg, gather_axis, idx)
+        return (leaf_agg(ex).astype(g.dtype), jnp.zeros_like(maskf),
+                jnp.zeros_like(widx))
 
     rg.defvjp(fwd, bwd)
     return rg
@@ -119,18 +177,22 @@ def make_robust_gather(cfg: ShardedByzConfig, gather_axis: int):
 def make_robust_replicated(cfg: ShardedByzConfig):
     """Identity on replicated params; backward gathers the m cotangents and
     robust-aggregates them (small leaves: norms, biases, routers)."""
+    leaf_agg = _make_leaf_agg(cfg)
 
     @jax.custom_vjp
-    def rr(p, maskf):
+    def rr(p, maskf, widx):
         return p
 
-    def fwd(p, maskf):
-        return rr(p, maskf), maskf
+    def fwd(p, maskf, widx):
+        return rr(p, maskf, widx), (maskf, widx)
 
-    def bwd(maskf, g):
-        g = _attack_cotangent(g, maskf, cfg)
-        stack = lax.all_gather(g, cfg.axis_names, axis=0, tiled=False)  # (m, ...)
-        return _agg_subaxis(stack, cfg).astype(g.dtype), jnp.zeros_like(maskf)
+    def bwd(res, g):
+        maskf, widx = res
+        idx = widx.astype(jnp.int32)
+        g = _attack_cotangent(g, maskf, idx, cfg)
+        stack = _gather_stack(g, cfg, idx)  # (m, ...)
+        return (leaf_agg(stack).astype(g.dtype), jnp.zeros_like(maskf),
+                jnp.zeros_like(widx))
 
     rr.defvjp(fwd, bwd)
     return rr
@@ -155,24 +217,30 @@ def fsdp_axis_for(shape: Sequence[int], m: int, model_axis: Optional[int],
     return None
 
 
-def make_param_hook(cfg: ShardedByzConfig, plans: dict, maskf: jax.Array):
+def make_param_hook(cfg: ShardedByzConfig, plans: dict, maskf: jax.Array,
+                    widx: jax.Array):
     """Tree hook with robust-aggregating backward.
 
     ``plans``: {scope: plan-tree}, plan trees structurally matching what the
     hook is called on (scope 'blocks' = one group slice; scope 'top' = the
     non-block params), each leaf an int FSDP axis (-1 => replicated).
     Built once on global shapes by ``launch.sharding.plan_params``.
+
+    ``widx``: this device's flattened worker index, delivered as data (the
+    step builders feed an iota sharded over the worker axes — the local slice
+    is the index). Any shape with one element; forwarded as an f32 scalar.
     """
     rr = make_robust_replicated(cfg)
     gathers = {ax: make_robust_gather(cfg, ax) for ax in range(4)}
+    widx = jnp.asarray(widx, jnp.float32).reshape(())
 
     def hook(tree, scope: str):
         plan = plans[scope]
 
         def leaf(p, fa):
             if fa < 0:
-                return rr(p, maskf)
-            return gathers[fa](p, maskf)
+                return rr(p, maskf, widx)
+            return gathers[fa](p, maskf, widx)
 
         return jax.tree.map(leaf, tree, plan)
 

@@ -2,6 +2,12 @@
 
 On TPU the Pallas kernels run compiled; on CPU (this container) they run in
 ``interpret=True`` mode, executing the same kernel bodies for correctness.
+These wrappers are the ``pallas`` backend of ``core.agg_engine`` — the three
+engine primitives map onto them as
+
+  coordinate-wise reduce      -> ``cwmed_op`` / ``cwtm_op``
+  pairwise-distance accumulate-> ``pairwise_sqdist_op`` / ``cross_sqdist_op``
+  weighted-combine            -> ``weighted_combine_op``
 """
 from __future__ import annotations
 
@@ -10,6 +16,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import combine as _combine_mod
 from repro.kernels import cwmed as _cwmed_mod
 from repro.kernels import pairwise as _pairwise_mod
 
@@ -31,3 +38,14 @@ def cwtm_op(x: jax.Array, trim: int, tile_d: int = 2048) -> jax.Array:
 @functools.partial(jax.jit, static_argnames=("tile_d",))
 def pairwise_sqdist_op(x: jax.Array, tile_d: int = 4096) -> jax.Array:
     return _pairwise_mod.pairwise_sqdist(x, tile_d=tile_d, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d",))
+def cross_sqdist_op(x: jax.Array, y: jax.Array, tile_d: int = 4096) -> jax.Array:
+    return _pairwise_mod.cross_sqdist(x, y, tile_d=tile_d, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d",))
+def weighted_combine_op(x: jax.Array, w: jax.Array, tile_d: int = 2048) -> jax.Array:
+    """x: (m, d), w: (k, m) -> (k, d) = w @ x, streamed over d tiles."""
+    return _combine_mod.weighted_combine(x, w, tile_d=tile_d, interpret=_interpret())

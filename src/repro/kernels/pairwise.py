@@ -49,3 +49,46 @@ def pairwise_sqdist(x: jax.Array, *, tile_d: int = 4096,
         interpret=interpret,
     )(x)
     return jnp.maximum(out, 0.0)
+
+
+def _cross_kernel(x_ref, y_ref, o_ref):
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)  # (m, tile)
+    y = y_ref[...].astype(jnp.float32)  # (k, tile)
+    # direct subtraction, not the gram expansion: Weiszfeld iterates sit
+    # close to the points and the expansion cancels catastrophically in f32
+    # (see cross_sqdist_ref); k is tiny so the (m, k, tile) broadcast fits
+    part = jnp.sum(jnp.square(x[:, None, :] - y[None, :, :]), axis=-1)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(i != 0)
+    def _acc():
+        o_ref[...] += part
+
+
+def cross_sqdist(x: jax.Array, y: jax.Array, *, tile_d: int = 4096,
+                 interpret: bool = False) -> jax.Array:
+    """x: (m, d), y: (k, d) -> (m, k) squared L2 distances, f32.
+
+    Same streaming reduction as ``pairwise_sqdist`` but between two row sets;
+    the aggregation engine uses it for GeoMed's per-iteration distances to the
+    Weiszfeld iterate (k = 1)."""
+    m, d = x.shape
+    k = y.shape[0]
+    dp = -(-d // tile_d) * tile_d
+    if dp != d:
+        x = jnp.pad(x, ((0, 0), (0, dp - d)))
+        y = jnp.pad(y, ((0, 0), (0, dp - d)))
+    out = pl.pallas_call(
+        _cross_kernel,
+        grid=(dp // tile_d,),
+        in_specs=[pl.BlockSpec((m, tile_d), lambda i: (0, i)),
+                  pl.BlockSpec((k, tile_d), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((m, k), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        interpret=interpret,
+    )(x, y)
+    return jnp.maximum(out, 0.0)

@@ -24,3 +24,22 @@ def pairwise_sqdist_ref(x: jnp.ndarray) -> jnp.ndarray:
     sq = jnp.sum(x * x, axis=1)
     d2 = sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
     return jnp.maximum(d2, 0.0)
+
+
+def cross_sqdist_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """x: (m, d), y: (k, d) -> (m, k) squared L2 distances (float32).
+
+    Direct subtraction, NOT the ||x||²+||y||²−2x·y expansion: Weiszfeld
+    iterates sit close to the points, where the expansion cancels
+    catastrophically in f32 (distances ~1e-7·||x||² round to 0 and GeoMed
+    degenerates to a mean). k is tiny (1 for GeoMed), so the (m, k, d)
+    broadcast is cheap."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    d2 = jnp.sum(jnp.square(x[:, None, :] - y[None, :, :]), axis=-1)
+    return jnp.maximum(d2, 0.0)
+
+
+def weighted_combine_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: (m, d), w: (k, m) -> (k, d) = w @ x (float32)."""
+    return w.astype(jnp.float32) @ x.astype(jnp.float32)

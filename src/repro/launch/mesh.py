@@ -11,6 +11,27 @@ from __future__ import annotations
 import jax
 
 
+def set_mesh(mesh):
+    """Context manager activating `mesh`: ``jax.set_mesh`` where it exists
+    (jax >= 0.5), else the Mesh object itself (it is a context manager)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names, check_vma=False):
+    """``jax.shard_map`` compat: new API where available, else the
+    jax.experimental version (manual over `axis_names`, auto elsewhere)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=set(axis_names),
+                             check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    auto = frozenset(mesh.axis_names) - set(axis_names)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma, auto=auto)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -26,8 +26,14 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.sharded import ShardedByzConfig, make_param_hook
 from repro.launch import sharding as shl
-from repro.launch.mesh import worker_axes, n_workers
+from repro.launch.mesh import shard_map, worker_axes, n_workers
 from repro.models import init_cache, init_params, loss_fn, decode_step, prefill
+from repro.models import scan_compat
+
+# jax <= 0.4.x: model scans inside the Mode B partial-manual region must
+# unroll, including custom-VJP backward scans traced during the grad sweep —
+# hence the flag wraps the whole local step, not just forward (DESIGN.md §3).
+from repro.compat import LEGACY_PARTIAL_MANUAL as _LEGACY_PARTIAL_MANUAL
 from repro.optim.optimizers import Optimizer, apply_updates, sgd
 
 
@@ -72,13 +78,13 @@ def _perf_cfg(cfg: ModelConfig, mesh: Mesh) -> ModelConfig:
 def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
                      *, aggregator: str = "cwmed", attack: str = "none",
                      level: int = 0, lr: float = 1e-3, delta: float = 0.25,
-                     opt: Optional[Optimizer] = None,
+                     opt: Optional[Optimizer] = None, agg_backend: str = "auto",
                      dtype=jnp.bfloat16) -> BuiltStep:
     cfg = _perf_cfg(cfg, mesh)
     waxes = worker_axes(mesh)
     m = n_workers(mesh)
     byz = ShardedByzConfig(axis_names=waxes, m=m, aggregator=aggregator,
-                           delta=delta, attack=attack)
+                           delta=delta, attack=attack, backend=agg_backend)
     specs, plans = shl.plan_params(cfg, mesh, fsdp=True, dtype=dtype)
     opt = opt or sgd(lr)
 
@@ -86,10 +92,11 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
     S = shape.seq_len
     wspec = waxes if len(waxes) > 1 else waxes[0]
 
-    def step_local(params, opt_state, batch, maskf):
-        hook = make_param_hook(byz, plans, maskf)
-        loss, g = jax.value_and_grad(
-            lambda p: loss_fn(p, batch, cfg, param_hook=hook))(params)
+    def step_local(params, opt_state, batch, maskf, widx):
+        with scan_compat.unrolled_scans(_LEGACY_PARTIAL_MANUAL):
+            hook = make_param_hook(byz, plans, maskf, widx)
+            loss, g = jax.value_and_grad(
+                lambda p: loss_fn(p, batch, cfg, param_hook=hook))(params)
         updates, opt_state = opt.update(g, opt_state, params)
         params = apply_updates(params, updates)
         loss = jax.lax.pmean(loss, waxes)
@@ -109,14 +116,21 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
         lambda: opt.init(shl.abstract_params(cfg, dtype)))
     opt_specs = _opt_specs(opt_state_shapes, specs)
 
-    smapped = jax.shard_map(
+    smapped = shard_map(
         step_local, mesh=mesh,
-        in_specs=(pspecs_manual, _strip_model(opt_specs), batch_spec, P(None)),
+        in_specs=(pspecs_manual, _strip_model(opt_specs), batch_spec, P(None),
+                  P(wspec)),
         out_specs=(pspecs_manual, _strip_model(opt_specs), P()),
         axis_names=set(waxes), check_vma=False)
 
+    def stepped(params, opt_state, batch, maskf):
+        # worker-index iota: sharding over the worker axes hands each device
+        # its own flattened index as data (see core.sharded.make_param_hook)
+        return smapped(params, opt_state, batch, maskf,
+                       jnp.arange(m, dtype=jnp.float32))
+
     jitted = jax.jit(
-        smapped,
+        stepped,
         in_shardings=(shl.named(mesh, specs), shl.named(mesh, opt_specs),
                       shl.named(mesh, batch_spec), NamedSharding(mesh, P(None))),
         out_shardings=(shl.named(mesh, specs), shl.named(mesh, opt_specs), None),
@@ -244,7 +258,8 @@ def build_mlmc_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
                           mlmc_cfg, level: int,
                           *, aggregator: str = "cwmed", attack: str = "none",
                           delta: float = 0.25, opt: Optional[Optimizer] = None,
-                          lr: float = 1e-3, dtype=jnp.bfloat16) -> BuiltStep:
+                          lr: float = 1e-3, agg_backend: str = "auto",
+                          dtype=jnp.bfloat16) -> BuiltStep:
     """Algorithm 2 at MLMC level J=`level` in Mode B.
 
     One round computes three robust-aggregated gradients from nested slices of
@@ -258,7 +273,7 @@ def build_mlmc_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
     waxes = worker_axes(mesh)
     m = n_workers(mesh)
     byz = ShardedByzConfig(axis_names=waxes, m=m, aggregator=aggregator,
-                           delta=delta, attack=attack)
+                           delta=delta, attack=attack, backend=agg_backend)
     specs, plans = shl.plan_params(cfg, mesh, fsdp=True, dtype=dtype)
     plans_full = {k: v for k, v in plans["top"].items()}
     plans_full["blocks"] = plans["blocks"]
@@ -272,16 +287,18 @@ def build_mlmc_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
         # local (per-worker) batch holds (B/m)·2^j rows; level-n slice = prefix
         return jax.tree.map(lambda x: x[: x.shape[0] * n_units // (2 ** j)], batch)
 
-    def step_local(params, opt_state, batch, maskf):
-        hook = make_param_hook(byz, plans, maskf)
+    def step_local(params, opt_state, batch, maskf, widx):
+        with scan_compat.unrolled_scans(_LEGACY_PARTIAL_MANUAL):
+            hook = make_param_hook(byz, plans, maskf, widx)
 
-        def agg_grad(b):
-            return jax.grad(lambda p: loss_fn(p, b, cfg, param_hook=hook))(params)
+            def agg_grad(b):
+                return jax.grad(lambda p: loss_fn(p, b, cfg, param_hook=hook))(params)
 
-        g0 = agg_grad(_slice_batch(batch, 1))
+            g0 = agg_grad(_slice_batch(batch, 1))
+            if j >= 1:
+                gjm1 = agg_grad(_slice_batch(batch, 2 ** (j - 1)))
+                gj = agg_grad(_slice_batch(batch, 2 ** j))
         if j >= 1:
-            gjm1 = agg_grad(_slice_batch(batch, 2 ** (j - 1)))
-            gj = agg_grad(_slice_batch(batch, 2 ** j))
             diff = jax.tree.map(lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
                                 gj, gjm1)
             dn = jnp.sqrt(tree_sq_norm(diff, plans_full, waxes))
@@ -299,13 +316,19 @@ def build_mlmc_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
     batch_spec = {"tokens": P(wspec, None), "labels": P(wspec, None)}
     opt_state_shapes = jax.eval_shape(lambda: opt.init(shl.abstract_params(cfg, dtype)))
     opt_specs = _opt_specs(opt_state_shapes, specs)
-    smapped = jax.shard_map(
+    smapped = shard_map(
         step_local, mesh=mesh,
-        in_specs=(pspecs_manual, _strip_model(opt_specs), batch_spec, P(None)),
+        in_specs=(pspecs_manual, _strip_model(opt_specs), batch_spec, P(None),
+                  P(wspec)),
         out_specs=(pspecs_manual, _strip_model(opt_specs), (P(), P())),
         axis_names=set(waxes), check_vma=False)
+
+    def stepped(params, opt_state, batch, maskf):
+        return smapped(params, opt_state, batch, maskf,
+                       jnp.arange(m, dtype=jnp.float32))
+
     jitted = jax.jit(
-        smapped,
+        stepped,
         in_shardings=(shl.named(mesh, specs), shl.named(mesh, opt_specs),
                       shl.named(mesh, batch_spec), NamedSharding(mesh, P(None))),
         out_shardings=(shl.named(mesh, specs), shl.named(mesh, opt_specs), None),

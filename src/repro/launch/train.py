@@ -70,6 +70,7 @@ def main():
     from repro.core.mlmc import MLMCConfig, sample_level
     from repro.core.switching import get_switcher
     from repro.data import SyntheticLMData
+    from repro.launch.mesh import set_mesh
     from repro.launch.steps import build_mlmc_train_step, build_train_step
     from repro.models import init_params
     from repro.optim.optimizers import get_optimizer
@@ -127,7 +128,7 @@ def main():
     rng = np.random.default_rng(args.seed)
     t_start = time.time()
     placed = False
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for t in range(args.steps):
             j = sample_level(rng, mlmc_cfg.j_max) if args.mlmc else 0
             j = min(j, mlmc_cfg.j_max)

@@ -1,0 +1,51 @@
+"""Legacy-jax scan compatibility for Mode B.
+
+XLA bundled with jax <= 0.4.x cannot propagate partial-manual shardings
+through ``while`` loops (sharding propagation check-fails on the
+ManualSubgroup invariant), so any ``lax.scan`` reached from inside the
+partial-manual shard_map region of Mode B must lower to straight-line HLO.
+
+``forward`` enters ``unrolled_scans()`` when a param hook is active on legacy
+jax; every model scan routed through :func:`scan` then unrolls at trace time.
+Outside that extent (Mode A, inference, new jax) it is ``lax.scan`` verbatim.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_UNROLL = False
+
+
+def unrolling_active() -> bool:
+    return _UNROLL
+
+
+@contextlib.contextmanager
+def unrolled_scans(enable: bool = True):
+    global _UNROLL
+    prev = _UNROLL
+    _UNROLL = _UNROLL or enable
+    try:
+        yield
+    finally:
+        _UNROLL = prev
+
+
+def scan(body, init, xs):
+    """Drop-in for ``lax.scan(body, init, xs)`` honoring ``unrolled_scans``."""
+    if not _UNROLL:
+        return lax.scan(body, init, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    carry, ys = init, []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda l: l[i], xs))
+        ys.append(y)
+    if ys and jax.tree.leaves(ys[0]):
+        stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+    else:
+        stacked = ys[0] if ys else None
+    return carry, stacked

@@ -1,0 +1,73 @@
+"""Optional-import shim for hypothesis.
+
+The CI/dev container does not ship ``hypothesis``; importing it at module
+scope used to make ``test_aggregators.py`` and ``test_models.py`` fail at
+collection. When hypothesis is present we re-export the real API unchanged.
+When it is absent we substitute a tiny deterministic fallback: each strategy
+draws from a seeded RNG and ``@given`` re-runs the test body for a handful of
+draws — weaker than real shrinking/edge-case search, but it keeps the same
+properties exercised everywhere.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import numpy as _np
+
+    _FALLBACK_EXAMPLES = 5
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _St:
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+        @staticmethod
+        def floats(lo, hi):
+            return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda rng: options[int(rng.integers(len(options)))])
+
+    st = _St()
+
+    def settings(*_a, **_kw):  # accepts and ignores max_examples/deadline/...
+        return lambda fn: fn
+
+    def given(*strategies):
+        def deco(fn):
+            import inspect
+            params = list(inspect.signature(fn).parameters)
+            strat_names = params[len(params) - len(strategies):]
+
+            def run(**kwargs):  # non-strategy args (parametrize) arrive by kw
+                rng = _np.random.default_rng(
+                    _np.frombuffer(fn.__qualname__.encode(), dtype=_np.uint8))
+                for _ in range(_FALLBACK_EXAMPLES):
+                    draws = {n: s.example(rng)
+                             for n, s in zip(strat_names, strategies)}
+                    fn(**kwargs, **draws)
+
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            run.__module__ = fn.__module__
+            run.__dict__.update(fn.__dict__)  # carries pytestmark
+            # pytest must see only the non-strategy params (fixtures/parametrize)
+            run.__signature__ = inspect.Signature(
+                [inspect.Parameter(n, inspect.Parameter.POSITIONAL_OR_KEYWORD)
+                 for n in params[:len(params) - len(strategies)]])
+            return run
+        return deco

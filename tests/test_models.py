@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or offline fallback
 
 from repro.configs import ARCH_IDS, SHAPES, get_config, reduced
 from repro.models import decode_step, init_cache, init_params, loss_fn, prefill

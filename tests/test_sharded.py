@@ -19,6 +19,7 @@ def _run(body: str):
         from repro.configs import get_config, reduced
         from repro.configs.base import ShapeConfig
         from repro.launch.steps import build_train_step
+        from repro.launch.mesh import set_mesh
         from repro.models import init_params, loss_fn
         from repro.core.aggregators import get_aggregator
     """ % SRC) + textwrap.dedent(body)
@@ -42,7 +43,7 @@ def test_modeb_mean_no_attack_equals_plain_dp():
         p_ref = jax.tree.map(lambda p, gg: p - 0.1 * gg, params, g)
         bs = build_train_step(cfg, mesh, shape, aggregator="mean", attack="none",
                               lr=0.1, dtype=jnp.float32)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             p2, _, loss = bs.fn(params, (), batch, jnp.zeros((4,), jnp.float32))
         errs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
             a.astype(jnp.float32) - b.astype(jnp.float32)))), p2, p_ref)
@@ -73,7 +74,7 @@ def test_modeb_cwmed_matches_modea_aggregation():
         p_ref = jax.tree.map(lambda p, gg: p - 0.05 * gg.astype(jnp.float32), params, agg)
         bs = build_train_step(cfg, mesh, shape, aggregator="cwmed", attack="none",
                               lr=0.05, dtype=jnp.float32)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             p2, _, _ = bs.fn(params, (), batch, jnp.zeros((4,), jnp.float32))
         errs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
             a.astype(jnp.float32) - b.astype(jnp.float32)))), p2, p_ref)
@@ -100,7 +101,7 @@ def test_modeb_signflip_byzantine_is_neutralized():
         for t in range(8):
             toks = jax.random.randint(jax.random.PRNGKey(t), (8, 32), 0, cfg.vocab_size)
             batches.append({"tokens": toks, "labels": jnp.roll(toks, -1, 1)})
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             for t in range(8):
                 batch = jax.tree.map(lambda x, s: jax.device_put(x, s.sharding),
                                      batches[t], bs.inputs[2])
@@ -123,7 +124,7 @@ def test_modeb_multipod_axes():
         batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
         bs = build_train_step(cfg, mesh, shape, aggregator="cwmed",
                               attack="ipm", lr=0.05, dtype=jnp.float32)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             p2, _, loss = bs.fn(params, (), batch, jnp.array([1., 0., 0., 0.]))
         assert np.isfinite(float(loss))
         assert all(bool(jnp.all(jnp.isfinite(l))) for l in jax.tree.leaves(p2))
@@ -167,7 +168,7 @@ def test_modeb_mlmc_level_step_matches_manual_algorithm2():
         p_ref = jax.tree.map(lambda p, gg: p - 0.05 * gg.astype(jnp.float32), params, g)
         bs = build_mlmc_train_step(cfg, mesh, shape, mc, 1, aggregator="cwmed",
                                    attack="none", lr=0.05, dtype=jnp.float32)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             batch_p = jax.tree.map(lambda x, s: jax.device_put(x, s.sharding),
                                    batch, bs.inputs[2])
             p2, _, (ok, dn) = bs.fn(params, (), batch_p, jnp.zeros((4,), jnp.float32))
