@@ -1,0 +1,76 @@
+"""Compiled vs Python-loop DynaBRO driver wall-clock (DESIGN.md §5).
+
+Times full ``run_dynabro`` (legacy per-round dispatch) against
+``run_dynabro_scan`` (whole loop in one chunked ``lax.scan``) on the
+quadratic testbed at T ∈ {64, 256}, steady state (prebuilt step / scan fn,
+one warmup run so jit caches are hot; the schedules repeat per seed so the
+warmup covers every level the timed run dispatches). Asserts the two drivers
+agree bitwise on the final iterate before timing — a benchmark that compares
+non-equivalent code is meaningless.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.mlmc import MLMCConfig
+from repro.core.robust_train import (
+    DynaBROConfig, make_dynabro_scan_fn, make_dynabro_step, run_dynabro,
+    run_dynabro_scan,
+)
+from repro.core.scenarios import make_quadratic_task
+from repro.core.switching import get_switcher
+from repro.optim.optimizers import sgd
+
+
+def _time(fn, iters: int):
+    fn()  # warmup: compiles + populates per-level jit caches
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(jax.tree.leaves(out[0]))
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run(T: int, m: int = 9, iters: int = 3, seed: int = 0):
+    task = make_quadratic_task()
+    cfg = DynaBROConfig(mlmc=MLMCConfig(T=T, m=m, V=3.0, kappa=1.0),
+                        aggregator="cwmed", delta=0.45, attack="sign_flip")
+    sampler = task.make_sampler(m)
+    opt = sgd(2e-2)
+    step = make_dynabro_step(task.grad_fn, cfg, opt)
+    scan_fn = make_dynabro_scan_fn(task.grad_fn, cfg, opt)
+
+    def legacy():
+        sw = get_switcher("periodic", m, n_byz=4, K=20, seed=seed)
+        return run_dynabro(task.grad_fn, task.params0, opt, cfg, sw, sampler,
+                           T, seed=seed, step=step)
+
+    def scan():
+        sw = get_switcher("periodic", m, n_byz=4, K=20, seed=seed)
+        return run_dynabro_scan(task.grad_fn, task.params0, opt, cfg, sw,
+                                sampler, T, seed=seed, scan_fn=scan_fn)
+
+    p_legacy = legacy()[0]
+    p_scan = scan()[0]
+    np.testing.assert_array_equal(np.asarray(p_legacy["x"]),
+                                  np.asarray(p_scan["x"]))
+    us_legacy = _time(legacy, iters)
+    us_scan = _time(scan, iters)
+    return us_legacy, us_scan
+
+
+def main(fast: bool = False):
+    rows = []
+    for T in (64, 256):
+        us_legacy, us_scan = run(T, iters=2 if fast else 3)
+        rows.append(f"scan_driver/python_loop_T{T},{us_legacy:.0f},")
+        rows.append(f"scan_driver/scan_T{T},{us_scan:.0f},"
+                    f"speedup={us_legacy / us_scan:.1f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

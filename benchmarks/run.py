@@ -21,6 +21,7 @@ MODULES = [
     "benchmarks.bench_history",        # Table 1
     "benchmarks.bench_mlmc",           # Lemma 3.1
     "benchmarks.bench_aggregators",    # kernels micro
+    "benchmarks.bench_scan_driver",    # compiled vs Python-loop driver
     "benchmarks.bench_momentum_fails",  # Fig 3/4 (App. E)
     "benchmarks.bench_periodic",       # Fig 1/5
     "benchmarks.bench_bernoulli",      # Fig 2/8

@@ -27,6 +27,30 @@ def sample_level(rng: np.random.Generator, j_max: int) -> int:
     return min(j, j_max + 1)  # j_max+1 encodes 'beyond cap' -> correction dropped
 
 
+def level_schedule(rng: np.random.Generator, j_max: int, T: int) -> np.ndarray:
+    """Host-side (T,) MLMC level schedule — the exact per-round sequence the
+    Python-loop driver draws, precomputed so the whole loop can run inside one
+    ``lax.scan`` (DESIGN.md §5). Entries lie in {1, …, j_max+1}."""
+    return np.array([sample_level(rng, j_max) for _ in range(T)], np.int32)
+
+
+def level_prefix(tree, n_units: int, n_total: int, axis: int = 0):
+    """Prefix-slice each leaf to the level-``n_units`` nested sub-batch of an
+    ``n_total``-unit batch along ``axis``.
+
+    The MLMC levels are *nested*: the level-(J−1) mini-batch is the first half
+    of the level-J mini-batch (DESIGN.md §3), so a level-n gradient reads the
+    first ``n/n_total`` prefix of the padded batch. Shared by the Mode B step
+    builder (axis 0 of the flattened local batch) and the scan driver's
+    ``lax.switch`` branches (axis 1 of the (m, n_max, …) stack)."""
+    def sl(x):
+        k = x.shape[axis] * n_units // n_total
+        idx = [slice(None)] * x.ndim
+        idx[axis] = slice(0, k)
+        return x[tuple(idx)]
+    return jax.tree.map(sl, tree)
+
+
 def universal_C(m: int, T: int) -> float:
     return math.sqrt(8.0 * math.log(16.0 * m * m * T))
 

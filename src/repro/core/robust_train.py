@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Callable, Dict, Optional
 
 import jax
@@ -22,7 +23,9 @@ import numpy as np
 
 from repro.core import attacks as attacks_lib
 from repro.core.aggregators import Aggregator, MFM, get_aggregator
-from repro.core.mlmc import MLMCConfig, mlmc_combine, sample_level
+from repro.core.mlmc import (
+    MLMCConfig, level_prefix, level_schedule, mlmc_combine, sample_level,
+)
 from repro.core.switching import Switcher
 from repro.optim.optimizers import Optimizer, apply_updates
 
@@ -47,10 +50,17 @@ def _per_worker_grads(grad_fn: GradFn, params, batches):
 
 
 def _attack_stack(cfg: DynaBROConfig, grads, masks, key):
-    """grads: (m, n, ...) leaves; masks: (n, m) bool -> attacked grads."""
+    """grads: (m, n, ...) leaves; masks: (n, m) bool -> attacked grads.
+
+    The per-computation key is ``fold_in(key, k)`` — a function of the
+    within-round index k alone, so the k-th computation draws the same key
+    whether the round runs at its exact batch size (legacy driver) or as the
+    prefix of an n_max-padded batch (scan driver).
+    """
     atk = attacks_lib.get_attack(cfg.attack, **(cfg.attack_kwargs or {}))
     swapped = jax.tree.map(lambda l: jnp.swapaxes(l, 0, 1), grads)  # (n, m, ...)
-    keys = jax.random.split(key, masks.shape[0])
+    keys = jax.vmap(lambda k: jax.random.fold_in(key, k))(
+        jnp.arange(masks.shape[0]))
     attacked = jax.vmap(lambda s, mk, k: atk(s, mk, key=k))(swapped, masks, keys)
     return jax.tree.map(lambda l: jnp.swapaxes(l, 0, 1), attacked)  # (m, n, ...)
 
@@ -64,6 +74,26 @@ def _aggregate(cfg: DynaBROConfig, stacked, n: int):
     return agg.tree(stacked)
 
 
+def _combine_levels(cfg: DynaBROConfig, grads, j: int):
+    """Aggregate the attacked (m, n, ...) stack at levels 0 / J-1 / J and
+    apply the MLMC combine — the one round body shared by the per-level
+    jitted step and every ``lax.switch`` branch of the scan driver, so the
+    two cannot diverge. ``j`` and the leaf batch size n are static."""
+    n = jax.tree.leaves(grads)[0].shape[1]
+    gbar_all = jax.tree.map(lambda l: l.mean(1), grads)  # level j: mean of n
+    g0_stack = jax.tree.map(lambda l: l[:, 0], grads)  # level 0: first sample
+    g0 = _aggregate(cfg, g0_stack, 1)
+    if cfg.use_mlmc and j >= 1 and j <= cfg.mlmc.j_max:
+        gh = jax.tree.map(lambda l: l[:, : n // 2].mean(1), grads)
+        gjm1 = _aggregate(cfg, gh, n // 2)
+        gj = _aggregate(cfg, gbar_all, n)
+        return mlmc_combine(g0, gjm1, gj, j, cfg.mlmc)
+    g, info = mlmc_combine(g0, None, None, cfg.mlmc.j_max + 1, cfg.mlmc)
+    if not cfg.use_mlmc:  # plain robust SGD on the full mini-batch
+        g = _aggregate(cfg, gbar_all, n)
+    return g, info
+
+
 def make_dynabro_step(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer):
     """Returns step(params, opt_state, batches, masks, key, j) jitted per level.
 
@@ -75,19 +105,7 @@ def make_dynabro_step(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer):
     def step(params, opt_state, batches, masks, key, j: int):
         grads = _per_worker_grads(grad_fn, params, batches)  # (m, n, ...)
         grads = _attack_stack(cfg, grads, masks, key)
-        n = masks.shape[0]
-        gbar_all = jax.tree.map(lambda l: l.mean(1), grads)  # level j: mean of n
-        g0_stack = jax.tree.map(lambda l: l[:, 0], grads)  # level 0: first sample
-        g0 = _aggregate(cfg, g0_stack, 1)
-        if cfg.use_mlmc and j >= 1 and j <= cfg.mlmc.j_max:
-            gh = jax.tree.map(lambda l: l[:, : n // 2].mean(1), grads)
-            gjm1 = _aggregate(cfg, gh, n // 2)
-            gj = _aggregate(cfg, gbar_all, n)
-            g, info = mlmc_combine(g0, gjm1, gj, j, cfg.mlmc)
-        else:
-            g, info = mlmc_combine(g0, None, None, cfg.mlmc.j_max + 1, cfg.mlmc)
-            if not cfg.use_mlmc:  # plain robust SGD on the full mini-batch
-                g = _aggregate(cfg, gbar_all, n)
+        g, info = _combine_levels(cfg, grads, j)
         updates, opt_state = opt.update(g, opt_state, params)
         params = apply_updates(params, updates)
         return params, opt_state, info
@@ -95,17 +113,16 @@ def make_dynabro_step(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer):
     return step
 
 
-def make_momentum_step(grad_fn: GradFn, cfg: DynaBROConfig, lr: float, beta: float):
-    """Worker-momentum baseline: attack on gradients feeding each worker's
-    momentum recursion (App. E semantics); server robustly aggregates
-    momentums. beta=0 recovers vanilla distributed SGD."""
+def _make_momentum_round(grad_fn: GradFn, cfg: DynaBROConfig, lr: float,
+                         beta: float):
+    """One worker-momentum round — shared by the jitted per-round step and
+    the scan driver's body, so the two cannot diverge."""
+    atk = attacks_lib.get_attack(cfg.attack, **(cfg.attack_kwargs or {}))
 
-    @jax.jit
-    def step(params, worker_m, batches, mask, key):
+    def round_fn(params, worker_m, batches, mask, key):
         # batches: tree leading (m,) unit batches; mask: (m,)
         grads = jax.vmap(grad_fn, in_axes=(None, 0))(params, batches)
-        grads = attacks_lib.get_attack(cfg.attack, **(cfg.attack_kwargs or {}))(
-            grads, mask, key=key)
+        grads = atk(grads, mask, key=key)
         worker_m = jax.tree.map(
             lambda mm, gg: beta * mm + (1.0 - beta) * gg.astype(jnp.float32),
             worker_m, grads)
@@ -113,7 +130,14 @@ def make_momentum_step(grad_fn: GradFn, cfg: DynaBROConfig, lr: float, beta: flo
         params = apply_updates(params, jax.tree.map(lambda x: lr * x, agg))
         return params, worker_m
 
-    return step
+    return round_fn
+
+
+def make_momentum_step(grad_fn: GradFn, cfg: DynaBROConfig, lr: float, beta: float):
+    """Worker-momentum baseline: attack on gradients feeding each worker's
+    momentum recursion (App. E semantics); server robustly aggregates
+    momentums. beta=0 recovers vanilla distributed SGD."""
+    return jax.jit(_make_momentum_round(grad_fn, cfg, lr, beta))
 
 
 # -------------------------------------------------------------- driver
@@ -138,10 +162,16 @@ def run_dynabro(
     seed: int = 0,
     eval_fn: Optional[Callable[[Any, int], Dict[str, float]]] = None,
     eval_every: int = 0,
+    step=None,
 ):
-    """Run Algorithm 2 for T rounds. Returns (params, logs, evals)."""
+    """Run Algorithm 2 for T rounds. Returns (params, logs, evals).
+
+    Reference Python-loop implementation — one compiled step dispatch per
+    round; ``run_dynabro_scan`` is the compiled equivalent the parity suite
+    checks against this. Pass a prebuilt ``step`` (from ``make_dynabro_step``)
+    to reuse its jit cache across runs."""
     rng = np.random.default_rng(seed)
-    step = make_dynabro_step(grad_fn, cfg, opt)
+    step = step or make_dynabro_step(grad_fn, cfg, opt)
     opt_state = opt.init(params)
     logs, evals = [], []
     for t in range(T):
@@ -171,10 +201,11 @@ def run_momentum(
     seed: int = 0,
     eval_fn: Optional[Callable[[Any, int], Dict[str, float]]] = None,
     eval_every: int = 0,
+    step=None,
 ):
     """Worker-momentum / vanilla-SGD baseline driver (same budget accounting
     is done by the caller: one unit batch per worker per round)."""
-    step = make_momentum_step(grad_fn, cfg, lr, beta)
+    step = step or make_momentum_step(grad_fn, cfg, lr, beta)
     worker_m = jax.tree.map(
         lambda p: jnp.zeros((switcher.m,) + p.shape, jnp.float32), params)
     evals = []
@@ -186,3 +217,295 @@ def run_momentum(
         if eval_fn and eval_every and (t + 1) % eval_every == 0:
             evals.append((t + 1, eval_fn(params, t)))
     return params, evals
+
+
+# ----------------------------------------------- compiled (lax.scan) drivers
+#
+# The Python-loop drivers above dispatch one compiled step per round and
+# rebuild masks/batches on the host — O(T) dispatch overhead. The scan
+# drivers precompute the full round schedule host-side (seeded identically,
+# so they are round-for-round equivalent) and run the whole loop inside
+# chunked ``lax.scan`` segments. DESIGN.md §5.
+
+
+def _np_prng_keys(seeds) -> np.ndarray:
+    """(T, 2) uint32 raw keys, entry i == ``jax.random.PRNGKey(seeds[i])``.
+
+    Built with numpy (threefry seed layout: [s >> 32, s & 0xffffffff]) to
+    avoid T per-round host->device dispatches; a probe key is checked against
+    the runtime and on mismatch (non-default PRNG impl) we fall back to the
+    per-seed PRNGKey loop.
+    """
+    seeds = np.asarray(seeds, np.int64)
+    keys = np.stack([(seeds >> 32).astype(np.uint32),
+                     (seeds & np.int64(0xFFFFFFFF)).astype(np.uint32)], -1)
+    probe = np.asarray(jax.random.PRNGKey(int(seeds[0])))
+    if probe.shape == keys[0].shape and (probe == keys[0]).all():
+        return keys
+    return np.stack([np.asarray(jax.random.PRNGKey(int(s))) for s in seeds])
+
+
+def _pad_units(tree, n_max: int, axis: int):
+    """Pad the within-round unit axis to n_max by repeating the first unit
+    (branch j only ever reads the first 2^j units, so pad values are inert)."""
+    def pad(l):
+        n = l.shape[axis]
+        if n == n_max:
+            return l
+        idx = [slice(None)] * l.ndim
+        idx[axis] = slice(0, 1)
+        reps = list(l.shape)
+        reps[axis] = n_max - n
+        return jnp.concatenate(
+            [l, jnp.broadcast_to(l[tuple(idx)], tuple(reps))], axis=axis)
+    return jax.tree.map(pad, tree)
+
+
+def _batch_schedule(sample_batches, tn, n_max: int, vectorize: bool = True):
+    """Stack per-round batches into an (L, m, n_max, ...) padded schedule.
+
+    ``tn`` is the segment's [(t, n_t), ...]; each round calls
+    ``sample_batches(t, n_t)`` at the exact per-round batch size of the legacy
+    driver (the sampler's output may depend on n, so padding must happen
+    *after* sampling to preserve parity). Rounds are grouped by level and the
+    sampler is vmapped over t, so host-side cost is O(#levels) dispatches
+    instead of O(T); a probe round is compared against the direct call and any
+    sampler that is not traceable in t — or ignores a traced t — falls back to
+    the per-round loop.
+
+    The vectorized path requires the sampler to be a pure function of (t, n):
+    the vmap trace and the probe each invoke it extra times, which would
+    advance any hidden per-call state before the fallback replays the rounds.
+    Such samplers must run with ``vectorize=False`` — the per-round loop
+    calls the sampler exactly once per round, in round order, like the legacy
+    driver.
+    """
+    if vectorize:
+        try:
+            groups: Dict[int, list] = {}
+            for i, (t, n) in enumerate(tn):
+                groups.setdefault(int(n), []).append((i, int(t)))
+            out = None
+            for n, its in sorted(groups.items()):
+                idx = jnp.asarray(np.array([i for i, _ in its], np.int32))
+                ts = jnp.asarray(np.array([t for _, t in its], np.int32))
+                bt = jax.vmap(lambda t: sample_batches(t, n))(ts)
+                bt = _pad_units(bt, n_max, axis=2)
+                if out is None:
+                    out = jax.tree.map(
+                        lambda l: jnp.zeros((len(tn),) + l.shape[1:], l.dtype),
+                        bt)
+                out = jax.tree.map(lambda o, l: o.at[idx].set(l), out, bt)
+            n_probe, its_probe = max(groups.items(), key=lambda kv: len(kv[1]))
+            i0, t0 = its_probe[-1]
+            want = _pad_units(sample_batches(t0, n_probe), n_max, axis=1)
+            got = jax.tree.map(lambda l: l[i0], out)
+            if not all(bool(jnp.array_equal(a, b)) for a, b in
+                       zip(jax.tree.leaves(got), jax.tree.leaves(want))):
+                raise ValueError("vectorized sampler disagrees with direct call")
+            return out
+        except (TypeError, ValueError) as e:
+            # TypeError: sampler not traceable in t (jax tracer-leak errors
+            # subclass it); ValueError: probe mismatch / host-side shape
+            # complaints. Anything else (OOM, internal bugs) propagates —
+            # silently reverting to O(T) dispatch would mask it.
+            warnings.warn(
+                f"run_*_scan: per-round batch sampling fallback ({e}); pass "
+                "vectorize_batches=False to silence", RuntimeWarning)
+    rows = [_pad_units(sample_batches(t, int(n)), n_max, axis=1)
+            for t, n in tn]
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *rows)
+
+
+def _segment_bounds(T: int, eval_every: int, chunk: int):
+    stops = {T}
+    if eval_every:
+        stops |= set(range(eval_every, T + 1, eval_every))
+    if chunk and chunk > 0:
+        stops |= set(range(chunk, T + 1, chunk))
+    return sorted(stops)
+
+
+def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer):
+    """Build the compiled DynaBRO round loop (DESIGN.md §5).
+
+    Returns a jitted ``seg((params, opt_state), xs)`` running ``lax.scan``
+    over a round schedule ``xs = (level, batches, masks, keys)`` (leading time
+    axis; batches padded to n_max units, masks (n_max, m) per round). The scan
+    body dispatches the host-sampled MLMC level via ``lax.switch`` whose
+    branch j slices the level's nested batch prefix, applies the attack
+    in-graph, robust-aggregates levels 0/J-1/J and applies the fail-safe
+    combine — numerically identical to ``make_dynabro_step`` at that level.
+    Reusable across ``run_dynabro_scan`` calls (jit caches per segment
+    length); emits stacked (failsafe_ok, corr_norm) per round.
+    """
+    j_max = cfg.mlmc.j_max
+    n_max = 2 ** j_max if cfg.use_mlmc else 1
+
+    def level_branch(j: int):
+        n = 2 ** j if (cfg.use_mlmc and 1 <= j <= j_max) else 1
+
+        def branch(operand):
+            params, batches, masks, key = operand
+            b = level_prefix(batches, n, n_max, axis=1)
+            grads = _per_worker_grads(grad_fn, params, b)  # (m, n, ...)
+            grads = _attack_stack(cfg, grads, masks[:n], key)
+            g, info = _combine_levels(cfg, grads, j)
+            return g, info["failsafe_ok"], info["corr_norm"]
+
+        return branch
+
+    branches = ([level_branch(j) for j in range(1, j_max + 2)]
+                if cfg.use_mlmc else [level_branch(0)])
+
+    def body(carry, xs):
+        params, opt_state = carry
+        level, batches, masks, key = xs
+        operand = (params, batches, masks, key)
+        if cfg.use_mlmc:
+            g, ok, dn = jax.lax.switch(level - 1, branches, operand)
+        else:
+            g, ok, dn = branches[0](operand)
+        updates, opt_state = opt.update(g, opt_state, params)
+        params = apply_updates(params, updates)
+        return (params, opt_state), (ok, dn)
+
+    @jax.jit
+    def seg(carry, xs):
+        return jax.lax.scan(body, carry, xs)
+
+    return seg
+
+
+def run_dynabro_scan(
+    grad_fn: GradFn,
+    params,
+    opt: Optimizer,
+    cfg: DynaBROConfig,
+    switcher: Switcher,
+    sample_batches: Callable[[int, int], Any],
+    T: int,
+    seed: int = 0,
+    eval_fn: Optional[Callable[[Any, int], Dict[str, float]]] = None,
+    eval_every: int = 0,
+    chunk: int = 0,
+    scan_fn=None,
+    vectorize_batches: bool = True,
+):
+    """Compiled drop-in for ``run_dynabro``: same signature, same returns,
+    round-for-round equivalent schedules (level RNG stream, switching masks,
+    per-round PRNG keys, per-round batch draws).
+
+    ``chunk`` bounds how many rounds of padded batches are resident at once
+    (0 = whole segments between eval points); ``scan_fn`` accepts a prebuilt
+    ``make_dynabro_scan_fn`` result for cross-run jit reuse. Pass
+    ``vectorize_batches=False`` for samplers with hidden per-call state —
+    the sampler is then called exactly once per round, in round order, like
+    the legacy driver (see ``_batch_schedule``).
+    """
+    if T <= 0:
+        return params, [], []
+    rng = np.random.default_rng(seed)
+    j_max = cfg.mlmc.j_max
+    if cfg.use_mlmc:
+        levels = level_schedule(rng, j_max, T)
+        n_max = 2 ** j_max
+        ns = np.where(levels <= j_max, 2 ** levels.astype(np.int64), 1)
+    else:
+        levels = np.zeros(T, np.int32)
+        n_max = 1
+        ns = np.ones(T, np.int64)
+    if type(switcher).within_round is Switcher.within_round:
+        masks = switcher.mask_schedule(T, n_max)  # (T, n_max, m)
+    else:
+        # stateful within-round strategies: replay the legacy driver's exact
+        # call sequence (only the n_t computations of each round); pad rows
+        # are never read by the level branches
+        masks = np.zeros((T, n_max, switcher.m), bool)
+        for t in range(T):
+            for k in range(int(ns[t])):
+                masks[t, k] = switcher.within_round(t, k)
+    keys = _np_prng_keys(seed * 100_003 + np.arange(T, dtype=np.int64))
+    scan_fn = scan_fn or make_dynabro_scan_fn(grad_fn, cfg, opt)
+    carry = (params, opt.init(params))
+    masks_dev, keys_dev = jnp.asarray(masks), jnp.asarray(keys)
+    levels_dev = jnp.asarray(levels)
+
+    oks, evals = [], []
+    a = 0
+    for b in _segment_bounds(T, eval_every if eval_fn else 0, chunk):
+        batches = _batch_schedule(
+            sample_batches, list(zip(range(a, b), ns[a:b])), n_max,
+            vectorize=vectorize_batches)
+        xs = (levels_dev[a:b], batches, masks_dev[a:b], keys_dev[a:b])
+        carry, (ok, _dn) = scan_fn(carry, xs)
+        oks.append(np.asarray(ok))
+        if eval_fn and eval_every and b % eval_every == 0:
+            evals.append((b, eval_fn(carry[0], b - 1)))
+        a = b
+    ok_all = np.concatenate(oks) if oks else np.zeros(0, bool)
+
+    logs = []
+    for t in range(T):
+        j, n = int(levels[t]), int(ns[t])
+        logs.append(RoundLog(j, bool(ok_all[t]), int(masks[t, 0].sum()),
+                             1 + (n + n // 2 if j >= 1 else 0)))
+    return carry[0], logs, evals
+
+
+def make_momentum_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, lr: float,
+                          beta: float):
+    """Compiled worker-momentum baseline loop: the shared round body of
+    ``make_momentum_step``, scanned over (batches, masks, keys) schedules."""
+    round_fn = _make_momentum_round(grad_fn, cfg, lr, beta)
+
+    def body(carry, xs):
+        batch, mask, key = xs
+        return round_fn(carry[0], carry[1], batch, mask, key), ()
+
+    @jax.jit
+    def seg(carry, xs):
+        return jax.lax.scan(body, carry, xs)
+
+    return seg
+
+
+def run_momentum_scan(
+    grad_fn: GradFn,
+    params,
+    cfg: DynaBROConfig,
+    switcher: Switcher,
+    sample_batches: Callable[[int, int], Any],
+    T: int,
+    lr: float,
+    beta: float,
+    seed: int = 0,
+    eval_fn: Optional[Callable[[Any, int], Dict[str, float]]] = None,
+    eval_every: int = 0,
+    chunk: int = 0,
+    scan_fn=None,
+    vectorize_batches: bool = True,
+):
+    """Compiled drop-in for ``run_momentum`` (same signature + chunking)."""
+    if T <= 0:
+        return params, []
+    masks = jnp.asarray(np.stack([switcher.mask(t) for t in range(T)]))  # (T, m)
+    keys = jnp.asarray(
+        _np_prng_keys(seed * 77_003 + np.arange(T, dtype=np.int64)))
+    scan_fn = scan_fn or make_momentum_scan_fn(grad_fn, cfg, lr, beta)
+    worker_m = jax.tree.map(
+        lambda p: jnp.zeros((switcher.m,) + p.shape, jnp.float32), params)
+    carry = (params, worker_m)
+
+    evals = []
+    a = 0
+    for b in _segment_bounds(T, eval_every if eval_fn else 0, chunk):
+        sched = _batch_schedule(sample_batches,
+                                [(t, 1) for t in range(a, b)], 1,
+                                vectorize=vectorize_batches)
+        batches = jax.tree.map(lambda l: l[:, :, 0], sched)  # (L, m, ...)
+        carry, _ = scan_fn(carry, (batches, masks[a:b], keys[a:b]))
+        if eval_fn and eval_every and b % eval_every == 0:
+            evals.append((b, eval_fn(carry[0], b - 1)))
+        a = b
+    return carry[0], evals

@@ -1,0 +1,168 @@
+"""Scenario-matrix runner: attack × switcher × aggregator sweeps through the
+compiled ``lax.scan`` driver (DESIGN.md §5).
+
+Large-`T` grids are the workload the paper's Section 6 figures need (and what
+the ROADMAP's many-scenario coverage goal means): every cell is one full
+DynaBRO (or worker-momentum baseline) run, so the per-round dispatch cost of
+the Python-loop drivers multiplies across the grid. ``run_matrix`` drives
+every cell through ``run_dynabro_scan`` and returns a tidy list-of-dicts
+results table; ``format_table`` pivots it for terminal display.
+
+Used by ``examples/attack_gallery.py`` and ``benchmarks/bench_scan_driver.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Mapping, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mlmc import MLMCConfig
+from repro.core.robust_train import (
+    DynaBROConfig, run_dynabro, run_dynabro_scan,
+)
+from repro.core.switching import get_switcher
+from repro.optim.optimizers import Optimizer, sgd
+
+# grid entries: a bare name or (name, kwargs)
+Spec = Union[str, Tuple[str, Mapping[str, Any]]]
+
+
+def _norm(spec: Spec) -> Tuple[str, Dict[str, Any]]:
+    if isinstance(spec, str):
+        return spec, {}
+    name, kw = spec
+    return name, dict(kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One cell of the sweep grid."""
+    attack: str
+    switcher: str
+    aggregator: str
+    attack_kwargs: Tuple[Tuple[str, Any], ...] = ()
+    switcher_kwargs: Tuple[Tuple[str, Any], ...] = ()
+
+    @property
+    def name(self) -> str:
+        return f"{self.attack}|{self.switcher}|{self.aggregator}"
+
+
+def scenario_grid(attacks: Sequence[Spec], switchers: Sequence[Spec],
+                  aggregators: Sequence[str]) -> List[Scenario]:
+    """Cartesian product of the three grid axes."""
+    out = []
+    for a in attacks:
+        an, akw = _norm(a)
+        for s in switchers:
+            sn, skw = _norm(s)
+            for g in aggregators:
+                out.append(Scenario(an, sn, g, tuple(sorted(akw.items())),
+                                    tuple(sorted(skw.items()))))
+    return out
+
+
+@dataclasses.dataclass
+class Task:
+    """A Mode-A testbed: initial params, per-unit grad fn, batch sampler
+    factory (m -> sample_batches), and a scalar objective for reporting."""
+    params0: Any
+    grad_fn: Callable[[Any, Any], Any]
+    make_sampler: Callable[[int], Callable[[int, int], Any]]
+    objective: Callable[[Any], float]
+
+
+def make_quadratic_task(sigma: float = 0.5, seed: int = 0) -> Task:
+    """The paper's 2D quadratic testbed (Appendix E): f(x) = ½ xᵀAx, exact
+    optimum 0, per-unit gradients perturbed by N(0, σ²). Shared by the
+    examples, the scan-driver benchmark and the parity tests."""
+    A = jnp.array([[2.0, 1.0], [1.0, 2.0]])
+    params0 = {"x": jnp.array([3.0, -2.0])}
+
+    def grad_fn(params, unit_key):
+        return {"x": A @ params["x"] + sigma * jax.random.normal(unit_key, (2,))}
+
+    def make_sampler(m):
+        def sample(t, n):
+            keys = jax.random.split(
+                jax.random.fold_in(jax.random.PRNGKey(seed), t), m * n)
+            return keys.reshape(m, n, *keys.shape[1:])
+        return sample
+
+    def objective(p):
+        return float(0.5 * p["x"] @ A @ p["x"])
+
+    return Task(params0, grad_fn, make_sampler, objective)
+
+
+def run_scenario(
+    task: Task,
+    sc: Scenario,
+    *,
+    m: int,
+    T: int,
+    V: float,
+    make_opt: Callable[[], Optimizer] = lambda: sgd(2e-2),
+    delta: float = 0.25,
+    kappa: float = 1.0,
+    j_cap: int = 7,
+    use_mlmc: bool = True,
+    seed: int = 0,
+    driver: str = "scan",
+    chunk: int = 0,
+) -> Dict[str, Any]:
+    """Run one grid cell end to end; returns a tidy results row."""
+    cfg = DynaBROConfig(
+        mlmc=MLMCConfig(T=T, m=m, V=V,
+                        option=2 if sc.aggregator == "mfm" else 1,
+                        kappa=kappa, j_cap=j_cap),
+        aggregator=sc.aggregator, delta=delta, attack=sc.attack,
+        attack_kwargs=dict(sc.attack_kwargs) or None, use_mlmc=use_mlmc)
+    switcher = get_switcher(sc.switcher, m, seed=seed,
+                            **dict(sc.switcher_kwargs))
+    run = run_dynabro_scan if driver == "scan" else run_dynabro
+    kw = {"chunk": chunk} if driver == "scan" else {}
+    t0 = time.perf_counter()
+    params, logs, _ = run(task.grad_fn, task.params0, make_opt(), cfg,
+                          switcher, task.make_sampler(m), T, seed=seed, **kw)
+    jax.block_until_ready(jax.tree.leaves(params))
+    wall = time.perf_counter() - t0
+    return {
+        "attack": sc.attack, "switcher": sc.switcher,
+        "aggregator": sc.aggregator, "driver": driver, "m": m, "T": T,
+        "final": task.objective(params),
+        "failsafe_trips": sum(1 for l in logs if l.level >= 1 and not l.failsafe_ok),
+        "mean_level": sum(l.level for l in logs) / max(len(logs), 1),
+        "cost": sum(l.cost for l in logs),
+        "wall_s": wall,
+    }
+
+
+def run_matrix(
+    task: Task,
+    scenarios: Sequence[Scenario],
+    *,
+    m: int,
+    T: int,
+    V: float,
+    **kw,
+) -> List[Dict[str, Any]]:
+    """Sweep every scenario through the compiled driver -> results table."""
+    return [run_scenario(task, sc, m=m, T=T, V=V, **kw) for sc in scenarios]
+
+
+def format_table(rows: Sequence[Dict[str, Any]], value: str = "final",
+                 row_key: str = "aggregator", col_key: str = "attack") -> str:
+    """Pivot a results table for terminal display (one line per row_key)."""
+    cols = list(dict.fromkeys(r[col_key] for r in rows))
+    lines = [f"{'':12s}" + "".join(f"{c:>12s}" for c in cols)]
+    for rk in dict.fromkeys(r[row_key] for r in rows):
+        cells = []
+        for c in cols:
+            sel = [r[value] for r in rows if r[row_key] == rk and r[col_key] == c]
+            cells.append(f"{sel[0]:12.4f}" if sel else f"{'—':>12s}")
+        lines.append(f"{rk:12s}" + "".join(cells))
+    return "\n".join(lines)

@@ -24,6 +24,48 @@ class Switcher:
         """Mask at the k-th gradient computation of round t (default: static)."""
         return self.mask(t)
 
+    def mask_schedule(self, T: int, n_max: int = 1) -> np.ndarray:
+        """Full identity schedule as a (T, n_max, m) bool tensor with entry
+        ``[t, k] == within_round(t, k)`` — the device-side input of the
+        compiled ``lax.scan`` driver (DESIGN.md §5). ``within_round`` is
+        assumed to be a pure function of (t, k); strategies whose masks carry
+        hidden per-call state must keep it in ``mask`` (as ``Bernoulli``
+        does, idempotently), or the schedule cannot be precomputed.
+
+        Strategies that only switch *between* rounds supply a vectorized
+        (T, m) fast path via ``_mask_schedule_rounds``; it is broadcast over
+        the within-round axis. The fast path is bypassed when it cannot be
+        trusted for this instance: when ``within_round`` is overridden, or
+        when ``mask`` is overridden below the class that provided the fast
+        path (the parent's vectorization knows nothing of the new masks)."""
+        if T <= 0:
+            return np.zeros((0, n_max, self.m), bool)
+        cls = type(self)
+
+        def defining(name):
+            for c in cls.__mro__:
+                if name in c.__dict__:
+                    return c
+            return Switcher
+
+        if (cls.within_round is Switcher.within_round
+                and issubclass(defining("_mask_schedule_rounds"),
+                               defining("mask"))):
+            rounds = self._mask_schedule_rounds(T)
+            if rounds is not None:
+                return np.broadcast_to(rounds[:, None, :],
+                                       (T, n_max, self.m)).copy()
+        out = np.empty((T, n_max, self.m), bool)
+        for t in range(T):
+            for k in range(n_max):
+                out[t, k] = self.within_round(t, k)
+        return out
+
+    def _mask_schedule_rounds(self, T: int):
+        """Vectorized (T, m) between-round schedule, or None for the generic
+        per-(t, k) loop."""
+        return None
+
     def switch_rounds(self, T: int) -> int:
         """|rounds with a different mask than the previous round| (≈ |τ_d|
         in the between-round sense used by the experiments)."""
@@ -48,6 +90,9 @@ class Static(Switcher):
     def mask(self, t):
         return self._mask
 
+    def _mask_schedule_rounds(self, T):
+        return np.broadcast_to(self._mask, (T, self.m))
+
 
 class Periodic(Switcher):
     """Periodic(K): resample the δm Byzantine workers every K rounds."""
@@ -66,6 +111,11 @@ class Periodic(Switcher):
             mask[rng.choice(self.m, self.n_byz, replace=False)] = True
             self._cache[e] = mask
         return self._cache[e]
+
+    def _mask_schedule_rounds(self, T):
+        epochs = np.arange(T) // self.K
+        per_epoch = np.stack([self.mask(e * self.K) for e in range(epochs[-1] + 1)])
+        return per_epoch[epochs]
 
 
 class Bernoulli(Switcher):
@@ -96,6 +146,11 @@ class Bernoulli(Switcher):
         self._advance(t)
         return self._until > t
 
+    def _mask_schedule_rounds(self, T):
+        # inherently sequential (each round's draws depend on who is already
+        # infected), but one row per round — the n_max axis is broadcast
+        return np.stack([self.mask(t) for t in range(T)])
+
 
 class MomentumTailored(Switcher):
     """Appendix E: rotate the single Byzantine worker among 3 groups, once per
@@ -115,6 +170,12 @@ class MomentumTailored(Switcher):
         hi = (g + 1) * self.m // 3
         mask[lo:hi] = True
         return mask
+
+    def _mask_schedule_rounds(self, T):
+        g = (np.arange(T) % self.period) // self.third % 3  # (T,) group index
+        ranks = np.arange(self.m)
+        lo, hi = g * self.m // 3, (g + 1) * self.m // 3
+        return (ranks[None, :] >= lo[:, None]) & (ranks[None, :] < hi[:, None])
 
 
 def get_switcher(name: str, m: int, seed: int = 0, **kw) -> Switcher:

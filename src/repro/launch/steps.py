@@ -267,7 +267,7 @@ def build_mlmc_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
     MLMC combine guarded by the fail-safe event E_t (Eq. 6). ‖ĝ^J − ĝ^{J−1}‖
     is a global norm assembled with one scalar psum over the worker axes.
     """
-    from repro.core.mlmc import mlmc_combine
+    from repro.core.mlmc import level_prefix, mlmc_combine
     from repro.core.sharded import tree_sq_norm
 
     waxes = worker_axes(mesh)
@@ -285,7 +285,7 @@ def build_mlmc_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
 
     def _slice_batch(batch, n_units):
         # local (per-worker) batch holds (B/m)·2^j rows; level-n slice = prefix
-        return jax.tree.map(lambda x: x[: x.shape[0] * n_units // (2 ** j)], batch)
+        return level_prefix(batch, n_units, 2 ** j, axis=0)
 
     def step_local(params, opt_state, batch, maskf, widx):
         with scan_compat.unrolled_scans(_LEGACY_PARTIAL_MANUAL):

@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hyp import given, settings, st  # hypothesis, or offline fallback
 
 from repro.core import attacks as atk
 from repro.core.switching import Bernoulli, MomentumTailored, Periodic, Static, get_switcher
@@ -103,3 +104,122 @@ def test_get_switcher_registry():
                      ("momentum_tailored", {"alpha": 0.1})]:
         sw = get_switcher(name, 8, **kw)
         assert sw.mask(0).shape == (8,)
+
+
+# ------------------------------------------- switching properties (hypothesis)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(4, 24), st.integers(0, 10), st.integers(0, 1000))
+def test_prop_static_fixed_count_and_no_switches(m, seed, T0):
+    n_byz = seed % (m + 1)  # any feasible count, including 0 and m
+    sw = Static(m, n_byz, seed=seed)
+    assert sw.mask(T0).sum() == n_byz
+    assert sw.switch_rounds(50) == 0
+    for t in (0, 7, T0):
+        assert (sw.mask(t) == sw.mask(0)).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(4, 24), st.integers(1, 12), st.integers(0, 10))
+def test_prop_periodic_count_and_switch_rounds(m, K, seed):
+    n_byz = 1 + seed % (m - 1)
+    sw = Periodic(m, n_byz, K=K, seed=seed)
+    T = 6 * K
+    prev = None
+    for t in range(T):
+        cur = sw.mask(t)
+        assert cur.sum() == n_byz  # exactly n_byz True every round
+        if prev is not None and not (cur == prev).all():
+            assert t % K == 0, f"switched mid-epoch at t={t}, K={K}"
+        prev = cur
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(4, 20), st.integers(1, 4), st.integers(0, 10))
+def test_prop_mask_schedule_equals_within_round(m, n_max_log, seed):
+    n_max = 2 ** n_max_log
+    T = 20
+    for make in (lambda: Static(m, m // 3, seed=seed),
+                 lambda: Periodic(m, m // 3 + 1, K=4, seed=seed),
+                 lambda: Bernoulli(m, p=0.2, D=3, delta_max=0.5, seed=seed),
+                 lambda: MomentumTailored(m, alpha=0.21, seed=seed)):
+        sched = make().mask_schedule(T, n_max)
+        ref = make()
+        assert sched.shape == (T, n_max, m)
+        for t in range(T):
+            for k in range(n_max):
+                np.testing.assert_array_equal(
+                    sched[t, k], ref.within_round(t, k),
+                    err_msg=f"{type(ref).__name__} t={t} k={k}")
+
+
+def test_mask_schedule_empty_T():
+    for sw in (Static(6, 2), Periodic(6, 2, K=3),
+               Bernoulli(6, p=0.1, D=3, delta_max=0.5), MomentumTailored(6, 0.2)):
+        assert sw.mask_schedule(0, 4).shape == (0, 4, 6)
+
+
+def test_mask_schedule_subclass_overriding_mask_bypasses_parent_fast_path():
+    """A subclass overriding mask() must not inherit the parent's vectorized
+    schedule (which knows nothing of the new masks)."""
+
+    class Drifting(Static):
+        def mask(self, t):
+            return np.roll(self._mask, t)
+
+    sw = Drifting(7, 3, seed=2)
+    sched = sw.mask_schedule(12, 2)
+    ref = Drifting(7, 3, seed=2)
+    for t in range(12):
+        for k in range(2):
+            np.testing.assert_array_equal(sched[t, k], ref.within_round(t, k))
+
+
+def test_mask_schedule_generic_fallback_within_round():
+    """A custom within-round strategy goes through the generic loop."""
+
+    class Alternating(Static):
+        def within_round(self, t, k):
+            return self._mask if k % 2 == 0 else ~self._mask
+
+    sw = Alternating(6, 2, seed=0)
+    sched = sw.mask_schedule(5, 4)
+    np.testing.assert_array_equal(sched[:, 0], np.broadcast_to(sw._mask, (5, 6)))
+    np.testing.assert_array_equal(sched[:, 1], np.broadcast_to(~sw._mask, (5, 6)))
+
+
+# ------------------------------------------------- attack invariances
+
+
+def _mixed_stack(m=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(size=(m, 3, 4)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(m, 5)).astype(np.float32)),
+    }
+
+
+@pytest.mark.parametrize("name", sorted(atk.ATTACKS))
+def test_attack_all_false_mask_is_noop(name):
+    s = _mixed_stack()
+    out = atk.get_attack(name)(s, jnp.zeros(8, bool), key=jax.random.PRNGKey(0))
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("name", sorted(atk.ATTACKS))
+@pytest.mark.parametrize("mask", [
+    [True] + [False] * 7,
+    [True, False] * 4,
+    [False] * 4 + [True] * 4,
+])
+def test_attack_honest_rows_bit_identical(name, mask):
+    s = _mixed_stack(seed=3)
+    mask = jnp.asarray(mask)
+    out = atk.get_attack(name)(s, mask, key=jax.random.PRNGKey(1))
+    honest = np.flatnonzero(~np.asarray(mask))
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a)[honest],
+                                      np.asarray(b)[honest],
+                                      err_msg=f"{name} perturbed honest rows")

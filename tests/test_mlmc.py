@@ -5,9 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hyp import given, settings, st  # hypothesis, or offline fallback
 
 from repro.core.mlmc import (
-    MLMCConfig, expected_cost, mlmc_combine, sample_level, tree_norm, universal_C,
+    MLMCConfig, expected_cost, level_prefix, level_schedule, mlmc_combine,
+    sample_level, tree_norm, universal_C,
 )
 
 
@@ -112,3 +114,66 @@ def test_universal_constant():
 def test_tree_norm():
     t = {"a": jnp.ones((3,)), "b": jnp.full((4,), 2.0)}
     np.testing.assert_allclose(float(tree_norm(t)), math.sqrt(3 + 16), rtol=1e-6)
+
+
+# --------------------------------------------- properties (hypothesis)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(4, 4096), st.integers(2, 64), st.floats(0.1, 10.0),
+       st.integers(1, 2))
+def test_prop_threshold_strictly_decreasing(T, m, V, option):
+    cfg = MLMCConfig(T=T, m=m, V=V, option=option, kappa=0.7)
+    th = [float(cfg.threshold(j)) for j in range(1, cfg.j_cap + 2)]
+    assert all(a > b for a, b in zip(th, th[1:])), th
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 6), st.integers(0, 100))
+def test_prop_combine_reduces_to_g0_on_trip_or_overflow(j, seed):
+    """mlmc_combine must return ĝ⁰ *exactly* when the fail-safe trips (the
+    2^J correction is zeroed, not merely damped) and when J exceeds the cap."""
+    rng = np.random.default_rng(seed)
+    cfg = MLMCConfig(T=64, m=8, V=1e-6, kappa=1.0)  # V→0: any diff trips E_t
+    g0 = {"a": jnp.asarray(rng.normal(size=3).astype(np.float32))}
+    gjm1 = {"a": jnp.asarray(rng.normal(size=3).astype(np.float32))}
+    gj = {"a": jnp.asarray(rng.normal(size=3).astype(np.float32) + 1.0)}
+    j = min(j, cfg.j_max)
+    g, info = mlmc_combine(g0, gjm1, gj, j, cfg)
+    assert not bool(info["failsafe_ok"])
+    np.testing.assert_array_equal(np.asarray(g["a"]), np.asarray(g0["a"]))
+    # beyond the cap the correction is dropped regardless of the threshold
+    g, info = mlmc_combine(g0, None, None, cfg.j_max + 1, cfg)
+    assert bool(info["failsafe_ok"])
+    np.testing.assert_array_equal(np.asarray(g["a"]), np.asarray(g0["a"]))
+
+
+def test_level_schedule_matches_legacy_stream_and_geometric():
+    """The precomputed schedule is the exact per-round sample_level stream,
+    and its empirical law is Geom(1/2) truncated at j_max+1."""
+    T, j_max = 40_000, 9
+    sched = level_schedule(np.random.default_rng(0), j_max, T)
+    ref_rng = np.random.default_rng(0)
+    assert [int(x) for x in sched[:200]] == [
+        sample_level(ref_rng, j_max) for _ in range(200)]
+    assert sched.min() >= 1 and sched.max() <= j_max + 1
+    for j in (1, 2, 3, 4):
+        frac = float(np.mean(sched == j))
+        assert abs(frac - 2.0 ** -j) < 0.02, (j, frac)
+    # truncated tail: P(J > j_max) = 2^-j_max
+    tail = float(np.mean(sched == j_max + 1))
+    assert abs(tail - 2.0 ** -j_max) < 0.02
+
+
+def test_level_prefix_nested_slices():
+    batch = {"x": jnp.arange(24).reshape(2, 12), "y": jnp.arange(12)}
+    half = level_prefix(batch, 2, 4, axis=0)
+    np.testing.assert_array_equal(np.asarray(half["y"]), np.arange(6))
+    assert half["x"].shape == (1, 12)
+    stack = {"x": jnp.arange(24).reshape(2, 12), "z": jnp.ones((2, 12, 3))}
+    cols = level_prefix(stack, 1, 4, axis=1)
+    assert cols["x"].shape == (2, 3) and cols["z"].shape == (2, 3, 3)
+    # nesting: the level-(J-1) prefix is a prefix of the level-J prefix
+    lo = level_prefix(stack, 2, 4, axis=1)
+    np.testing.assert_array_equal(np.asarray(cols["x"]),
+                                  np.asarray(lo["x"][:, :3]))

@@ -1,0 +1,282 @@
+"""Parity suite for the compiled ``lax.scan`` drivers (DESIGN.md §5).
+
+Contract: ``run_dynabro_scan`` / ``run_momentum_scan`` are drop-ins for the
+legacy Python-loop drivers — same level/mask/key/batch schedules, same
+numerics round for round. The legacy drivers are the reference; every test
+here runs both and compares final params, per-round logs, and eval traces.
+"""
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks
+
+from repro.core.mlmc import MLMCConfig
+from repro.core.robust_train import (
+    DynaBROConfig, run_dynabro, run_dynabro_scan, run_momentum,
+    run_momentum_scan,
+)
+from repro.core.scenarios import (
+    format_table, make_quadratic_task, run_matrix, scenario_grid,
+)
+from repro.core.switching import Switcher, get_switcher
+from repro.optim.optimizers import adagrad_norm, sgd
+
+TASK = make_quadratic_task()
+T = 64
+M = 9
+
+
+def _cfg(agg="cwmed", attack="sign_flip", use_mlmc=True, m=M, **akw):
+    return DynaBROConfig(
+        mlmc=MLMCConfig(T=T, m=m, V=3.0, option=2 if agg == "mfm" else 1,
+                        kappa=1.0),
+        aggregator=agg, delta=0.45, attack=attack,
+        attack_kwargs=akw or None, use_mlmc=use_mlmc)
+
+
+def _sw(m=M):
+    return get_switcher("periodic", m, n_byz=4, K=10)
+
+
+def _run_both(cfg, m=M, seed=3, opt=lambda: sgd(2e-2), sampler=None,
+              eval_every=0, **scan_kw):
+    sampler = sampler or TASK.make_sampler(m)
+    ev = (lambda p, t: {"f": TASK.objective(p)}) if eval_every else None
+    ref = run_dynabro(TASK.grad_fn, TASK.params0, opt(), cfg, _sw(m), sampler,
+                      T, seed=seed, eval_fn=ev, eval_every=eval_every)
+    new = run_dynabro_scan(TASK.grad_fn, TASK.params0, opt(), cfg, _sw(m),
+                           sampler, T, seed=seed, eval_fn=ev,
+                           eval_every=eval_every, **scan_kw)
+    return ref, new
+
+
+def _assert_logs_equal(l1, l2):
+    assert len(l1) == len(l2) == T
+    assert [l.level for l in l1] == [l.level for l in l2]
+    assert [l.failsafe_ok for l in l1] == [l.failsafe_ok for l in l2]
+    assert [l.n_byz for l in l1] == [l.n_byz for l in l2]
+    assert [l.cost for l in l1] == [l.cost for l in l2]
+
+
+@pytest.mark.parametrize("use_mlmc,agg,attack", [
+    (True, "cwmed", "sign_flip"),
+    (True, "cwtm", "ipm"),
+    (True, "mfm", "alie"),
+    (True, "cwmed", "random"),
+    (False, "cwmed", "sign_flip"),
+    (False, "cwtm", "shift"),
+])
+def test_scan_parity_quadratic(use_mlmc, agg, attack):
+    (p1, l1, _), (p2, l2, _) = _run_both(_cfg(agg, attack, use_mlmc))
+    np.testing.assert_allclose(np.asarray(p1["x"]), np.asarray(p2["x"]),
+                               rtol=1e-6, atol=1e-7)
+    _assert_logs_equal(l1, l2)
+    assert {l.level for l in l1} >= ({1, 2} if use_mlmc else {0})
+
+
+def test_scan_parity_adagrad_norm_and_evals():
+    cfg = _cfg("mfm", "sign_flip")
+    (p1, l1, e1), (p2, l2, e2) = _run_both(
+        cfg, opt=lambda: adagrad_norm(1.0), eval_every=16)
+    np.testing.assert_allclose(np.asarray(p1["x"]), np.asarray(p2["x"]),
+                               rtol=1e-6, atol=1e-7)
+    _assert_logs_equal(l1, l2)
+    assert [t for t, _ in e1] == [t for t, _ in e2] == [16, 32, 48, 64]
+    for (_, a), (_, b) in zip(e1, e2):
+        np.testing.assert_allclose(a["f"], b["f"], rtol=1e-6, atol=1e-7)
+
+
+def test_scan_chunking_is_invisible():
+    (_, _, _), (p0, l0, _) = _run_both(_cfg())
+    _, (p16, l16, _) = _run_both(_cfg(), chunk=16)
+    np.testing.assert_array_equal(np.asarray(p0["x"]), np.asarray(p16["x"]))
+    _assert_logs_equal(l0, l16)
+
+
+def test_scan_parity_within_round_switching():
+    """Identities flipping *within* a round exercise the generic
+    ``mask_schedule`` path and the per-k attack keys."""
+
+    m = 8
+
+    class WithinRound(Switcher):
+        def __init__(self):
+            super().__init__(m)
+
+        def mask(self, t):
+            return np.zeros(m, bool)
+
+        def within_round(self, t, k):
+            mk = np.zeros(m, bool)
+            if k % 2 == 1:  # half the computations Byzantine for half the workers
+                mk[:4] = True
+            return mk
+
+    cfg = _cfg("cwmed", "shift", m=m, v=200.0)
+    sampler = TASK.make_sampler(m)
+    p1, l1, _ = run_dynabro(TASK.grad_fn, TASK.params0, sgd(1e-2), cfg,
+                            WithinRound(), sampler, T, seed=5)
+    p2, l2, _ = run_dynabro_scan(TASK.grad_fn, TASK.params0, sgd(1e-2), cfg,
+                                 WithinRound(), sampler, T, seed=5)
+    np.testing.assert_allclose(np.asarray(p1["x"]), np.asarray(p2["x"]),
+                               rtol=1e-6, atol=1e-7)
+    _assert_logs_equal(l1, l2)
+    assert any(l.level >= 1 and not l.failsafe_ok for l in l1)
+
+
+def test_scan_parity_unvectorizable_sampler():
+    """A sampler that concretizes t cannot be vmapped; the driver must fall
+    back to the per-round loop and still match the reference bit for bit."""
+    m = 5
+
+    def np_sampler(t, n):
+        rng = np.random.default_rng(int(t) * 1000 + n)
+        keys = rng.integers(0, 2 ** 31, size=(m, n, 2), dtype=np.int64)
+        return jnp.asarray(keys.astype(np.uint32))
+
+    cfg = _cfg(m=m)
+    sw1, sw2 = _sw(m), _sw(m)
+    p1, l1, _ = run_dynabro(TASK.grad_fn, TASK.params0, sgd(2e-2), cfg, sw1,
+                            np_sampler, T, seed=2)
+    p2, l2, _ = run_dynabro_scan(TASK.grad_fn, TASK.params0, sgd(2e-2), cfg,
+                                 sw2, np_sampler, T, seed=2)
+    np.testing.assert_array_equal(np.asarray(p1["x"]), np.asarray(p2["x"]))
+    _assert_logs_equal(l1, l2)
+
+
+@pytest.mark.parametrize("switcher,kw", [
+    ("static", {"n_byz": 4}),
+    ("bernoulli", {"p": 0.1, "D": 5, "delta_max": 0.5}),
+])
+def test_scan_parity_other_switchers(switcher, kw):
+    cfg = _cfg("cwtm", "sign_flip")
+    sampler = TASK.make_sampler(M)
+    p1, l1, _ = run_dynabro(TASK.grad_fn, TASK.params0, sgd(2e-2), cfg,
+                            get_switcher(switcher, M, **kw), sampler, T)
+    p2, l2, _ = run_dynabro_scan(TASK.grad_fn, TASK.params0, sgd(2e-2), cfg,
+                                 get_switcher(switcher, M, **kw), sampler, T)
+    np.testing.assert_allclose(np.asarray(p1["x"]), np.asarray(p2["x"]),
+                               rtol=1e-6, atol=1e-7)
+    _assert_logs_equal(l1, l2)
+
+
+def test_scan_parity_stateful_sampler_opt_out():
+    """A sampler with hidden per-call state cannot survive the vectorized
+    probe; vectorize_batches=False replays the legacy call order exactly."""
+    m = 5
+    calls_ref, calls_scan = [], []
+
+    def make_stateful(calls):
+        def sample(t, n):
+            calls.append((t, n))
+            keys = jax.random.split(
+                jax.random.fold_in(jax.random.PRNGKey(len(calls)), t), m * n)
+            return keys.reshape(m, n, *keys.shape[1:])
+        return sample
+
+    cfg = _cfg(m=m)
+    p1, l1, _ = run_dynabro(TASK.grad_fn, TASK.params0, sgd(2e-2), cfg,
+                            _sw(m), make_stateful(calls_ref), T, seed=2)
+    p2, l2, _ = run_dynabro_scan(TASK.grad_fn, TASK.params0, sgd(2e-2), cfg,
+                                 _sw(m), make_stateful(calls_scan), T, seed=2,
+                                 vectorize_batches=False)
+    assert calls_ref == calls_scan  # exactly once per round, in round order
+    np.testing.assert_array_equal(np.asarray(p1["x"]), np.asarray(p2["x"]))
+    _assert_logs_equal(l1, l2)
+
+
+def test_scan_drivers_handle_T0_like_legacy():
+    cfg = _cfg()
+    p, logs, evals = run_dynabro_scan(TASK.grad_fn, TASK.params0, sgd(2e-2),
+                                      cfg, _sw(), TASK.make_sampler(M), 0)
+    assert logs == [] and evals == []
+    np.testing.assert_array_equal(np.asarray(p["x"]),
+                                  np.asarray(TASK.params0["x"]))
+    p, evals = run_momentum_scan(TASK.grad_fn, TASK.params0, cfg, _sw(),
+                                 TASK.make_sampler(M), 0, lr=1e-2, beta=0.9)
+    assert evals == []
+
+
+def test_momentum_scan_parity():
+    m = 3
+    cfg = _cfg("cwmed", "shift", m=m, v=3.0)
+    sampler = TASK.make_sampler(m)
+    ev = lambda p, t: {"f": TASK.objective(p)}
+    sw = lambda: get_switcher("momentum_tailored", m, alpha=0.05)
+    p1, e1 = run_momentum(TASK.grad_fn, TASK.params0, cfg, sw(), sampler, T,
+                          lr=2e-2, beta=0.95, seed=1, eval_fn=ev,
+                          eval_every=32)
+    p2, e2 = run_momentum_scan(TASK.grad_fn, TASK.params0, cfg, sw(), sampler,
+                               T, lr=2e-2, beta=0.95, seed=1, eval_fn=ev,
+                               eval_every=32)
+    np.testing.assert_allclose(np.asarray(p1["x"]), np.asarray(p2["x"]),
+                               rtol=1e-6, atol=1e-7)
+    assert [t for t, _ in e1] == [t for t, _ in e2]
+    for (_, a), (_, b) in zip(e1, e2):
+        np.testing.assert_allclose(a["f"], b["f"], rtol=1e-6, atol=1e-7)
+
+
+# ------------------------------------------------------------- MLP config
+
+
+@pytest.mark.parametrize("use_mlmc,agg", [
+    (True, "cwmed"),
+    (True, "cwtm"),
+    (False, "cwmed"),
+])
+def test_scan_parity_mlp(use_mlmc, agg):
+    """Parity on the MLP classifier config (benchmarks harness of the paper's
+    Section 6 experiments) over 64 rounds."""
+    from benchmarks._clf import make_task
+
+    m = 6
+    params0, grad_fn, sampler, _ = make_task(m, unit_batch=8, seed=1)
+    cfg = DynaBROConfig(
+        mlmc=MLMCConfig(T=T, m=m, V=3.0, kappa=1.0, j_cap=3),
+        aggregator=agg, delta=0.34, attack="sign_flip", use_mlmc=use_mlmc)
+    sw = lambda: get_switcher("periodic", m, n_byz=2, K=10)
+    p1, l1, _ = run_dynabro(grad_fn, params0, sgd(5e-2), cfg, sw(), sampler,
+                            T, seed=7)
+    p2, l2, _ = run_dynabro_scan(grad_fn, params0, sgd(5e-2), cfg, sw(),
+                                 sampler, T, seed=7)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+    _assert_logs_equal(l1, l2)
+
+
+# ------------------------------------------------------------- scenarios
+
+
+def test_scenario_matrix_runner():
+    grid = scenario_grid(
+        ["sign_flip", "ipm"],
+        [("periodic", {"n_byz": 3, "K": 10})],
+        ["mean", "cwmed"])
+    assert len(grid) == 4
+    rows = run_matrix(TASK, grid, m=M, T=40, V=3.0, delta=3 / M + 0.01,
+                      j_cap=3, seed=0)
+    assert len(rows) == 4
+    for r in rows:
+        assert {"attack", "switcher", "aggregator", "final", "failsafe_trips",
+                "wall_s", "cost"} <= set(r)
+        assert np.isfinite(r["final"])
+    by = {(r["attack"], r["aggregator"]): r["final"] for r in rows}
+    # robust aggregation survives sign_flip where the mean does not
+    assert by[("sign_flip", "cwmed")] < by[("sign_flip", "mean")]
+    table = format_table(rows)
+    assert "cwmed" in table and "sign_flip" in table
+
+
+def test_scenario_runner_matches_legacy_driver():
+    grid = scenario_grid(["sign_flip"], [("static", {"n_byz": 3})], ["cwmed"])
+    row_scan = run_matrix(TASK, grid, m=M, T=40, V=3.0, driver="scan")[0]
+    row_ref = run_matrix(TASK, grid, m=M, T=40, V=3.0, driver="legacy")[0]
+    np.testing.assert_allclose(row_scan["final"], row_ref["final"],
+                               rtol=1e-6, atol=1e-7)
+    assert row_scan["cost"] == row_ref["cost"]
