@@ -3,12 +3,10 @@ the MNIST/CIFAR CNN experiments of Section 6 at matched worker counts,
 with a synthetic Gaussian-mixture task (no dataset downloads offline)."""
 from __future__ import annotations
 
-import functools
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.data import gaussian_mixture_dataset
 

@@ -10,8 +10,6 @@ filter's trip statistics.
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,4 +1,4 @@
-"""Compiled vs Python-loop DynaBRO driver wall-clock (DESIGN.md §5).
+"""Compiled vs Python-loop DynaBRO driver wall-clock (DESIGN.md §5, §7).
 
 Times full ``run_dynabro`` (legacy per-round dispatch) against
 ``run_dynabro_scan`` (whole loop in one chunked ``lax.scan``) on the
@@ -7,6 +7,15 @@ one warmup run so jit caches are hot; the schedules repeat per seed so the
 warmup covers every level the timed run dispatches). Asserts the two drivers
 agree bitwise on the final iterate before timing — a benchmark that compares
 non-equivalent code is meaningless.
+
+Two more row families feed the CI perf gates (benchmarks/check_regression.py):
+
+* ``sharded_T256`` — the shard_map'd driver on a **1-device** worker mesh
+  (bitwise-asserted against ``scan_T256``): its overhead over the unsharded
+  scan is the price of the sharding substrate, which must stay marginal.
+* ``sweep_loop_C8`` / ``sweep_vmap_C8`` — an 8-cell switcher sweep through
+  per-cell compiled calls vs one vmapped lane-batched call
+  (``run_dynabro_scan_sweep``); the vmapped row must hold a ≥2x speedup.
 """
 from __future__ import annotations
 
@@ -18,11 +27,14 @@ import numpy as np
 from repro.core.mlmc import MLMCConfig
 from repro.core.robust_train import (
     DynaBROConfig, make_dynabro_scan_fn, make_dynabro_step, run_dynabro,
-    run_dynabro_scan,
+    run_dynabro_scan, run_dynabro_scan_sweep,
 )
 from repro.core.scenarios import make_quadratic_task
 from repro.core.switching import get_switcher
+from repro.launch.mesh import make_worker_mesh
 from repro.optim.optimizers import sgd
+
+SWEEP_KS = (5, 8, 10, 15, 20, 25, 40, 50)  # C=8 periodic switcher cells
 
 
 def _time(fn, iters: int):
@@ -34,12 +46,19 @@ def _time(fn, iters: int):
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
-def run(T: int, m: int = 9, iters: int = 3, seed: int = 0):
+def _setup(T: int, m: int):
     task = make_quadratic_task()
     cfg = DynaBROConfig(mlmc=MLMCConfig(T=T, m=m, V=3.0, kappa=1.0),
                         aggregator="cwmed", delta=0.45, attack="sign_flip")
-    sampler = task.make_sampler(m)
-    opt = sgd(2e-2)
+    return task, cfg, task.make_sampler(m), sgd(2e-2)
+
+
+def run(T: int, m: int = 9, iters: int = 3, seed: int = 0,
+        sharded: bool = False):
+    """(us_legacy, us_scan[, us_sharded]): Python loop vs compiled scan —
+    plus, when ``sharded``, the shard_map'd scan on a 1-device worker mesh —
+    all bitwise-checked before timing."""
+    task, cfg, sampler, opt = _setup(T, m)
     step = make_dynabro_step(task.grad_fn, cfg, opt)
     scan_fn = make_dynabro_scan_fn(task.grad_fn, cfg, opt)
 
@@ -59,16 +78,77 @@ def run(T: int, m: int = 9, iters: int = 3, seed: int = 0):
                                   np.asarray(p_scan["x"]))
     us_legacy = _time(legacy, iters)
     us_scan = _time(scan, iters)
-    return us_legacy, us_scan
+    if not sharded:
+        return us_legacy, us_scan
+    mesh = make_worker_mesh(1)
+    shard_fn = make_dynabro_scan_fn(task.grad_fn, cfg, opt, mesh=mesh)
+
+    def sharded_run():
+        sw = get_switcher("periodic", m, n_byz=4, K=20, seed=seed)
+        return run_dynabro_scan(task.grad_fn, task.params0, opt, cfg, sw,
+                                sampler, T, seed=seed, scan_fn=shard_fn,
+                                mesh=mesh)
+
+    np.testing.assert_array_equal(np.asarray(p_scan["x"]),
+                                  np.asarray(sharded_run()[0]["x"]))
+    us_sharded = _time(sharded_run, iters)
+    return us_legacy, us_scan, us_sharded
+
+
+def run_sweep(T: int = 64, m: int = 9, iters: int = 3, seed: int = 0):
+    """(us_loop, us_vmap) for the C-cell switcher sweep, equality-checked."""
+    task, cfg, sampler, opt = _setup(T, m)
+    scan_fn = make_dynabro_scan_fn(task.grad_fn, cfg, opt)
+
+    def make_sws():
+        return [get_switcher("periodic", m, n_byz=4, K=K, seed=seed)
+                for K in SWEEP_KS]
+
+    def loop():
+        return [run_dynabro_scan(task.grad_fn, task.params0, opt, cfg, sw,
+                                 sampler, T, seed=seed, scan_fn=scan_fn)
+                for sw in make_sws()]
+
+    def vmapped():
+        return run_dynabro_scan_sweep(task.grad_fn, task.params0, opt, cfg,
+                                      make_sws(), sampler, T, seed=seed,
+                                      scan_fn=scan_fn)
+
+    per_cell = loop()
+    lanes = vmapped()
+    for (p_ref, _, _), (p_lane, _) in zip(per_cell, lanes):
+        np.testing.assert_allclose(np.asarray(p_ref["x"]),
+                                   np.asarray(p_lane["x"]),
+                                   rtol=1e-6, atol=1e-7)
+
+    def t_loop():
+        outs = loop()
+        return (outs[-1][0],)  # _time blocks on the last cell's params
+
+    def t_vmap():
+        outs = vmapped()
+        return (outs[-1][0],)
+
+    return _time(t_loop, iters), _time(t_vmap, iters)
 
 
 def main(fast: bool = False):
+    iters = 2 if fast else 3
     rows = []
     for T in (64, 256):
-        us_legacy, us_scan = run(T, iters=2 if fast else 3)
+        out = run(T, iters=iters, sharded=(T == 256))
+        us_legacy, us_scan = out[0], out[1]
         rows.append(f"scan_driver/python_loop_T{T},{us_legacy:.0f},")
         rows.append(f"scan_driver/scan_T{T},{us_scan:.0f},"
                     f"speedup={us_legacy / us_scan:.1f}x")
+        if T == 256:
+            rows.append(f"scan_driver/sharded_T{T},{out[2]:.0f},"
+                        f"overhead={out[2] / us_scan:.2f}x")
+    us_loop, us_vmap = run_sweep(iters=iters)
+    C = len(SWEEP_KS)
+    rows.append(f"scan_driver/sweep_loop_C{C},{us_loop:.0f},")
+    rows.append(f"scan_driver/sweep_vmap_C{C},{us_vmap:.0f},"
+                f"speedup={us_loop / us_vmap:.1f}x")
     return rows
 
 

@@ -1,0 +1,73 @@
+"""CI perf gate: assert the BENCH json holds the recorded speedups.
+
+Usage: ``python benchmarks/check_regression.py [BENCH_cpu.json]``
+
+Reads the rows written by ``benchmarks/run.py --json`` and enforces one
+threshold per gated row (DESIGN.md §8). Thresholds are deliberately looser
+than the numbers recorded on dev hardware — CI smokes on shared 2-core
+runners — but tight enough that a real regression (a re-trace per round, a
+de-vmapped sweep, a sharding wrapper gone quadratic) trips the gate.
+
+Exit code 0 = all gates pass; 1 = a row is missing, unparseable, or off its
+bound, with a message naming the row, the observed value and the threshold.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+# (row name, derived-field key, bound, direction). ">=": the observed value
+# must reach the bound (a speedup we must keep); "<=": it must stay under it
+# (an overhead that must stay marginal). Dev-hardware numbers in comments.
+GATES = [
+    # steady-state compiled loop vs per-round dispatch (~6x dev)
+    ("scan_driver/scan_T256", "speedup", 1.5, ">="),
+    # shard_map substrate on a 1-device worker mesh (~1.0x dev)
+    ("scan_driver/sharded_T256", "overhead", 1.5, "<="),
+    # vmapped scenario sweep vs per-cell compiled loop (~6-13x dev)
+    ("scan_driver/sweep_vmap_C8", "speedup", 2.0, ">="),
+]
+
+
+def _metric(derived: str, key: str) -> float:
+    """Parse ``key=<float>x`` out of a row's derived field."""
+    if f"{key}=" not in derived:
+        raise ValueError(f"no '{key}=' in derived field {derived!r}")
+    return float(derived.split(f"{key}=")[1].split(";")[0].rstrip("x"))
+
+
+def check(path: str) -> int:
+    try:
+        with open(path) as f:
+            rows = {r["name"]: r for r in json.load(f)["rows"]}
+    except (OSError, KeyError, ValueError) as e:
+        print(f"FAIL: cannot read bench rows from {path}: {e}")
+        return 1
+    failures = 0
+    for name, key, bound, direction in GATES:
+        row = rows.get(name)
+        if row is None:
+            print(f"FAIL: row '{name}' missing from {path}")
+            print("      (its benchmark did not run or the row was renamed)")
+            failures += 1
+            continue
+        try:
+            val = _metric(row.get("derived") or "", key)
+        except ValueError as e:
+            print(f"FAIL: row '{name}': {e}")
+            failures += 1
+            continue
+        ok = val >= bound if direction == ">=" else val <= bound
+        verdict = "ok" if ok else "FAIL"
+        want = f"(want {direction} {bound:g}x)"
+        print(f"{verdict}: {name} {key}={val:g}x {want}")
+        if not ok:
+            failures += 1
+    if failures:
+        print(f"{failures} perf gate(s) failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(sys.argv[1] if len(sys.argv) > 1 else "BENCH_cpu.json"))

@@ -24,6 +24,7 @@ Both training modes dispatch here: Mode A (`core.robust_train`) through
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import Callable, Dict, Optional
 
@@ -222,9 +223,20 @@ def registered_rules():
 def get_aggregator(name: str, delta: float = 0.25, tau: Optional[float] = None,
                    backend: str = "auto") -> Aggregator:
     """One registry for both training modes: Mode A consumes ``.tree()``,
-    Mode B consumes ``.leaf()`` (coordinate-wise rules only)."""
+    Mode B consumes ``.leaf()`` (coordinate-wise rules only).
+
+    Instances are memoized per (name, delta, tau, backend): rules are
+    stateless after construction, and the compiled drivers resolve the rule
+    inside every traced ``lax.switch`` branch of every vmapped sweep lane
+    (DESIGN.md §5, §7) — caching keeps that a dict hit instead of a
+    re-registration import + object build per trace site."""
+    return _cached_rule(name.lower(), delta, tau, backend)
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_rule(name: str, delta: float, tau: Optional[float],
+                 backend: str) -> Aggregator:
     import repro.core.aggregators as _rules  # registers on first import
-    name = name.lower()
     if name.startswith("nnm+"):
         return _rules.NNM(get_aggregator(name[4:], delta, tau, backend),
                           delta, backend=backend)

@@ -7,7 +7,6 @@ variant used in the paper.
 """
 from __future__ import annotations
 
-import math
 from typing import Callable, Dict
 
 import jax

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import attacks as attacks_lib
-from repro.core.aggregators import Aggregator, MFM, get_aggregator
+from repro.core.aggregators import MFM, get_aggregator
 from repro.core.mlmc import (
     MLMCConfig, level_prefix, level_schedule, mlmc_combine, sample_level,
 )
@@ -114,14 +114,18 @@ def make_dynabro_step(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer):
 
 
 def _make_momentum_round(grad_fn: GradFn, cfg: DynaBROConfig, lr: float,
-                         beta: float):
+                         beta: float, gather=None):
     """One worker-momentum round — shared by the jitted per-round step and
-    the scan driver's body, so the two cannot diverge."""
+    the scan driver's body, so the two cannot diverge. ``gather`` re-assembles
+    device-local worker slices into the full (m, ...) stack in the sharded
+    driver (DESIGN.md §7); None on the single-device paths."""
     atk = attacks_lib.get_attack(cfg.attack, **(cfg.attack_kwargs or {}))
 
     def round_fn(params, worker_m, batches, mask, key):
-        # batches: tree leading (m,) unit batches; mask: (m,)
+        # batches: tree leading (m[_local],) unit batches; mask: (m,)
         grads = jax.vmap(grad_fn, in_axes=(None, 0))(params, batches)
+        if gather is not None:
+            grads = gather(grads)
         grads = atk(grads, mask, key=key)
         worker_m = jax.tree.map(
             lambda mm, gg: beta * mm + (1.0 - beta) * gg.astype(jnp.float32),
@@ -317,6 +321,63 @@ def _batch_schedule(sample_batches, tn, n_max: int, vectorize: bool = True):
     return jax.tree.map(lambda *ls: jnp.stack(ls), *rows)
 
 
+def _level_plan(cfg: DynaBROConfig, rng: np.random.Generator, T: int):
+    """Host-side MLMC level plan: (levels (T,), per-round unit counts ns,
+    n_max) — replaying the exact level stream the legacy driver draws.
+    Shared by ``run_dynabro_scan`` and the vmapped sweep, which must agree
+    round for round."""
+    j_max = cfg.mlmc.j_max
+    if cfg.use_mlmc:
+        levels = level_schedule(rng, j_max, T)
+        n_max = 2 ** j_max
+        ns = np.where(levels <= j_max, 2 ** levels.astype(np.int64), 1)
+    else:
+        levels = np.zeros(T, np.int32)
+        n_max = 1
+        ns = np.ones(T, np.int64)
+    return levels, ns, n_max
+
+
+def _round_logs(levels, ns, ok, masks) -> list:
+    """Per-round RoundLog list from the level plan, the scanned fail-safe
+    flags (T,) and the (T, n_max, m) mask schedule — one cost accounting for
+    both compiled drivers."""
+    logs = []
+    for t in range(len(levels)):
+        j, n = int(levels[t]), int(ns[t])
+        logs.append(RoundLog(j, bool(ok[t]), int(masks[t, 0].sum()),
+                             1 + (n + n // 2 if j >= 1 else 0)))
+    return logs
+
+
+def _mask_schedule(switcher: Switcher, T: int, n_max: int,
+                   ns: np.ndarray) -> np.ndarray:
+    """(T, n_max, m) identity schedule for one switcher — the vectorized
+    ``mask_schedule`` fast path when ``within_round`` is the stock one, else a
+    replay of the legacy driver's exact call sequence (only the n_t
+    computations of each round; pad rows are never read by the level
+    branches, so stateful within-round strategies stay exact)."""
+    if type(switcher).within_round is Switcher.within_round:
+        return switcher.mask_schedule(T, n_max)
+    masks = np.zeros((T, n_max, switcher.m), bool)
+    for t in range(T):
+        for k in range(int(ns[t])):
+            masks[t, k] = switcher.within_round(t, k)
+    return masks
+
+
+def _check_worker_mesh(mesh, worker_axis: str, m: int) -> None:
+    if tuple(mesh.axis_names) != (worker_axis,):
+        raise ValueError(
+            f"sharded driver needs a 1-axis ({worker_axis!r},) mesh, got "
+            f"axes {tuple(mesh.axis_names)} (see launch.mesh.make_worker_mesh)")
+    n_dev = mesh.shape[worker_axis]
+    if m % n_dev:
+        raise ValueError(
+            f"worker count m={m} not divisible by the {worker_axis!r} mesh "
+            f"axis size {n_dev}")
+
+
 def _segment_bounds(T: int, eval_every: int, chunk: int):
     stops = {T}
     if eval_every:
@@ -326,8 +387,9 @@ def _segment_bounds(T: int, eval_every: int, chunk: int):
     return sorted(stops)
 
 
-def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer):
-    """Build the compiled DynaBRO round loop (DESIGN.md §5).
+def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer,
+                         *, mesh=None, worker_axis: str = "workers"):
+    """Build the compiled DynaBRO round loop (DESIGN.md §5, §7).
 
     Returns a jitted ``seg((params, opt_state), xs)`` running ``lax.scan``
     over a round schedule ``xs = (level, batches, masks, keys)`` (leading time
@@ -338,9 +400,18 @@ def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer):
     combine — numerically identical to ``make_dynabro_step`` at that level.
     Reusable across ``run_dynabro_scan`` calls (jit caches per segment
     length); emits stacked (failsafe_ok, corr_norm) per round.
+
+    With ``mesh`` (a 1-axis device mesh from ``launch.mesh.make_worker_mesh``)
+    the whole segment compiles under a fully-manual ``shard_map``: the batch
+    schedule is split over ``worker_axis`` so each device runs the per-worker
+    gradient ``vmap`` on its local worker slice only, the stacks are
+    re-assembled with a worker-axis all_gather, and the attack + aggregation
+    + update code is byte-for-byte the single-device body — which is why a
+    1-device mesh is bitwise-identical to ``mesh=None`` (DESIGN.md §7).
     """
     j_max = cfg.mlmc.j_max
     n_max = 2 ** j_max if cfg.use_mlmc else 1
+    gather = _worker_gather(mesh, worker_axis)
 
     def level_branch(j: int):
         n = 2 ** j if (cfg.use_mlmc and 1 <= j <= j_max) else 1
@@ -348,7 +419,9 @@ def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer):
         def branch(operand):
             params, batches, masks, key = operand
             b = level_prefix(batches, n, n_max, axis=1)
-            grads = _per_worker_grads(grad_fn, params, b)  # (m, n, ...)
+            grads = _per_worker_grads(grad_fn, params, b)  # (m[_local], n, ...)
+            if gather is not None:
+                grads = gather(grads)  # (m, n, ...) in worker order
             grads = _attack_stack(cfg, grads, masks[:n], key)
             g, info = _combine_levels(cfg, grads, j)
             return g, info["failsafe_ok"], info["corr_norm"]
@@ -370,11 +443,52 @@ def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer):
         params = apply_updates(params, updates)
         return (params, opt_state), (ok, dn)
 
-    @jax.jit
     def seg(carry, xs):
         return jax.lax.scan(body, carry, xs)
 
-    return seg
+    if mesh is None:
+        return jax.jit(seg)
+    return jax.jit(_shard_seg(seg, mesh, worker_axis,
+                              xs_batch_axes=(None, worker_axis, None, None)))
+
+
+def _worker_gather(mesh, worker_axis: str):
+    """The stack re-assembly hook of the sharded scan body, or None when
+    there is nothing to re-assemble (no mesh, or a 1-device mesh whose local
+    slice already IS the full stack). Skipping the no-op gather on the
+    1-device mesh keeps the parity contract bitwise *by construction* — even
+    an identity all_gather inserts a copy that can change how XLA fuses (and
+    FMA-contracts) the surrounding ops."""
+    if mesh is None or mesh.shape[worker_axis] == 1:
+        return None
+    from repro.core.sharded import gather_worker_stack
+
+    def gather(tree):
+        return gather_worker_stack(tree, worker_axis)
+
+    return gather
+
+
+def _shard_seg(seg, mesh, worker_axis: str, xs_batch_axes):
+    """Wrap a segment fn in a fully-manual ``shard_map`` over ``worker_axis``.
+
+    Params / optimizer state / worker momenta are replicated (every device
+    applies the identical update to the identical aggregate — deterministic,
+    so the replication claim holds by construction); of the xs schedule only
+    the batch tree is split, on its worker axis (leaf axis 1, after the time
+    axis). Masks / keys / levels are replicated: the attack consumes the full
+    (n, m) mask once the worker stacks are gathered.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import shard_map
+
+    xs_specs = tuple(P(None) if a is None else P(None, a) for a in xs_batch_axes)
+    return shard_map(
+        seg, mesh=mesh,
+        in_specs=(P(), xs_specs),
+        out_specs=(P(), P(None)),
+        axis_names={worker_axis}, check_vma=False)
 
 
 def run_dynabro_scan(
@@ -391,6 +505,8 @@ def run_dynabro_scan(
     chunk: int = 0,
     scan_fn=None,
     vectorize_batches: bool = True,
+    mesh=None,
+    worker_axis: str = "workers",
 ):
     """Compiled drop-in for ``run_dynabro``: same signature, same returns,
     round-for-round equivalent schedules (level RNG stream, switching masks,
@@ -402,31 +518,22 @@ def run_dynabro_scan(
     ``vectorize_batches=False`` for samplers with hidden per-call state —
     the sampler is then called exactly once per round, in round order, like
     the legacy driver (see ``_batch_schedule``).
+
+    ``mesh`` (a 1-axis worker mesh, ``launch.mesh.make_worker_mesh``) runs the
+    loop sharded: per-worker gradients computed on each device's worker slice,
+    the rest of the round body replicated after a worker all_gather — bitwise
+    identical on a 1-device mesh, and the schedule precompute is unchanged
+    (DESIGN.md §7). Requires ``switcher.m`` divisible by the mesh axis size.
     """
+    if mesh is not None:
+        _check_worker_mesh(mesh, worker_axis, switcher.m)
     if T <= 0:
         return params, [], []
-    rng = np.random.default_rng(seed)
-    j_max = cfg.mlmc.j_max
-    if cfg.use_mlmc:
-        levels = level_schedule(rng, j_max, T)
-        n_max = 2 ** j_max
-        ns = np.where(levels <= j_max, 2 ** levels.astype(np.int64), 1)
-    else:
-        levels = np.zeros(T, np.int32)
-        n_max = 1
-        ns = np.ones(T, np.int64)
-    if type(switcher).within_round is Switcher.within_round:
-        masks = switcher.mask_schedule(T, n_max)  # (T, n_max, m)
-    else:
-        # stateful within-round strategies: replay the legacy driver's exact
-        # call sequence (only the n_t computations of each round); pad rows
-        # are never read by the level branches
-        masks = np.zeros((T, n_max, switcher.m), bool)
-        for t in range(T):
-            for k in range(int(ns[t])):
-                masks[t, k] = switcher.within_round(t, k)
+    levels, ns, n_max = _level_plan(cfg, np.random.default_rng(seed), T)
+    masks = _mask_schedule(switcher, T, n_max, ns)
     keys = _np_prng_keys(seed * 100_003 + np.arange(T, dtype=np.int64))
-    scan_fn = scan_fn or make_dynabro_scan_fn(grad_fn, cfg, opt)
+    scan_fn = scan_fn or make_dynabro_scan_fn(grad_fn, cfg, opt, mesh=mesh,
+                                              worker_axis=worker_axis)
     carry = (params, opt.init(params))
     masks_dev, keys_dev = jnp.asarray(masks), jnp.asarray(keys)
     levels_dev = jnp.asarray(levels)
@@ -444,30 +551,30 @@ def run_dynabro_scan(
             evals.append((b, eval_fn(carry[0], b - 1)))
         a = b
     ok_all = np.concatenate(oks) if oks else np.zeros(0, bool)
-
-    logs = []
-    for t in range(T):
-        j, n = int(levels[t]), int(ns[t])
-        logs.append(RoundLog(j, bool(ok_all[t]), int(masks[t, 0].sum()),
-                             1 + (n + n // 2 if j >= 1 else 0)))
-    return carry[0], logs, evals
+    return carry[0], _round_logs(levels, ns, ok_all, masks), evals
 
 
 def make_momentum_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, lr: float,
-                          beta: float):
+                          beta: float, *, mesh=None,
+                          worker_axis: str = "workers"):
     """Compiled worker-momentum baseline loop: the shared round body of
-    ``make_momentum_step``, scanned over (batches, masks, keys) schedules."""
-    round_fn = _make_momentum_round(grad_fn, cfg, lr, beta)
+    ``make_momentum_step``, scanned over (batches, masks, keys) schedules.
+    ``mesh`` shards the per-worker gradient vmap across devices exactly as in
+    ``make_dynabro_scan_fn`` (worker momenta stay replicated)."""
+    round_fn = _make_momentum_round(grad_fn, cfg, lr, beta,
+                                    gather=_worker_gather(mesh, worker_axis))
 
     def body(carry, xs):
         batch, mask, key = xs
         return round_fn(carry[0], carry[1], batch, mask, key), ()
 
-    @jax.jit
     def seg(carry, xs):
         return jax.lax.scan(body, carry, xs)
 
-    return seg
+    if mesh is None:
+        return jax.jit(seg)
+    return jax.jit(_shard_seg(seg, mesh, worker_axis,
+                              xs_batch_axes=(worker_axis, None, None)))
 
 
 def run_momentum_scan(
@@ -485,14 +592,21 @@ def run_momentum_scan(
     chunk: int = 0,
     scan_fn=None,
     vectorize_batches: bool = True,
+    mesh=None,
+    worker_axis: str = "workers",
 ):
-    """Compiled drop-in for ``run_momentum`` (same signature + chunking)."""
+    """Compiled drop-in for ``run_momentum`` (same signature + chunking).
+    ``mesh`` runs it sharded over the worker axis (DESIGN.md §7)."""
+    if mesh is not None:
+        _check_worker_mesh(mesh, worker_axis, switcher.m)
     if T <= 0:
         return params, []
     masks = jnp.asarray(np.stack([switcher.mask(t) for t in range(T)]))  # (T, m)
     keys = jnp.asarray(
         _np_prng_keys(seed * 77_003 + np.arange(T, dtype=np.int64)))
-    scan_fn = scan_fn or make_momentum_scan_fn(grad_fn, cfg, lr, beta)
+    scan_fn = scan_fn or make_momentum_scan_fn(grad_fn, cfg, lr, beta,
+                                               mesh=mesh,
+                                               worker_axis=worker_axis)
     worker_m = jax.tree.map(
         lambda p: jnp.zeros((switcher.m,) + p.shape, jnp.float32), params)
     carry = (params, worker_m)
@@ -509,3 +623,100 @@ def run_momentum_scan(
             evals.append((b, eval_fn(carry[0], b - 1)))
         a = b
     return carry[0], evals
+
+
+# ----------------------------------------------- vmapped scenario sweeps
+#
+# Whole attack × switcher × aggregator grids re-run the compiled driver per
+# cell; cells that differ only in their *switching strategy* share every
+# other schedule (the level RNG stream, per-round keys and batch draws depend
+# on the seed alone), so they can run as lanes of one vmapped scan instead of
+# C sequential driver calls (DESIGN.md §7). ``jax.vmap`` returns a fresh
+# function object per call, so jitting it anew on every sweep would miss the
+# compile cache each time. The wrapper is cached one-deep, keyed on scan_fn
+# identity: repeated sweeps over a caller-held scan_fn (the benchmark loop,
+# grids re-run at several T) hit, while ad-hoc scan_fns — which can never be
+# re-looked-up anyway — merely rotate the slot, so at most one stale compiled
+# wrapper is ever retained. (A weak/keyed map cannot do better: the wrapper
+# closes over scan_fn, so any cache that holds the wrapper pins its key.)
+
+_VMAPPED_LAST = None  # (scan_fn, jitted vmapped wrapper)
+
+
+def _vmapped_scan_fn(scan_fn):
+    """Lane-batched segment fn: model/optimizer state and the mask schedule
+    are mapped over the lane axis; levels / batches / keys stay shared (they
+    depend only on the sweep seed) — crucially the ``lax.switch`` level index
+    stays a scalar, keeping the one-branch-per-round dispatch."""
+    global _VMAPPED_LAST
+    if _VMAPPED_LAST is not None and _VMAPPED_LAST[0] is scan_fn:
+        return _VMAPPED_LAST[1]
+    vseg = jax.jit(jax.vmap(scan_fn, in_axes=((0, 0), (None, None, 0, None))))
+    _VMAPPED_LAST = (scan_fn, vseg)
+    return vseg
+
+
+def run_dynabro_scan_sweep(
+    grad_fn: GradFn,
+    params,
+    opt: Optimizer,
+    cfg: DynaBROConfig,
+    switchers,
+    sample_batches: Callable[[int, int], Any],
+    T: int,
+    seed: int = 0,
+    chunk: int = 0,
+    scan_fn=None,
+    vectorize_batches: bool = True,
+):
+    """Run C = len(switchers) DynaBRO cells as one vmapped compiled loop.
+
+    Every cell shares ``cfg`` / ``seed`` / ``sample_batches`` and differs only
+    in its switcher, so the level / key / batch schedules coincide and stay
+    *un-batched* under ``vmap`` — in particular the ``lax.switch`` level
+    dispatch keeps its scalar index (a batched index would degrade to
+    execute-all-branches-and-select). Only the (C, T, n_max, m) mask schedule
+    and the model/optimizer state are batched over lanes.
+
+    Returns ``[(params_c, logs_c), ...]`` in input order, each lane equal to
+    the corresponding ``run_dynabro_scan(..., switcher=switchers[c])`` call —
+    usually bitwise, always within the parity suite's 1e-6 tolerance (XLA may
+    reorder float ops at ULP level when it fuses the batched body; the round
+    logs match exactly — locked by tests/test_scenarios.py). ``scan_fn``
+    accepts a prebuilt *unsharded* ``make_dynabro_scan_fn`` result; the
+    jitted vmap wrapper is memoized per scan_fn (``_vmapped_scan_fn``), so
+    repeated sweeps with a shared scan_fn reuse one compile cache.
+    """
+    C = len(switchers)
+    if C == 0:
+        return []
+    if T <= 0:
+        return [(params, []) for _ in switchers]
+    levels, ns, n_max = _level_plan(cfg, np.random.default_rng(seed), T)
+    masks = np.stack([_mask_schedule(sw, T, n_max, ns) for sw in switchers])
+    keys = _np_prng_keys(seed * 100_003 + np.arange(T, dtype=np.int64))
+    scan_fn = scan_fn or make_dynabro_scan_fn(grad_fn, cfg, opt)
+    vseg = _vmapped_scan_fn(scan_fn)
+
+    def lanes(tree):  # identical initial state in every lane
+        return jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (C,) + l.shape), tree)
+
+    carry = (lanes(params), lanes(opt.init(params)))
+    masks_dev, keys_dev = jnp.asarray(masks), jnp.asarray(keys)
+    levels_dev = jnp.asarray(levels)
+
+    oks = []
+    a = 0
+    for b in _segment_bounds(T, 0, chunk):
+        batches = _batch_schedule(
+            sample_batches, list(zip(range(a, b), ns[a:b])), n_max,
+            vectorize=vectorize_batches)
+        xs = (levels_dev[a:b], batches, masks_dev[:, a:b], keys_dev[a:b])
+        carry, (ok, _dn) = vseg(carry, xs)
+        oks.append(np.asarray(ok))  # (C, b - a)
+        a = b
+    ok_all = np.concatenate(oks, axis=1)
+    return [(jax.tree.map(lambda l, c=c: l[c], carry[0]),
+             _round_logs(levels, ns, ok_all[c], masks[c]))
+            for c in range(C)]

@@ -1,12 +1,15 @@
 """Scenario-matrix runner: attack × switcher × aggregator sweeps through the
-compiled ``lax.scan`` driver (DESIGN.md §5).
+compiled ``lax.scan`` driver (DESIGN.md §5, §7).
 
 Large-`T` grids are the workload the paper's Section 6 figures need (and what
 the ROADMAP's many-scenario coverage goal means): every cell is one full
 DynaBRO (or worker-momentum baseline) run, so the per-round dispatch cost of
 the Python-loop drivers multiplies across the grid. ``run_matrix`` drives
 every cell through ``run_dynabro_scan`` and returns a tidy list-of-dicts
-results table; ``format_table`` pivots it for terminal display.
+results table; ``driver="vmap"`` instead batches cells that differ only in
+their switching strategy into one vmapped compiled call per group
+(``run_dynabro_scan_sweep`` — no re-trace, no per-cell dispatch);
+``format_table`` pivots the rows for terminal display.
 
 Used by ``examples/attack_gallery.py`` and ``benchmarks/bench_scan_driver.py``.
 """
@@ -21,7 +24,7 @@ import jax.numpy as jnp
 
 from repro.core.mlmc import MLMCConfig
 from repro.core.robust_train import (
-    DynaBROConfig, run_dynabro, run_dynabro_scan,
+    DynaBROConfig, run_dynabro, run_dynabro_scan, run_dynabro_scan_sweep,
 )
 from repro.core.switching import get_switcher
 from repro.optim.optimizers import Optimizer, sgd
@@ -98,6 +101,31 @@ def make_quadratic_task(sigma: float = 0.5, seed: int = 0) -> Task:
     return Task(params0, grad_fn, make_sampler, objective)
 
 
+def _cell_cfg(sc: Scenario, m: int, T: int, V: float, kappa: float,
+              j_cap: int, use_mlmc: bool, delta: float) -> DynaBROConfig:
+    """One cfg builder for the per-cell and vmapped paths — they must agree
+    for ``driver="vmap"`` to be a drop-in."""
+    return DynaBROConfig(
+        mlmc=MLMCConfig(T=T, m=m, V=V,
+                        option=2 if sc.aggregator == "mfm" else 1,
+                        kappa=kappa, j_cap=j_cap),
+        aggregator=sc.aggregator, delta=delta, attack=sc.attack,
+        attack_kwargs=dict(sc.attack_kwargs) or None, use_mlmc=use_mlmc)
+
+
+def _row(task: Task, sc: Scenario, params, logs, *, driver: str, m: int,
+         T: int, wall: float) -> Dict[str, Any]:
+    return {
+        "attack": sc.attack, "switcher": sc.switcher,
+        "aggregator": sc.aggregator, "driver": driver, "m": m, "T": T,
+        "final": task.objective(params),
+        "failsafe_trips": sum(1 for l in logs if l.level >= 1 and not l.failsafe_ok),
+        "mean_level": sum(l.level for l in logs) / max(len(logs), 1),
+        "cost": sum(l.cost for l in logs),
+        "wall_s": wall,
+    }
+
+
 def run_scenario(
     task: Task,
     sc: Scenario,
@@ -113,32 +141,26 @@ def run_scenario(
     seed: int = 0,
     driver: str = "scan",
     chunk: int = 0,
+    mesh=None,
 ) -> Dict[str, Any]:
-    """Run one grid cell end to end; returns a tidy results row."""
-    cfg = DynaBROConfig(
-        mlmc=MLMCConfig(T=T, m=m, V=V,
-                        option=2 if sc.aggregator == "mfm" else 1,
-                        kappa=kappa, j_cap=j_cap),
-        aggregator=sc.aggregator, delta=delta, attack=sc.attack,
-        attack_kwargs=dict(sc.attack_kwargs) or None, use_mlmc=use_mlmc)
+    """Run one grid cell end to end; returns a tidy results row. ``mesh``
+    (with ``driver="scan"``) runs the cell through the sharded compiled
+    driver (DESIGN.md §7)."""
+    if mesh is not None and driver != "scan":
+        raise ValueError(
+            f"mesh= requires driver='scan' (the sharded compiled driver); "
+            f"got driver={driver!r}")
+    cfg = _cell_cfg(sc, m, T, V, kappa, j_cap, use_mlmc, delta)
     switcher = get_switcher(sc.switcher, m, seed=seed,
                             **dict(sc.switcher_kwargs))
     run = run_dynabro_scan if driver == "scan" else run_dynabro
-    kw = {"chunk": chunk} if driver == "scan" else {}
+    kw = {"chunk": chunk, "mesh": mesh} if driver == "scan" else {}
     t0 = time.perf_counter()
     params, logs, _ = run(task.grad_fn, task.params0, make_opt(), cfg,
                           switcher, task.make_sampler(m), T, seed=seed, **kw)
     jax.block_until_ready(jax.tree.leaves(params))
     wall = time.perf_counter() - t0
-    return {
-        "attack": sc.attack, "switcher": sc.switcher,
-        "aggregator": sc.aggregator, "driver": driver, "m": m, "T": T,
-        "final": task.objective(params),
-        "failsafe_trips": sum(1 for l in logs if l.level >= 1 and not l.failsafe_ok),
-        "mean_level": sum(l.level for l in logs) / max(len(logs), 1),
-        "cost": sum(l.cost for l in logs),
-        "wall_s": wall,
-    }
+    return _row(task, sc, params, logs, driver=driver, m=m, T=T, wall=wall)
 
 
 def run_matrix(
@@ -150,8 +172,69 @@ def run_matrix(
     V: float,
     **kw,
 ) -> List[Dict[str, Any]]:
-    """Sweep every scenario through the compiled driver -> results table."""
+    """Sweep every scenario through the compiled driver -> results table.
+
+    ``driver="vmap"`` routes through ``run_matrix_vmapped`` (cells batched
+    into vmapped lane groups; unsharded only — combine with ``mesh=`` and it
+    raises); ``"scan"`` / ``"legacy"`` run one driver call per cell."""
+    if kw.get("driver") == "vmap":
+        if kw.get("mesh") is not None:
+            raise ValueError(
+                "driver='vmap' sweeps run unsharded; drop mesh= or use "
+                "driver='scan' for the sharded per-cell driver")
+        kw = {k: v for k, v in kw.items() if k not in ("driver", "mesh")}
+        return run_matrix_vmapped(task, scenarios, m=m, T=T, V=V, **kw)
     return [run_scenario(task, sc, m=m, T=T, V=V, **kw) for sc in scenarios]
+
+
+def run_matrix_vmapped(
+    task: Task,
+    scenarios: Sequence[Scenario],
+    *,
+    m: int,
+    T: int,
+    V: float,
+    make_opt: Callable[[], Optimizer] = lambda: sgd(2e-2),
+    delta: float = 0.25,
+    kappa: float = 1.0,
+    j_cap: int = 7,
+    use_mlmc: bool = True,
+    seed: int = 0,
+    chunk: int = 0,
+) -> List[Dict[str, Any]]:
+    """Sweep a grid with cells batched into vmapped lanes (DESIGN.md §7).
+
+    Cells are grouped by everything that shapes the traced computation —
+    (attack, attack kwargs, aggregator) — and each group's switcher column
+    runs as lanes of one ``run_dynabro_scan_sweep`` call: one compiled
+    driver dispatch per group instead of per cell, equivalent numerics
+    (``tests/test_scenarios.py`` locks rows to the per-cell loop — exact
+    round logs, floats within the parity suite's 1e-6). Rows come back in
+    input order; duplicate scenarios are just duplicate lanes. ``wall_s`` is
+    the group wall clock amortized over its lanes."""
+    groups: Dict[Tuple, List[int]] = {}
+    for i, sc in enumerate(scenarios):
+        key = (sc.attack, sc.attack_kwargs, sc.aggregator)
+        groups.setdefault(key, []).append(i)
+    rows: List[Any] = [None] * len(scenarios)
+    sampler = task.make_sampler(m)
+    for idxs in groups.values():
+        cfg = _cell_cfg(scenarios[idxs[0]], m, T, V, kappa, j_cap, use_mlmc,
+                        delta)
+        switchers = [get_switcher(scenarios[i].switcher, m, seed=seed,
+                                  **dict(scenarios[i].switcher_kwargs))
+                     for i in idxs]
+        t0 = time.perf_counter()
+        outs = run_dynabro_scan_sweep(task.grad_fn, task.params0, make_opt(),
+                                      cfg, switchers, sampler, T, seed=seed,
+                                      chunk=chunk)
+        jax.block_until_ready(
+            [l for p, _ in outs for l in jax.tree.leaves(p)])
+        wall = (time.perf_counter() - t0) / max(len(idxs), 1)
+        for i, (params, logs) in zip(idxs, outs):
+            rows[i] = _row(task, scenarios[i], params, logs, driver="vmap",
+                           m=m, T=T, wall=wall)
+    return rows
 
 
 def format_table(rows: Sequence[Dict[str, Any]], value: str = "final",

@@ -33,8 +33,7 @@ attacks of Appendix J.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -145,6 +144,26 @@ def _exchange_worker_blocks(g: jax.Array, cfg: ShardedByzConfig, axis: int,
     starts = (0,) * (axis + 1) + (idx * blk,) + (0,) * (g.ndim - axis - 1)
     sizes = (cfg.m,) + g.shape[:axis] + (blk,) + g.shape[axis + 1:]
     return lax.dynamic_slice(stack, starts, sizes)
+
+
+# ------------------------------------------------- Mode A sharded substrate
+#
+# The compiled Mode A drivers (``core.robust_train.run_dynabro_scan``) reuse
+# this module's substrate to lay the m simulated workers across devices: the
+# per-worker gradient computation runs on each device's local worker slice,
+# then the stacks are re-assembled with a worker-axis all_gather so the attack
+# + aggregation code is *identical* to the single-device driver (DESIGN.md
+# §7 — this is what makes the 1-device parity contract bitwise). Unlike the
+# Mode B hooks above, the driver's shard_map region is *fully* manual (the
+# mesh has only worker axes), which legacy jax lowers fine — no psum
+# emulation needed.
+
+
+def gather_worker_stack(tree, axis_names):
+    """(m_local, ...)-leaf tree -> (m, ...) in device order, inside a
+    fully-manual shard_map region over ``axis_names``."""
+    return jax.tree.map(
+        lambda l: lax.all_gather(l, axis_names, axis=0, tiled=True), tree)
 
 
 # ------------------------------------------------------------ custom VJPs

@@ -12,7 +12,6 @@ is shape-static; statistics index only the valid prefix.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

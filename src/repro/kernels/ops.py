@@ -14,7 +14,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import combine as _combine_mod
 from repro.kernels import cwmed as _cwmed_mod

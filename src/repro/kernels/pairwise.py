@@ -9,8 +9,6 @@ across the sequential TPU grid => accumulation is safe).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

@@ -25,8 +25,6 @@ import subprocess  # noqa: E402
 import sys  # noqa: E402
 import time  # noqa: E402
 
-import jax  # noqa: E402
-
 from repro.configs import ARCH_IDS, SHAPES, get_config  # noqa: E402
 from repro.launch.mesh import make_production_mesh, set_mesh  # noqa: E402
 from repro.launch.steps import build_step  # noqa: E402

@@ -53,3 +53,29 @@ def n_workers(mesh) -> int:
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
     return jax.make_mesh(shape, axes)
+
+
+def worker_spec(waxes):
+    """PartitionSpec entry for a leading worker axis: the tuple of worker mesh
+    axes, collapsed to the bare name when there is only one."""
+    return tuple(waxes) if len(waxes) > 1 else waxes[0]
+
+
+def worker_iota(m: int):
+    """The worker-index-as-data iota (DESIGN.md §3): sharded over the worker
+    axes, each device's local slice is its own flattened worker index."""
+    import jax.numpy as jnp
+
+    return jnp.arange(m, dtype=jnp.float32)
+
+
+def make_worker_mesh(n_devices: int = 0, axis: str = "workers"):
+    """1-D mesh laying DynaBRO workers across devices — the substrate of the
+    sharded compiled driver (DESIGN.md §7). ``n_devices=0`` uses every device;
+    ``n_devices=1`` gives the parity-contract mesh (bitwise-identical to the
+    unsharded driver)."""
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    if n > len(devs):
+        raise ValueError(f"requested {n} devices, have {len(devs)}")
+    return jax.make_mesh((n,), (axis,), devices=devs[:n])

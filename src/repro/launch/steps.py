@@ -15,7 +15,6 @@ ShapeDtypeStructs with NamedShardings — ready for ``.lower().compile()``.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import os
 from typing import Any, Optional, Tuple
 
@@ -26,8 +25,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.sharded import ShardedByzConfig, make_param_hook
 from repro.launch import sharding as shl
-from repro.launch.mesh import shard_map, worker_axes, n_workers
-from repro.models import init_cache, init_params, loss_fn, decode_step, prefill
+from repro.launch.mesh import (
+    n_workers, shard_map, worker_axes, worker_iota, worker_spec,
+)
+from repro.models import loss_fn, decode_step, prefill
 from repro.models import scan_compat
 
 # jax <= 0.4.x: model scans inside the Mode B partial-manual region must
@@ -90,7 +91,7 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
 
     B = shape.global_batch * (2 ** level)
     S = shape.seq_len
-    wspec = waxes if len(waxes) > 1 else waxes[0]
+    wspec = worker_spec(waxes)
 
     def step_local(params, opt_state, batch, maskf, widx):
         with scan_compat.unrolled_scans(_LEGACY_PARTIAL_MANUAL):
@@ -126,8 +127,7 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
     def stepped(params, opt_state, batch, maskf):
         # worker-index iota: sharding over the worker axes hands each device
         # its own flattened index as data (see core.sharded.make_param_hook)
-        return smapped(params, opt_state, batch, maskf,
-                       jnp.arange(m, dtype=jnp.float32))
+        return smapped(params, opt_state, batch, maskf, worker_iota(m))
 
     jitted = jax.jit(
         stepped,
@@ -267,7 +267,7 @@ def build_mlmc_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
     MLMC combine guarded by the fail-safe event E_t (Eq. 6). ‖ĝ^J − ĝ^{J−1}‖
     is a global norm assembled with one scalar psum over the worker axes.
     """
-    from repro.core.mlmc import level_prefix, mlmc_combine
+    from repro.core.mlmc import level_prefix
     from repro.core.sharded import tree_sq_norm
 
     waxes = worker_axes(mesh)
@@ -281,7 +281,7 @@ def build_mlmc_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
     j = level
     B = shape.global_batch
     S = shape.seq_len
-    wspec = waxes if len(waxes) > 1 else waxes[0]
+    wspec = worker_spec(waxes)
 
     def _slice_batch(batch, n_units):
         # local (per-worker) batch holds (B/m)·2^j rows; level-n slice = prefix
@@ -324,8 +324,7 @@ def build_mlmc_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
         axis_names=set(waxes), check_vma=False)
 
     def stepped(params, opt_state, batch, maskf):
-        return smapped(params, opt_state, batch, maskf,
-                       jnp.arange(m, dtype=jnp.float32))
+        return smapped(params, opt_state, batch, maskf, worker_iota(m))
 
     jitted = jax.jit(
         stepped,

@@ -15,7 +15,6 @@ On this CPU container, pass ``--devices N`` to spawn N placeholder devices
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time

@@ -6,7 +6,6 @@ train_4k / prefill_32k dry-runs inside the per-chip HBM budget.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

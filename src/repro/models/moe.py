@@ -41,9 +41,11 @@ def _topk_dispatch(probs: jax.Array, top_k: int, capacity: int):
         # legacy Mode B: cumsum lowers to ReduceWindow, which the partial-
         # manual SPMD partitioner rejects — associative_scan lowers to
         # log-depth pad/add instead (DESIGN.md §3)
-        csum = lambda a: jax.lax.associative_scan(jnp.add, a, axis=0)
+        def csum(a):
+            return jax.lax.associative_scan(jnp.add, a, axis=0)
     else:
-        csum = lambda a: jnp.cumsum(a, axis=0)
+        def csum(a):
+            return jnp.cumsum(a, axis=0)
     for k in range(top_k):
         m = jax.nn.one_hot(idx[:, k], E, dtype=jnp.int32)  # (N, E)
         pos = csum(m) - m + counts[None, :]  # position within expert

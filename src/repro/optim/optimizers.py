@@ -10,7 +10,7 @@ Minimal optax-like interface: ``init(params) -> state``,
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp

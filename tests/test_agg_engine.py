@@ -24,7 +24,8 @@ def _mk(m, d, seed=0):
 def _model_tree(m, seed=0):
     """Gradient-pytree shapes from a small transformer-ish model."""
     rng = np.random.default_rng(seed)
-    mk = lambda *s: jnp.asarray(rng.normal(size=(m,) + s).astype(np.float32))
+    def mk(*s):
+        return jnp.asarray(rng.normal(size=(m,) + s).astype(np.float32))
     return {
         "embed": mk(32, 16),
         "blocks": {"wq": mk(2, 16, 16), "norm": mk(2, 16), "moe": mk(2, 4, 16, 8)},

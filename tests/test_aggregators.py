@@ -1,12 +1,11 @@
 """Property tests for the robust aggregation rules."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from _hyp import given, settings, st  # hypothesis, or offline fallback
 
 from repro.core.aggregators import (
-    CWMed, CWTM, GeoMed, Krum, MFM, Mean, NNM, get_aggregator,
+    CWMed, CWTM, GeoMed, Krum, MFM, Mean, get_aggregator,
     pairwise_sqdists, tree_stack_to_mat, mat_to_tree,
 )
 

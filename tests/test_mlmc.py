@@ -1,10 +1,8 @@
 """MLMC estimator properties (Lemma 3.1) and the fail-safe filter (Eq. 6)."""
 import math
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hyp import given, settings, st  # hypothesis, or offline fallback
 
 from repro.core.mlmc import (

@@ -228,9 +228,12 @@ def test_flash_attention_matches_chunked_oracle():
         q = jax.random.normal(key, (B, S, H, hd))
         k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd))
         v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd))
-        f = lambda q, k, v: flash_attention(q, k, v, causal, window, 0, 8, "")
-        r = lambda q, k, v: chunked_attention(q, k, v, causal=causal,
-                                              window=window, q_chunk=8, kv_chunk=8)
+        def f(q, k, v):
+            return flash_attention(q, k, v, causal, window, 0, 8, "")
+
+        def r(q, k, v):
+            return chunked_attention(q, k, v, causal=causal, window=window,
+                                     q_chunk=8, kv_chunk=8)
         np.testing.assert_allclose(np.asarray(f(q, k, v)), np.asarray(r(q, k, v)),
                                    rtol=2e-4, atol=2e-4)
         gf = jax.grad(lambda *a: jnp.sum(jnp.sin(f(*a))), argnums=(0, 1, 2))(q, k, v)

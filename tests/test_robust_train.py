@@ -5,7 +5,6 @@ Problem: 2D quadratic f(x) = 0.5 xᵀAx (Appendix E's setup) — exact optimum 0
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.mlmc import MLMCConfig
 from repro.core.robust_train import (

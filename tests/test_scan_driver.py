@@ -206,8 +206,11 @@ def test_momentum_scan_parity():
     m = 3
     cfg = _cfg("cwmed", "shift", m=m, v=3.0)
     sampler = TASK.make_sampler(m)
-    ev = lambda p, t: {"f": TASK.objective(p)}
-    sw = lambda: get_switcher("momentum_tailored", m, alpha=0.05)
+    def ev(p, t):
+        return {"f": TASK.objective(p)}
+
+    def sw():
+        return get_switcher("momentum_tailored", m, alpha=0.05)
     p1, e1 = run_momentum(TASK.grad_fn, TASK.params0, cfg, sw(), sampler, T,
                           lr=2e-2, beta=0.95, seed=1, eval_fn=ev,
                           eval_every=32)
@@ -239,7 +242,8 @@ def test_scan_parity_mlp(use_mlmc, agg):
     cfg = DynaBROConfig(
         mlmc=MLMCConfig(T=T, m=m, V=3.0, kappa=1.0, j_cap=3),
         aggregator=agg, delta=0.34, attack="sign_flip", use_mlmc=use_mlmc)
-    sw = lambda: get_switcher("periodic", m, n_byz=2, K=10)
+    def sw():
+        return get_switcher("periodic", m, n_byz=2, K=10)
     p1, l1, _ = run_dynabro(grad_fn, params0, sgd(5e-2), cfg, sw(), sampler,
                             T, seed=7)
     p2, l2, _ = run_dynabro_scan(grad_fn, params0, sgd(5e-2), cfg, sw(),

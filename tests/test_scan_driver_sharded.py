@@ -1,0 +1,191 @@
+"""Sharded compiled driver parity (DESIGN.md §7).
+
+Contract: ``run_dynabro_scan(..., mesh=...)`` / ``run_momentum_scan(...,
+mesh=...)`` lay the m simulated workers across the devices of a 1-axis
+``workers`` mesh and are **bitwise identical** to the unsharded driver — on a
+1-device mesh by construction (the acceptance contract, tested in-process),
+and across real device counts because only the per-worker gradient vmap is
+split; the attack/aggregation/update body runs on the gathered full stack.
+
+Multi-device cases run in subprocesses with forced host devices so the main
+pytest process keeps seeing 1 CPU device (same pattern as test_sharded.py).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.mlmc import MLMCConfig
+from repro.core.robust_train import (
+    DynaBROConfig, run_dynabro_scan, run_momentum_scan,
+)
+from repro.core.scenarios import make_quadratic_task, run_scenario, scenario_grid
+from repro.core.switching import get_switcher
+from repro.launch.mesh import make_worker_mesh
+from repro.optim.optimizers import sgd
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+TASK = make_quadratic_task()
+T = 48
+M = 8
+
+
+def _cfg(agg="cwmed", attack="sign_flip", **kw):
+    return DynaBROConfig(
+        mlmc=MLMCConfig(T=T, m=M, V=3.0, kappa=1.0),
+        aggregator=agg, delta=0.45, attack=attack, **kw)
+
+
+def _sw():
+    return get_switcher("periodic", M, n_byz=3, K=10)
+
+
+def _assert_logs_equal(l1, l2):
+    assert [l.level for l in l1] == [l.level for l in l2]
+    assert [l.failsafe_ok for l in l1] == [l.failsafe_ok for l in l2]
+    assert [l.n_byz for l in l1] == [l.n_byz for l in l2]
+    assert [l.cost for l in l1] == [l.cost for l in l2]
+
+
+@pytest.mark.parametrize("agg,attack", [
+    ("cwmed", "sign_flip"),
+    ("cwtm", "ipm"),
+    ("mfm", "alie"),
+])
+def test_sharded_one_device_mesh_is_bitwise(agg, attack):
+    """The acceptance contract: a 1-device worker mesh is bitwise-identical
+    to the unsharded compiled driver — same ops, shard_map is a no-op wrap."""
+    cfg = _cfg(agg, attack)
+    sampler = TASK.make_sampler(M)
+    p0, l0, _ = run_dynabro_scan(TASK.grad_fn, TASK.params0, sgd(2e-2), cfg,
+                                 _sw(), sampler, T, seed=3)
+    p1, l1, _ = run_dynabro_scan(TASK.grad_fn, TASK.params0, sgd(2e-2), cfg,
+                                 _sw(), sampler, T, seed=3,
+                                 mesh=make_worker_mesh(1))
+    np.testing.assert_array_equal(np.asarray(p0["x"]), np.asarray(p1["x"]))
+    _assert_logs_equal(l0, l1)
+
+
+def test_sharded_momentum_one_device_mesh_is_bitwise():
+    cfg = _cfg("cwmed", "shift", attack_kwargs={"v": 3.0})
+    sampler = TASK.make_sampler(M)
+    p0, _ = run_momentum_scan(TASK.grad_fn, TASK.params0, cfg, _sw(), sampler,
+                              T, lr=2e-2, beta=0.9, seed=1)
+    p1, _ = run_momentum_scan(TASK.grad_fn, TASK.params0, cfg, _sw(), sampler,
+                              T, lr=2e-2, beta=0.9, seed=1,
+                              mesh=make_worker_mesh(1))
+    np.testing.assert_array_equal(np.asarray(p0["x"]), np.asarray(p1["x"]))
+
+
+def test_sharded_scenario_cell_matches_unsharded():
+    """run_scenario(mesh=...) drives the sharded path end to end."""
+    grid = scenario_grid(["sign_flip"], [("static", {"n_byz": 3})], ["cwmed"])
+    row0 = run_scenario(TASK, grid[0], m=M, T=40, V=3.0)
+    row1 = run_scenario(TASK, grid[0], m=M, T=40, V=3.0,
+                        mesh=make_worker_mesh(1))
+    assert row0["final"] == row1["final"]
+    assert row0["cost"] == row1["cost"]
+    assert row0["failsafe_trips"] == row1["failsafe_trips"]
+
+
+def test_sharded_rejects_bad_meshes():
+    import jax
+
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="1-axis"):
+        run_dynabro_scan(TASK.grad_fn, TASK.params0, sgd(2e-2), cfg, _sw(),
+                         TASK.make_sampler(M), 8,
+                         mesh=jax.make_mesh((1, 1), ("data", "model")))
+    # m=9 on a 2-device axis cannot split evenly -> build-time error; needs
+    # >=2 devices, so exercise it in a subprocess
+    _run("""
+        cfg = DynaBROConfig(mlmc=MLMCConfig(T=8, m=9, V=3.0, kappa=1.0),
+                            aggregator="cwmed", delta=0.3, attack="sign_flip")
+        try:
+            run_dynabro_scan(task.grad_fn, task.params0, sgd(2e-2), cfg,
+                             get_switcher("static", 9, n_byz=2),
+                             task.make_sampler(9), 8, mesh=make_worker_mesh(2))
+        except ValueError as e:
+            assert "not divisible" in str(e), e
+            print("OK")
+        else:
+            raise SystemExit("expected ValueError")
+    """)
+
+
+# ------------------------------------------------------- multi-device cases
+
+
+def _run(body: str):
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, %r)
+        import jax, numpy as np
+        from repro.core.mlmc import MLMCConfig
+        from repro.core.robust_train import (DynaBROConfig, run_dynabro_scan,
+                                             run_momentum_scan)
+        from repro.core.scenarios import make_quadratic_task
+        from repro.core.switching import get_switcher
+        from repro.launch.mesh import make_worker_mesh
+        from repro.optim.optimizers import sgd
+        T, m = 40, 8
+        task = make_quadratic_task()
+        sampler = task.make_sampler(m)
+    """ % SRC) + textwrap.dedent(body)
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=900)
+    assert r.returncode == 0, r.stdout[-4000:] + "\n" + r.stderr[-4000:]
+    return r.stdout
+
+
+def test_sharded_multi_device_parity():
+    """m=8 workers across 2/4/8 devices: bitwise parity with the unsharded
+    driver, including the omniscient attacks whose statistics span the whole
+    (post-gather) worker stack, and identical fail-safe traces."""
+    _run("""
+        for attack in ("sign_flip", "ipm", "alie"):
+            cfg = DynaBROConfig(mlmc=MLMCConfig(T=T, m=m, V=3.0, kappa=1.0),
+                                aggregator="cwtm", delta=0.3, attack=attack)
+            sw = lambda: get_switcher("periodic", m, n_byz=2, K=7)
+            p0, l0, _ = run_dynabro_scan(task.grad_fn, task.params0, sgd(2e-2),
+                                         cfg, sw(), sampler, T, seed=4)
+            for nd in (2, 4, 8):
+                p, l, _ = run_dynabro_scan(task.grad_fn, task.params0,
+                                           sgd(2e-2), cfg, sw(), sampler, T,
+                                           seed=4, mesh=make_worker_mesh(nd))
+                np.testing.assert_array_equal(np.asarray(p0["x"]),
+                                              np.asarray(p["x"]))
+                assert [x.failsafe_ok for x in l0] == [x.failsafe_ok for x in l]
+        print("OK")
+    """)
+
+
+def test_sharded_multi_device_momentum_and_chunking():
+    _run("""
+        cfg = DynaBROConfig(mlmc=MLMCConfig(T=T, m=m, V=3.0, kappa=1.0),
+                            aggregator="cwmed", delta=0.3, attack="alie")
+        sw = lambda: get_switcher("momentum_tailored", m, alpha=0.1)
+        p0, _ = run_momentum_scan(task.grad_fn, task.params0, cfg, sw(),
+                                  sampler, T, lr=2e-2, beta=0.9)
+        p1, _ = run_momentum_scan(task.grad_fn, task.params0, cfg, sw(),
+                                  sampler, T, lr=2e-2, beta=0.9,
+                                  mesh=make_worker_mesh(4))
+        np.testing.assert_array_equal(np.asarray(p0["x"]), np.asarray(p1["x"]))
+        # chunking stays invisible under sharding
+        cfg2 = DynaBROConfig(mlmc=MLMCConfig(T=T, m=m, V=3.0, kappa=1.0),
+                             aggregator="cwmed", delta=0.3, attack="sign_flip")
+        sw2 = lambda: get_switcher("periodic", m, n_byz=2, K=7)
+        a, _, _ = run_dynabro_scan(task.grad_fn, task.params0, sgd(2e-2), cfg2,
+                                   sw2(), sampler, T, seed=4,
+                                   mesh=make_worker_mesh(4))
+        b, _, _ = run_dynabro_scan(task.grad_fn, task.params0, sgd(2e-2), cfg2,
+                                   sw2(), sampler, T, seed=4, chunk=16,
+                                   mesh=make_worker_mesh(4))
+        np.testing.assert_array_equal(np.asarray(a["x"]), np.asarray(b["x"]))
+        print("OK")
+    """)

@@ -1,0 +1,105 @@
+"""``core.scenarios`` edge cases + the vmapped sweep contract (DESIGN.md §7).
+
+The vmapped matrix (``driver="vmap"``) must be a drop-in for the per-cell
+compiled loop: same tidy rows, in input order, equal numerics lane for lane.
+Both paths run the identical scan body — vmap only adds a lane axis to the
+masks and the model state — but batching may reorder float ops at ULP level
+(XLA fuses the batched body differently), so float fields are locked to the
+parity suite's 1e-6 tolerance while the integer round logs (levels,
+fail-safe trips, costs) must match exactly.
+"""
+import numpy as np
+import pytest
+
+from repro.core.robust_train import run_dynabro_scan_sweep
+from repro.core.scenarios import (
+    Scenario, format_table, make_quadratic_task, run_matrix,
+    run_matrix_vmapped, scenario_grid,
+)
+from repro.core.switching import get_switcher
+
+TASK = make_quadratic_task()
+M = 9
+
+
+def test_empty_grid():
+    assert scenario_grid([], [], []) == []
+    assert run_matrix(TASK, [], m=M, T=10, V=3.0) == []
+    assert run_matrix(TASK, [], m=M, T=10, V=3.0, driver="vmap") == []
+
+
+def test_single_cell_grid():
+    grid = scenario_grid(["sign_flip"], [("static", {"n_byz": 3})], ["cwmed"])
+    assert len(grid) == 1 and grid[0].name == "sign_flip|static|cwmed"
+    [row_v] = run_matrix(TASK, grid, m=M, T=24, V=3.0, driver="vmap")
+    [row_s] = run_matrix(TASK, grid, m=M, T=24, V=3.0, driver="scan")
+    assert row_v["driver"] == "vmap" and row_s["driver"] == "scan"
+    np.testing.assert_allclose(row_v["final"], row_s["final"], rtol=1e-6,
+                               atol=1e-7)
+    assert row_v["cost"] == row_s["cost"]
+    assert row_v["failsafe_trips"] == row_s["failsafe_trips"]
+
+
+def test_duplicate_scenario_names():
+    """Duplicate cells are legal: they become duplicate lanes/rows with equal
+    results, and format_table keeps one column/line per distinct key."""
+    sc = Scenario("sign_flip", "static", "cwmed",
+                  switcher_kwargs=(("n_byz", 3),))
+    rows = run_matrix(TASK, [sc, sc], m=M, T=24, V=3.0, driver="vmap")
+    assert len(rows) == 2
+    assert rows[0]["final"] == rows[1]["final"]
+    assert rows[0]["cost"] == rows[1]["cost"]
+    table = format_table(rows)
+    assert table.count("cwmed") == 1
+
+
+@pytest.mark.parametrize("use_mlmc", [True, False])
+def test_vmapped_matrix_equals_looped_matrix(use_mlmc):
+    """Row-for-row equality of the vmapped sweep against the per-cell loop
+    across a grid mixing attacks, switchers (the vmapped lane axis) and
+    aggregators (incl. MFM's option-2 config)."""
+    grid = scenario_grid(
+        ["sign_flip", ("ipm", {"eps": 0.3})],
+        [("periodic", {"n_byz": 3, "K": 5}), ("static", {"n_byz": 3}),
+         ("bernoulli", {"p": 0.1, "D": 5, "delta_max": 0.5})],
+        ["cwmed", "mfm"])
+    assert len(grid) == 12
+    kw = dict(m=M, T=32, V=3.0, delta=3 / M + 0.01, j_cap=3,
+              use_mlmc=use_mlmc, seed=2)
+    rows_v = run_matrix(TASK, grid, driver="vmap", **kw)
+    rows_s = run_matrix(TASK, grid, driver="scan", **kw)
+    assert [r["switcher"] for r in rows_v] == [r["switcher"] for r in rows_s]
+    for rv, rs in zip(rows_v, rows_s):
+        np.testing.assert_allclose(rv["final"], rs["final"], rtol=1e-6,
+                                   atol=1e-7, err_msg=str((rv, rs)))
+        assert rv["failsafe_trips"] == rs["failsafe_trips"]
+        assert rv["mean_level"] == rs["mean_level"]
+        assert rv["cost"] == rs["cost"]
+
+
+def test_vmapped_chunking_is_invisible():
+    grid = scenario_grid(["sign_flip"],
+                         [("periodic", {"n_byz": 3, "K": 5}),
+                          ("static", {"n_byz": 3})], ["cwmed"])
+    r0 = run_matrix_vmapped(TASK, grid, m=M, T=32, V=3.0)
+    r16 = run_matrix_vmapped(TASK, grid, m=M, T=32, V=3.0, chunk=16)
+    for a, b in zip(r0, r16):
+        assert a["final"] == b["final"]
+
+
+def test_sweep_driver_T0_and_empty():
+    from repro.core.mlmc import MLMCConfig
+    from repro.core.robust_train import DynaBROConfig
+    from repro.optim.optimizers import sgd
+
+    cfg = DynaBROConfig(mlmc=MLMCConfig(T=8, m=M, V=3.0, kappa=1.0),
+                        aggregator="cwmed", delta=0.45, attack="sign_flip")
+    assert run_dynabro_scan_sweep(TASK.grad_fn, TASK.params0, sgd(2e-2), cfg,
+                                  [], TASK.make_sampler(M), 8) == []
+    outs = run_dynabro_scan_sweep(TASK.grad_fn, TASK.params0, sgd(2e-2), cfg,
+                                  [get_switcher("static", M, n_byz=2)],
+                                  TASK.make_sampler(M), 0)
+    [(p, logs)] = outs
+    assert logs == []
+    np.testing.assert_array_equal(np.asarray(p["x"]),
+                                  np.asarray(TASK.params0["x"]))

@@ -5,7 +5,6 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs import ARCH_IDS, SHAPES, get_config, reduced
