@@ -7,7 +7,7 @@ import math
 
 import numpy as np
 
-from repro.core.mlmc import MLMCConfig, expected_cost, sample_level
+from repro.core.mlmc import MLMCConfig, round_cost, sample_level
 
 
 def run(T: int = 1024, m: int = 16, n_byz: int = 4, trials: int = 30_000, seed: int = 0):
@@ -26,14 +26,13 @@ def run(T: int = 1024, m: int = 16, n_byz: int = 4, trials: int = 30_000, seed: 
 
     outs, costs = [], []
     for _ in range(trials):
-        j = min(sample_level(rng, cfg.j_max), cfg.j_max + 1)
+        j = sample_level(rng, cfg.j_max)  # truncated at j_max + 1
         g0 = agg_level(1)
         if j <= cfg.j_max:
             g = g0 + (2 ** j) * (agg_level(2 ** j) - agg_level(2 ** (j - 1)))
-            costs.append(expected_cost(j))
-        else:
+        else:  # beyond cap: correction dropped
             g = g0
-            costs.append(1)
+        costs.append(round_cost(j, cfg.j_max))
         outs.append(g)
     outs = np.asarray(outs)
     bias_mlmc = abs(outs.mean() - true)

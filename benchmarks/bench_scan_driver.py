@@ -16,9 +16,14 @@ Two more row families feed the CI perf gates (benchmarks/check_regression.py):
 * ``sweep_loop_C8`` / ``sweep_vmap_C8`` — an 8-cell switcher sweep through
   per-cell compiled calls vs one vmapped lane-batched call
   (``run_dynabro_scan_sweep``); the vmapped row must hold a ≥2x speedup.
+* ``sweep_attack_loop_A4xS4`` / ``sweep_vmap_attacks`` — a 4-attack ×
+  4-switcher grid through one vmapped call per attack group (the old
+  grouping) vs all 16 lanes in a single call with the per-lane attack
+  dispatch; the lane-batched row must hold a ≥2x speedup.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -26,8 +31,8 @@ import numpy as np
 
 from repro.core.mlmc import MLMCConfig
 from repro.core.robust_train import (
-    DynaBROConfig, make_dynabro_scan_fn, make_dynabro_step, run_dynabro,
-    run_dynabro_scan, run_dynabro_scan_sweep,
+    DynaBROConfig, _lane_attack_plan, make_dynabro_scan_fn, make_dynabro_step,
+    run_dynabro, run_dynabro_scan, run_dynabro_scan_sweep,
 )
 from repro.core.scenarios import make_quadratic_task
 from repro.core.switching import get_switcher
@@ -35,6 +40,8 @@ from repro.launch.mesh import make_worker_mesh
 from repro.optim.optimizers import sgd
 
 SWEEP_KS = (5, 8, 10, 15, 20, 25, 40, 50)  # C=8 periodic switcher cells
+ATTACK_SPECS = ("sign_flip", ("ipm", {"eps": 0.3}), "alie", "none")
+ATTACK_KS = (5, 10, 20, 50)  # the switcher column of the attack grid
 
 
 def _time(fn, iters: int):
@@ -132,6 +139,65 @@ def run_sweep(T: int = 64, m: int = 9, iters: int = 3, seed: int = 0):
     return _time(t_loop, iters), _time(t_vmap, iters)
 
 
+def run_attack_sweep(T: int = 64, m: int = 9, iters: int = 3, seed: int = 0):
+    """(us_group_loop, us_lanes) for the 4-attack × 4-switcher grid.
+
+    The baseline is the pre-lane-batching grouping: one vmapped sweep per
+    (attack, kwargs) group — 4 steady-state dispatches (scan_fns prebuilt per
+    group, wrappers held in the sweep's MRU cache). The contender runs all
+    16 cells as lanes of ONE call via the per-lane attack dispatch. Lanes
+    are equality-checked against the group loop at the sweep tolerance
+    before timing."""
+    task, cfg, sampler, opt = _setup(T, m)
+    specs = [(a, {}) if isinstance(a, str) else a for a in ATTACK_SPECS]
+    group_cfgs = [dataclasses.replace(cfg, attack=n, attack_kwargs=kw or None)
+                  for n, kw in specs]
+    group_fns = [make_dynabro_scan_fn(task.grad_fn, c, opt)
+                 for c in group_cfgs]
+    lane_attacks = [a for a in ATTACK_SPECS for _ in ATTACK_KS]
+    # derive the lax.switch branch order from the sweep's own plan, so the
+    # prebuilt lane_fn always passes its lane_attacks consistency check
+    lane_names, _, _ = _lane_attack_plan(lane_attacks)
+    lane_fn = make_dynabro_scan_fn(task.grad_fn, cfg, opt,
+                                   lane_attacks=lane_names)
+
+    def make_sws():
+        return [get_switcher("periodic", m, n_byz=4, K=K, seed=seed)
+                for K in ATTACK_KS]
+
+    def group_loop():
+        outs = []
+        for c, fn in zip(group_cfgs, group_fns):
+            outs.extend(run_dynabro_scan_sweep(
+                task.grad_fn, task.params0, opt, c, make_sws(), sampler, T,
+                seed=seed, scan_fn=fn))
+        return outs
+
+    def lanes():
+        return run_dynabro_scan_sweep(
+            task.grad_fn, task.params0, opt, cfg,
+            [sw for _ in specs for sw in make_sws()], sampler, T, seed=seed,
+            scan_fn=lane_fn, attacks=lane_attacks)
+
+    per_group = group_loop()
+    per_lane = lanes()
+    for (p_ref, logs_ref), (p_lane, logs_lane) in zip(per_group, per_lane):
+        assert logs_ref == logs_lane
+        np.testing.assert_allclose(np.asarray(p_ref["x"]),
+                                   np.asarray(p_lane["x"]),
+                                   rtol=1e-6, atol=1e-7)
+
+    def t_loop():
+        outs = group_loop()
+        return (outs[-1][0],)
+
+    def t_lanes():
+        outs = lanes()
+        return (outs[-1][0],)
+
+    return _time(t_loop, iters), _time(t_lanes, iters)
+
+
 def main(fast: bool = False):
     iters = 2 if fast else 3
     rows = []
@@ -149,6 +215,11 @@ def main(fast: bool = False):
     rows.append(f"scan_driver/sweep_loop_C{C},{us_loop:.0f},")
     rows.append(f"scan_driver/sweep_vmap_C{C},{us_vmap:.0f},"
                 f"speedup={us_loop / us_vmap:.1f}x")
+    us_groups, us_lanes = run_attack_sweep(iters=iters)
+    a, s = len(ATTACK_SPECS), len(ATTACK_KS)
+    rows.append(f"scan_driver/sweep_attack_loop_A{a}xS{s},{us_groups:.0f},")
+    rows.append(f"scan_driver/sweep_vmap_attacks,{us_lanes:.0f},"
+                f"speedup={us_groups / us_lanes:.1f}x")
     return rows
 
 

@@ -27,6 +27,8 @@ GATES = [
     ("scan_driver/sharded_T256", "overhead", 1.5, "<="),
     # vmapped scenario sweep vs per-cell compiled loop (~6-13x dev)
     ("scan_driver/sweep_vmap_C8", "speedup", 2.0, ">="),
+    # attack-lane-batched sweep vs one vmapped call per attack group (~3x dev)
+    ("scan_driver/sweep_vmap_attacks", "speedup", 2.0, ">="),
 ]
 
 

@@ -1,9 +1,13 @@
 """Attack × aggregator gallery: who survives what?
 
-Sweeps the paper's attacks (SF / IPM / ALIE) against every aggregation rule
-on the quadratic testbed under dynamic (Periodic) switching, via the
-scenario-matrix runner on top of the compiled ``lax.scan`` driver
-(``core/scenarios.py``). Prints a survival matrix of final optimality gaps.
+Sweeps the paper's attacks (SF / IPM / ALIE) — including kwarg variants like
+a strong ``ipm(eps=0.9)`` and the Baruch et al. auto-z ``alie(z=None)`` —
+against every aggregation rule on the quadratic testbed under dynamic
+(Periodic) switching. Runs through ``run_matrix(driver="vmap")``: all attack
+variants of an aggregator are lanes of ONE vmapped compiled call (per-lane
+attack dispatch, DESIGN.md §7), so the whole grid costs one dispatch per
+aggregator. Prints a survival matrix of final optimality gaps with
+kwarg-qualified columns.
 
   PYTHONPATH=src python examples/attack_gallery.py
 """
@@ -20,15 +24,18 @@ from repro.core.scenarios import (
 def main():
     m, n_byz, T = 9, 3, 250
     aggs = ["mean", "cwmed", "cwtm", "krum", "geomed", "nnm+cwmed", "mfm"]
-    attacks = ["sign_flip", "ipm", "alie"]
+    attacks = ["sign_flip", ("ipm", {"eps": 0.1}), ("ipm", {"eps": 0.9}),
+               "alie", ("alie", {"z": None})]
     switchers = [("periodic", {"n_byz": n_byz, "K": 20})]
     task = make_quadratic_task()
     rows = run_matrix(task, scenario_grid(attacks, switchers, aggs),
-                      m=m, T=T, V=3.0, delta=n_byz / m + 0.01, j_cap=4)
+                      m=m, T=T, V=3.0, delta=n_byz / m + 0.01, j_cap=4,
+                      driver="vmap")
     print(format_table(rows))
     total_wall = sum(r["wall_s"] for r in rows)
     print(f"\n(gap ≈ 0 => survived; mean should fail, robust rules survive; "
-          f"{len(rows)} scenarios in {total_wall:.1f}s via the scan driver)")
+          f"{len(rows)} scenarios in {total_wall:.1f}s — one vmapped dispatch "
+          f"per aggregator)")
 
 
 if __name__ == "__main__":

@@ -4,13 +4,23 @@ Every attack maps a stacked honest-gradient tree (leading worker axis m) and a
 boolean Byzantine mask (m,) to the attacked stack. Honest statistics (mean,
 std) are computed over the honest workers only — the strongest, omniscient
 variant used in the paper.
+
+Attack parameters (``scale`` / ``eps`` / ``z`` / ``v``) are plain scalar
+multipliers inside the leaf math, so every attack works with *traced* scalars
+as well as Python floats. The uniform-signature layer at the bottom
+(``ATTACK_PARAMS`` / ``attack_theta`` / ``attack_switch``) packages that: the
+lane-batched scenario sweep (``core/robust_train.py``) dispatches a per-lane
+attack id over a ``lax.switch`` whose branches all share the
+``(stacked, mask, key, theta)`` signature, with ``theta`` a parameter vector
+carried as data.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def _honest_mean(l, mask):
@@ -40,15 +50,39 @@ def ipm(stacked, mask, key=None, eps: float = 0.1):
     return _apply(stacked, mask, leaf)
 
 
-def alie(stacked, mask, key=None, z: float = 1.22):
-    """A Little Is Enough (Baruch et al., 2019): mean − z·std, element-wise."""
+def alie_auto_z(mask) -> jax.Array:
+    """The Baruch et al. (2019) z_max, from the Byzantine count in ``mask``.
+
+    With m workers of which b are Byzantine, the attacker needs
+    ``s = ⌊m/2 + 1⌋ − b`` honest "supporters" closer to the shifted value
+    than to the honest mean; the largest undetected shift is
+    ``z = Φ⁻¹((m − b − s) / (m − b))``. Pure jnp, so b may be traced (the
+    mask is data in the compiled drivers)."""
+    m = mask.shape[0]
+    b = jnp.sum(mask.astype(jnp.float32))
+    s = jnp.floor(m / 2.0 + 1.0) - b
+    good = jnp.maximum(m - b, 1.0)
+    frac = (good - s) / good
+    return jax.scipy.special.ndtri(
+        jnp.clip(frac, 1e-6, 1.0 - 1e-6)).astype(jnp.float32)
+
+
+def alie(stacked, mask, key=None, z: Optional[float] = 1.22):
+    """A Little Is Enough (Baruch et al., 2019): mean − z·std, element-wise.
+
+    ``z=None`` (NaN in the traced ``theta`` path) derives z from (m, n_byz)
+    via ``alie_auto_z`` instead of the fixed default; the 1.22 default keeps
+    existing goldens untouched."""
+    zz = jnp.asarray(jnp.nan if z is None else z, jnp.float32)
+    z_eff = jnp.where(jnp.isnan(zz), alie_auto_z(mask), zz)
+
     def leaf(l):
         w = (~mask).astype(jnp.float32)
         wn = w / jnp.maximum(w.sum(), 1.0)
         wb = wn.reshape((-1,) + (1,) * (l.ndim - 1))
         mu = (l.astype(jnp.float32) * wb).sum(0)
         var = (jnp.square(l.astype(jnp.float32) - mu) * wb).sum(0)
-        return jnp.broadcast_to(mu - z * jnp.sqrt(var + 1e-12), l.shape)
+        return jnp.broadcast_to(mu - z_eff * jnp.sqrt(var + 1e-12), l.shape)
     return _apply(stacked, mask, leaf)
 
 
@@ -85,6 +119,83 @@ def get_attack(name: str, **kw) -> Callable:
     if kw:
         return lambda s, m, key=None: fn(s, m, key=key, **kw)
     return fn
+
+
+# ----------------------------------------- uniform traced-theta dispatch
+#
+# The lane-batched sweep (``run_dynabro_scan_sweep``) runs cells with
+# *different* attacks as lanes of one vmapped scan, so the attack choice and
+# its parameters must be data, not Python closure constants. Slot i of a
+# lane's ``theta`` vector holds the i-th parameter of its attack per
+# ``ATTACK_PARAMS`` (NaN in alie's z slot encodes ``z=None`` → derive z from
+# the mask); ``attack_switch(names)`` builds the ``lax.switch`` applier over
+# the compact branch set actually present in the sweep.
+
+ATTACK_PARAMS: Dict[str, Tuple[Tuple[str, float], ...]] = {
+    "none": (),
+    "sign_flip": (("scale", 1.0),),
+    "ipm": (("eps", 0.1),),
+    "alie": (("z", 1.22),),
+    "random": (("scale", 10.0),),
+    "shift": (("v", 1.0),),
+}
+N_PARAMS = max(len(spec) for spec in ATTACK_PARAMS.values())
+
+# parameters that accept None (encoded as NaN in theta AND interpreted by
+# the attack); None for any other parameter would silently turn into NaN
+# gradients on the lane path while the eager kwarg path raises — reject it
+NAN_SENTINEL_PARAMS = {("alie", "z")}
+
+
+def attack_theta(name: str,
+                 kwargs: Optional[Mapping[str, Any]] = None) -> np.ndarray:
+    """(N_PARAMS,) float32 parameter vector for ``name`` — the per-lane row
+    of the sweep's (C, N_PARAMS) parameter matrix. Unset parameters take
+    their ``ATTACK_PARAMS`` defaults; unknown ones raise, as does ``None``
+    for a parameter without NaN-sentinel support."""
+    kw = dict(kwargs or {})
+    theta = np.zeros(N_PARAMS, np.float32)
+    for i, (pname, default) in enumerate(ATTACK_PARAMS[name]):
+        val = kw.pop(pname, default)
+        if val is None and (name, pname) not in NAN_SENTINEL_PARAMS:
+            raise TypeError(
+                f"{name!r} attack parameter {pname!r} does not accept None")
+        theta[i] = np.nan if val is None else float(val)
+    if kw:
+        raise TypeError(f"unknown {name!r} attack parameter(s): {sorted(kw)}")
+    return theta
+
+
+def uniform_attack(name: str) -> Callable:
+    """``name`` under the uniform ``(stacked, mask, key, theta)`` signature —
+    the ``lax.switch`` branch form, reading parameters from theta slots."""
+    fn = ATTACKS[name]
+    spec = ATTACK_PARAMS[name]
+
+    def call(stacked, mask, key, theta):
+        kw = {pname: theta[i] for i, (pname, _) in enumerate(spec)}
+        return fn(stacked, mask, key=key, **kw)
+
+    return call
+
+
+def attack_switch(names: Sequence[str]) -> Callable:
+    """``apply(idx, stacked, mask, key, theta)`` dispatching ``lax.switch``
+    over the uniform implementations of ``names`` (``idx`` indexes into
+    ``names``). Under ``vmap`` with a lane-mapped idx this lowers to
+    execute-all-branches-and-select — cheap, since attacks are O(m·d) next
+    to the per-worker gradient work. A single name skips the switch."""
+    branches = tuple(uniform_attack(n) for n in names)
+    if len(branches) == 1:
+        only = branches[0]
+        return lambda idx, stacked, mask, key, theta: only(
+            stacked, mask, key, theta)
+
+    def apply(idx, stacked, mask, key, theta):
+        return jax.lax.switch(idx, [lambda op, b=b: b(*op) for b in branches],
+                              (stacked, mask, key, theta))
+
+    return apply
 
 
 # ----------------------------------------------------- App. E dynamic attack

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -112,6 +113,21 @@ def mlmc_combine(g0, gjm1, gj, j: int, cfg: MLMCConfig):
     return g, info
 
 
-def expected_cost(j: int) -> int:
-    """Per-worker stochastic-gradient evaluations this round: 1 + 2^{j-1} + 2^j."""
-    return 1 + (2 ** (j - 1) + 2 ** j if j >= 1 else 0)
+def round_cost(j: int, j_max: int) -> int:
+    """Per-worker stochastic-gradient evaluations a level-j round actually
+    computes — the one cost-accounting contract shared by the drivers' round
+    logs and ``expected_cost`` (DESIGN.md §7).
+
+    In-cap MLMC rounds (1 ≤ j ≤ j_max) evaluate the level-0 unit plus the
+    2^{j-1} + 2^j correction mini-batches. Beyond-cap rounds (j > j_max: the
+    correction is dropped and each worker computes one unit batch) cost 1,
+    exactly like plain-SGD rounds (j = 0)."""
+    if 1 <= j <= j_max:
+        return 1 + 2 ** (j - 1) + 2 ** j
+    return 1
+
+
+def expected_cost(j: int, j_max: Optional[int] = None) -> int:
+    """Per-worker cost of a level-j round; ``j_max=None`` means uncapped
+    (every j ≥ 1 is treated as in-cap)."""
+    return round_cost(j, j_max if j_max is not None else max(j, 1))

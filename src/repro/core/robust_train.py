@@ -15,7 +15,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import warnings
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +24,8 @@ import numpy as np
 from repro.core import attacks as attacks_lib
 from repro.core.aggregators import MFM, get_aggregator
 from repro.core.mlmc import (
-    MLMCConfig, level_prefix, level_schedule, mlmc_combine, sample_level,
+    MLMCConfig, level_prefix, level_schedule, mlmc_combine, round_cost,
+    sample_level,
 )
 from repro.core.switching import Switcher
 from repro.optim.optimizers import Optimizer, apply_updates
@@ -49,19 +50,32 @@ def _per_worker_grads(grad_fn: GradFn, params, batches):
     return jax.vmap(g1, in_axes=(None, 0))(params, batches)
 
 
-def _attack_stack(cfg: DynaBROConfig, grads, masks, key):
+def _attack_stack(cfg: DynaBROConfig, grads, masks, key, lane_attack=None):
     """grads: (m, n, ...) leaves; masks: (n, m) bool -> attacked grads.
 
     The per-computation key is ``fold_in(key, k)`` — a function of the
     within-round index k alone, so the k-th computation draws the same key
     whether the round runs at its exact batch size (legacy driver) or as the
     prefix of an n_max-padded batch (scan driver).
+
+    ``lane_attack`` (an ``(apply, attack_id, theta)`` triple, with ``apply``
+    from ``attacks.attack_switch``) routes through the traced per-lane attack
+    dispatch of the lane-batched sweep instead of the cfg-static attack.
     """
-    atk = attacks_lib.get_attack(cfg.attack, **(cfg.attack_kwargs or {}))
+    if lane_attack is None:
+        atk0 = attacks_lib.get_attack(cfg.attack, **(cfg.attack_kwargs or {}))
+
+        def atk(s, mk, k):
+            return atk0(s, mk, key=k)
+    else:
+        apply_fn, attack_id, theta = lane_attack
+
+        def atk(s, mk, k):
+            return apply_fn(attack_id, s, mk, k, theta)
     swapped = jax.tree.map(lambda l: jnp.swapaxes(l, 0, 1), grads)  # (n, m, ...)
     keys = jax.vmap(lambda k: jax.random.fold_in(key, k))(
         jnp.arange(masks.shape[0]))
-    attacked = jax.vmap(lambda s, mk, k: atk(s, mk, key=k))(swapped, masks, keys)
+    attacked = jax.vmap(atk)(swapped, masks, keys)
     return jax.tree.map(lambda l: jnp.swapaxes(l, 0, 1), attacked)  # (m, n, ...)
 
 
@@ -187,7 +201,7 @@ def run_dynabro(
         params, opt_state, info = step(params, opt_state, batches,
                                        jnp.asarray(masks), key, j)
         logs.append(RoundLog(j, bool(info["failsafe_ok"]), int(masks[0].sum()),
-                             1 + (n + n // 2 if j >= 1 else 0)))
+                             round_cost(j, cfg.mlmc.j_max)))
         if eval_fn and eval_every and (t + 1) % eval_every == 0:
             evals.append((t + 1, eval_fn(params, t)))
     return params, logs, evals
@@ -338,15 +352,16 @@ def _level_plan(cfg: DynaBROConfig, rng: np.random.Generator, T: int):
     return levels, ns, n_max
 
 
-def _round_logs(levels, ns, ok, masks) -> list:
+def _round_logs(levels, ok, masks, j_max: int) -> list:
     """Per-round RoundLog list from the level plan, the scanned fail-safe
-    flags (T,) and the (T, n_max, m) mask schedule — one cost accounting for
-    both compiled drivers."""
+    flags (T,) and the (T, n_max, m) mask schedule — the compiled drivers'
+    side of the ``mlmc.round_cost`` cost-accounting contract (beyond-cap
+    rounds, j > j_max, cost 1: the correction is dropped)."""
     logs = []
     for t in range(len(levels)):
-        j, n = int(levels[t]), int(ns[t])
+        j = int(levels[t])
         logs.append(RoundLog(j, bool(ok[t]), int(masks[t, 0].sum()),
-                             1 + (n + n // 2 if j >= 1 else 0)))
+                             round_cost(j, j_max)))
     return logs
 
 
@@ -364,6 +379,18 @@ def _mask_schedule(switcher: Switcher, T: int, n_max: int,
         for k in range(int(ns[t])):
             masks[t, k] = switcher.within_round(t, k)
     return masks
+
+
+def _check_scan_fn_mesh(scan_fn, mesh) -> None:
+    """Reject a prebuilt scan_fn whose build-time mesh disagrees with this
+    run's ``mesh=``: an unsharded fn passed with a mesh would silently run
+    the whole loop unsharded (and vice versa). Fns built outside
+    ``make_*_scan_fn`` carry no tag and are trusted."""
+    have = getattr(scan_fn, "worker_mesh", mesh)
+    if (have is None) != (mesh is None) or have != mesh:
+        raise ValueError(
+            f"scan_fn was built with mesh={have}, but this run passes "
+            f"mesh={mesh}; rebuild the scan_fn with the same mesh")
 
 
 def _check_worker_mesh(mesh, worker_axis: str, m: int) -> None:
@@ -388,7 +415,8 @@ def _segment_bounds(T: int, eval_every: int, chunk: int):
 
 
 def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer,
-                         *, mesh=None, worker_axis: str = "workers"):
+                         *, mesh=None, worker_axis: str = "workers",
+                         lane_attacks: Optional[Sequence[str]] = None):
     """Build the compiled DynaBRO round loop (DESIGN.md §5, §7).
 
     Returns a jitted ``seg((params, opt_state), xs)`` running ``lax.scan``
@@ -408,21 +436,37 @@ def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer,
     re-assembled with a worker-axis all_gather, and the attack + aggregation
     + update code is byte-for-byte the single-device body — which is why a
     1-device mesh is bitwise-identical to ``mesh=None`` (DESIGN.md §7).
+
+    ``lane_attacks`` (a sequence of attack names) builds the lane-batched
+    sweep variant instead: the segment takes a third argument
+    ``atk = (attack_id, theta)`` — a scalar index into ``lane_attacks`` plus
+    the (N_PARAMS,) parameter vector, both loop-invariant — and the scan body
+    dispatches the attack via a second ``lax.switch``
+    (``attacks.attack_switch``). The MLMC level switch is untouched (its
+    index stays scalar and shared across lanes). Mutually exclusive with
+    ``mesh`` — sweeps run unsharded (DESIGN.md §7).
     """
+    if lane_attacks is not None and mesh is not None:
+        raise ValueError(
+            "lane_attacks is for the vmapped sweep, which runs unsharded; "
+            "drop mesh= (DESIGN.md §7)")
     j_max = cfg.mlmc.j_max
     n_max = 2 ** j_max if cfg.use_mlmc else 1
     gather = _worker_gather(mesh, worker_axis)
+    atk_apply = (attacks_lib.attack_switch(tuple(lane_attacks))
+                 if lane_attacks is not None else None)
 
     def level_branch(j: int):
         n = 2 ** j if (cfg.use_mlmc and 1 <= j <= j_max) else 1
 
         def branch(operand):
-            params, batches, masks, key = operand
+            params, batches, masks, key, atk = operand
+            lane = None if atk_apply is None else (atk_apply, *atk)
             b = level_prefix(batches, n, n_max, axis=1)
             grads = _per_worker_grads(grad_fn, params, b)  # (m[_local], n, ...)
             if gather is not None:
                 grads = gather(grads)  # (m, n, ...) in worker order
-            grads = _attack_stack(cfg, grads, masks[:n], key)
+            grads = _attack_stack(cfg, grads, masks[:n], key, lane_attack=lane)
             g, info = _combine_levels(cfg, grads, j)
             return g, info["failsafe_ok"], info["corr_norm"]
 
@@ -431,10 +475,10 @@ def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer,
     branches = ([level_branch(j) for j in range(1, j_max + 2)]
                 if cfg.use_mlmc else [level_branch(0)])
 
-    def body(carry, xs):
+    def body(carry, xs, atk=None):
         params, opt_state = carry
         level, batches, masks, key = xs
-        operand = (params, batches, masks, key)
+        operand = (params, batches, masks, key, atk)
         if cfg.use_mlmc:
             g, ok, dn = jax.lax.switch(level - 1, branches, operand)
         else:
@@ -443,13 +487,29 @@ def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer,
         params = apply_updates(params, updates)
         return (params, opt_state), (ok, dn)
 
+    if lane_attacks is not None:
+        def seg_lane(carry, xs, atk):
+            return jax.lax.scan(lambda c, x: body(c, x, atk), carry, xs)
+
+        # un-jitted: the sweep jits the vmapped wrapper anyway, and a plain
+        # function can carry the branch order for the sweep's id-consistency
+        # check (a mismatched order would silently apply the wrong attacks)
+        seg_lane.lane_attacks = tuple(lane_attacks)
+        return seg_lane
+
     def seg(carry, xs):
         return jax.lax.scan(body, carry, xs)
 
     if mesh is None:
-        return jax.jit(seg)
-    return jax.jit(_shard_seg(seg, mesh, worker_axis,
-                              xs_batch_axes=(None, worker_axis, None, None)))
+        jitted = jax.jit(seg)
+    else:
+        jitted = jax.jit(_shard_seg(
+            seg, mesh, worker_axis,
+            xs_batch_axes=(None, worker_axis, None, None)))
+    # tag the build mode so the drivers can reject a mismatched prebuilt fn
+    # (an unsharded scan_fn passed with mesh= would silently run unsharded)
+    jitted.worker_mesh = mesh
+    return jitted
 
 
 def _worker_gather(mesh, worker_axis: str):
@@ -527,6 +587,13 @@ def run_dynabro_scan(
     """
     if mesh is not None:
         _check_worker_mesh(mesh, worker_axis, switcher.m)
+    if scan_fn is not None:
+        if getattr(scan_fn, "lane_attacks", None) is not None:
+            raise ValueError(
+                f"scan_fn was built with lane_attacks="
+                f"{scan_fn.lane_attacks!r}; that variant is for "
+                f"run_dynabro_scan_sweep(attacks=...), not run_dynabro_scan")
+        _check_scan_fn_mesh(scan_fn, mesh)
     if T <= 0:
         return params, [], []
     levels, ns, n_max = _level_plan(cfg, np.random.default_rng(seed), T)
@@ -551,7 +618,7 @@ def run_dynabro_scan(
             evals.append((b, eval_fn(carry[0], b - 1)))
         a = b
     ok_all = np.concatenate(oks) if oks else np.zeros(0, bool)
-    return carry[0], _round_logs(levels, ns, ok_all, masks), evals
+    return carry[0], _round_logs(levels, ok_all, masks, cfg.mlmc.j_max), evals
 
 
 def make_momentum_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, lr: float,
@@ -572,9 +639,12 @@ def make_momentum_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, lr: float,
         return jax.lax.scan(body, carry, xs)
 
     if mesh is None:
-        return jax.jit(seg)
-    return jax.jit(_shard_seg(seg, mesh, worker_axis,
-                              xs_batch_axes=(worker_axis, None, None)))
+        jitted = jax.jit(seg)
+    else:
+        jitted = jax.jit(_shard_seg(seg, mesh, worker_axis,
+                                    xs_batch_axes=(worker_axis, None, None)))
+    jitted.worker_mesh = mesh
+    return jitted
 
 
 def run_momentum_scan(
@@ -599,6 +669,8 @@ def run_momentum_scan(
     ``mesh`` runs it sharded over the worker axis (DESIGN.md §7)."""
     if mesh is not None:
         _check_worker_mesh(mesh, worker_axis, switcher.m)
+    if scan_fn is not None:
+        _check_scan_fn_mesh(scan_fn, mesh)
     if T <= 0:
         return params, []
     masks = jnp.asarray(np.stack([switcher.mask(t) for t in range(T)]))  # (T, m)
@@ -628,32 +700,61 @@ def run_momentum_scan(
 # ----------------------------------------------- vmapped scenario sweeps
 #
 # Whole attack × switcher × aggregator grids re-run the compiled driver per
-# cell; cells that differ only in their *switching strategy* share every
-# other schedule (the level RNG stream, per-round keys and batch draws depend
-# on the seed alone), so they can run as lanes of one vmapped scan instead of
-# C sequential driver calls (DESIGN.md §7). ``jax.vmap`` returns a fresh
-# function object per call, so jitting it anew on every sweep would miss the
-# compile cache each time. The wrapper is cached one-deep, keyed on scan_fn
-# identity: repeated sweeps over a caller-held scan_fn (the benchmark loop,
-# grids re-run at several T) hit, while ad-hoc scan_fns — which can never be
-# re-looked-up anyway — merely rotate the slot, so at most one stale compiled
-# wrapper is ever retained. (A weak/keyed map cannot do better: the wrapper
-# closes over scan_fn, so any cache that holds the wrapper pins its key.)
+# cell; cells that differ only in their *switching strategy, attack and
+# attack kwargs* share every other schedule (the level RNG stream, per-round
+# keys and batch draws depend on the seed alone), so they can run as lanes of
+# one vmapped scan instead of C sequential driver calls (DESIGN.md §7).
+# ``jax.vmap`` returns a fresh function object per call, so jitting it anew
+# on every sweep would miss the compile cache each time. The wrapper cache is
+# a small MRU list keyed on scan_fn identity: repeated sweeps over
+# caller-held scan_fns stay in steady state even when the caller alternates
+# several of them — e.g. the attack-sweep benchmark's baseline, which cycles
+# one prebuilt scan_fn per attack group every timed iteration and would
+# recompile on every call under a 1-slot cache. Ad-hoc scan_fns (including
+# ``run_matrix_vmapped``'s per-group builds, which are fresh objects each
+# call and can never be re-looked-up) miss and age out; retention is bounded
+# at ``_VMAPPED_CACHE_SIZE`` wrappers. (A weak/keyed map cannot do better:
+# the wrapper closes over scan_fn, so any cache holding the wrapper pins
+# its key.)
 
-_VMAPPED_LAST = None  # (scan_fn, jitted vmapped wrapper)
+_VMAPPED_CACHE: list = []  # MRU-first [(scan_fn, lane_attacks, vseg), ...]
+_VMAPPED_CACHE_SIZE = 8
 
 
-def _vmapped_scan_fn(scan_fn):
+def _vmapped_scan_fn(scan_fn, lane_attacks: bool = False):
     """Lane-batched segment fn: model/optimizer state and the mask schedule
     are mapped over the lane axis; levels / batches / keys stay shared (they
     depend only on the sweep seed) — crucially the ``lax.switch`` level index
-    stays a scalar, keeping the one-branch-per-round dispatch."""
-    global _VMAPPED_LAST
-    if _VMAPPED_LAST is not None and _VMAPPED_LAST[0] is scan_fn:
-        return _VMAPPED_LAST[1]
-    vseg = jax.jit(jax.vmap(scan_fn, in_axes=((0, 0), (None, None, 0, None))))
-    _VMAPPED_LAST = (scan_fn, vseg)
+    stays a scalar, keeping the one-branch-per-round dispatch. With
+    ``lane_attacks`` the segment's extra ``(attack_id, theta)`` argument is
+    mapped over lanes as well (the attack dispatch is per-lane data)."""
+    for i, entry in enumerate(_VMAPPED_CACHE):
+        if entry[0] is scan_fn and entry[1] == lane_attacks:
+            _VMAPPED_CACHE.insert(0, _VMAPPED_CACHE.pop(i))
+            return entry[2]
+    in_axes = ((0, 0), (None, None, 0, None))
+    if lane_attacks:
+        in_axes = in_axes + (0,)
+    vseg = jax.jit(jax.vmap(scan_fn, in_axes=in_axes))
+    _VMAPPED_CACHE.insert(0, (scan_fn, lane_attacks, vseg))
+    del _VMAPPED_CACHE[_VMAPPED_CACHE_SIZE:]
     return vseg
+
+
+def _lane_attack_plan(attacks):
+    """Normalize per-lane attack specs (a name or ``(name, kwargs)``) into
+    the compact dispatch plan: the tuple of distinct names in
+    first-appearance order (the ``lax.switch`` branch set), the (C,) int32
+    lane->branch index vector and the (C, N_PARAMS) parameter matrix."""
+    specs = []
+    for a in attacks:
+        name, kw = (a, {}) if isinstance(a, str) else (a[0], dict(a[1] or {}))
+        specs.append((name, kw))
+    names = tuple(dict.fromkeys(name for name, _ in specs))
+    ids = np.array([names.index(name) for name, _ in specs], np.int32)
+    thetas = np.stack([attacks_lib.attack_theta(name, kw)
+                       for name, kw in specs])
+    return names, ids, thetas
 
 
 def run_dynabro_scan_sweep(
@@ -668,26 +769,45 @@ def run_dynabro_scan_sweep(
     chunk: int = 0,
     scan_fn=None,
     vectorize_batches: bool = True,
+    attacks=None,
 ):
     """Run C = len(switchers) DynaBRO cells as one vmapped compiled loop.
 
     Every cell shares ``cfg`` / ``seed`` / ``sample_batches`` and differs only
-    in its switcher, so the level / key / batch schedules coincide and stay
-    *un-batched* under ``vmap`` — in particular the ``lax.switch`` level
-    dispatch keeps its scalar index (a batched index would degrade to
-    execute-all-branches-and-select). Only the (C, T, n_max, m) mask schedule
-    and the model/optimizer state are batched over lanes.
+    in its switcher — and, with ``attacks``, in its attack — so the level /
+    key / batch schedules coincide and stay *un-batched* under ``vmap`` — in
+    particular the ``lax.switch`` level dispatch keeps its scalar index (a
+    batched index would degrade to execute-all-branches-and-select). Only the
+    (C, T, n_max, m) mask schedule, the model/optimizer state and (with
+    ``attacks``) the per-lane attack id + parameters are batched over lanes.
+
+    ``attacks`` (one spec per lane: a name or ``(name, kwargs)``) lets lanes
+    differ in attack and attack kwargs: the sweep builds a per-lane (C,)
+    attack-index vector into the compact set of distinct names plus a
+    (C, N_PARAMS) parameter matrix (``attacks.attack_theta``), and the scan
+    body dispatches each lane's attack via ``lax.switch`` over the uniform
+    ``(stacked, mask, key, theta)`` implementations — under vmap this lowers
+    to execute-all-branches-and-select, cheap because attacks are O(m·d)
+    next to the per-worker gradient work. ``attacks=None`` keeps every lane
+    on ``cfg.attack`` through the original static path, bitwise-unchanged.
 
     Returns ``[(params_c, logs_c), ...]`` in input order, each lane equal to
-    the corresponding ``run_dynabro_scan(..., switcher=switchers[c])`` call —
-    usually bitwise, always within the parity suite's 1e-6 tolerance (XLA may
-    reorder float ops at ULP level when it fuses the batched body; the round
-    logs match exactly — locked by tests/test_scenarios.py). ``scan_fn``
-    accepts a prebuilt *unsharded* ``make_dynabro_scan_fn`` result; the
-    jitted vmap wrapper is memoized per scan_fn (``_vmapped_scan_fn``), so
-    repeated sweeps with a shared scan_fn reuse one compile cache.
+    the corresponding ``run_dynabro_scan(...)`` call with that lane's
+    switcher and attack — usually bitwise, always within the parity suite's
+    1e-6 tolerance (XLA may reorder float ops at ULP level when it fuses the
+    batched body; the round logs match exactly — locked by
+    tests/test_scenarios.py). ``scan_fn`` accepts a prebuilt *unsharded*
+    ``make_dynabro_scan_fn`` result and must match the attack mode: built
+    with ``lane_attacks=<the distinct attack names in first-appearance
+    order>`` when ``attacks`` is passed, without it otherwise. The jitted
+    vmap wrapper is memoized per scan_fn (``_vmapped_scan_fn``), so repeated
+    sweeps with shared scan_fns reuse one compile cache.
     """
     C = len(switchers)
+    if attacks is not None and len(attacks) != C:
+        raise ValueError(
+            f"attacks: expected one per-lane spec per switcher "
+            f"({C}), got {len(attacks)}")
     if C == 0:
         return []
     if T <= 0:
@@ -695,8 +815,35 @@ def run_dynabro_scan_sweep(
     levels, ns, n_max = _level_plan(cfg, np.random.default_rng(seed), T)
     masks = np.stack([_mask_schedule(sw, T, n_max, ns) for sw in switchers])
     keys = _np_prng_keys(seed * 100_003 + np.arange(T, dtype=np.int64))
-    scan_fn = scan_fn or make_dynabro_scan_fn(grad_fn, cfg, opt)
-    vseg = _vmapped_scan_fn(scan_fn)
+    if attacks is None:
+        atk = None
+        if scan_fn is None:
+            scan_fn = make_dynabro_scan_fn(grad_fn, cfg, opt)
+        elif getattr(scan_fn, "worker_mesh", None) is not None:
+            raise ValueError(
+                "scan_fn was built with mesh=; vmapped sweeps run unsharded "
+                "(DESIGN.md §7) — rebuild it without mesh")
+        elif getattr(scan_fn, "lane_attacks", None) is not None:
+            raise ValueError(
+                f"scan_fn was built with lane_attacks="
+                f"{scan_fn.lane_attacks!r} but this sweep passes no "
+                f"attacks; rebuild it without lane_attacks (or pass the "
+                f"per-lane attacks)")
+    else:
+        names, ids, thetas = _lane_attack_plan(attacks)
+        atk = (jnp.asarray(ids), jnp.asarray(thetas))
+        if scan_fn is None:
+            scan_fn = make_dynabro_scan_fn(grad_fn, cfg, opt,
+                                           lane_attacks=names)
+        elif getattr(scan_fn, "lane_attacks", None) != names:
+            # the lane ids index `names`; a scan_fn whose lax.switch branch
+            # order differs would silently apply the wrong attack per lane
+            raise ValueError(
+                f"scan_fn was built with lane_attacks="
+                f"{getattr(scan_fn, 'lane_attacks', None)!r} but this "
+                f"sweep's attacks derive {names!r}; rebuild it with "
+                f"make_dynabro_scan_fn(..., lane_attacks={names!r})")
+    vseg = _vmapped_scan_fn(scan_fn, lane_attacks=atk is not None)
 
     def lanes(tree):  # identical initial state in every lane
         return jax.tree.map(
@@ -713,10 +860,13 @@ def run_dynabro_scan_sweep(
             sample_batches, list(zip(range(a, b), ns[a:b])), n_max,
             vectorize=vectorize_batches)
         xs = (levels_dev[a:b], batches, masks_dev[:, a:b], keys_dev[a:b])
-        carry, (ok, _dn) = vseg(carry, xs)
+        if atk is None:
+            carry, (ok, _dn) = vseg(carry, xs)
+        else:
+            carry, (ok, _dn) = vseg(carry, xs, atk)
         oks.append(np.asarray(ok))  # (C, b - a)
         a = b
     ok_all = np.concatenate(oks, axis=1)
     return [(jax.tree.map(lambda l, c=c: l[c], carry[0]),
-             _round_logs(levels, ns, ok_all[c], masks[c]))
+             _round_logs(levels, ok_all[c], masks[c], cfg.mlmc.j_max))
             for c in range(C)]

@@ -6,10 +6,11 @@ the ROADMAP's many-scenario coverage goal means): every cell is one full
 DynaBRO (or worker-momentum baseline) run, so the per-round dispatch cost of
 the Python-loop drivers multiplies across the grid. ``run_matrix`` drives
 every cell through ``run_dynabro_scan`` and returns a tidy list-of-dicts
-results table; ``driver="vmap"`` instead batches cells that differ only in
-their switching strategy into one vmapped compiled call per group
-(``run_dynabro_scan_sweep`` — no re-trace, no per-cell dispatch);
-``format_table`` pivots the rows for terminal display.
+results table; ``driver="vmap"`` instead batches all cells sharing an
+aggregator — attack, attack kwargs and switcher all vary per lane — into one
+vmapped compiled call per group (``run_dynabro_scan_sweep`` — no re-trace,
+no per-cell dispatch); ``format_table`` pivots the rows for terminal
+display, disambiguating cells that differ only in kwargs.
 
 Used by ``examples/attack_gallery.py`` and ``benchmarks/bench_scan_driver.py``.
 """
@@ -17,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Mapping, Sequence, Tuple, Union
 
 import jax
@@ -40,6 +42,10 @@ def _norm(spec: Spec) -> Tuple[str, Dict[str, Any]]:
     return name, dict(kw)
 
 
+def _fmt_kw(kw: Tuple[Tuple[str, Any], ...]) -> str:
+    return ",".join(f"{k}={v}" for k, v in kw)
+
+
 @dataclasses.dataclass(frozen=True)
 class Scenario:
     """One cell of the sweep grid."""
@@ -50,8 +56,20 @@ class Scenario:
     switcher_kwargs: Tuple[Tuple[str, Any], ...] = ()
 
     @property
+    def attack_label(self) -> str:
+        """Attack name qualified with its kwargs — ``ipm(eps=0.3)`` — so
+        grids that vary only a parameter stay distinguishable."""
+        kw = _fmt_kw(self.attack_kwargs)
+        return f"{self.attack}({kw})" if kw else self.attack
+
+    @property
+    def switcher_label(self) -> str:
+        kw = _fmt_kw(self.switcher_kwargs)
+        return f"{self.switcher}({kw})" if kw else self.switcher
+
+    @property
     def name(self) -> str:
-        return f"{self.attack}|{self.switcher}|{self.aggregator}"
+        return f"{self.attack_label}|{self.switcher_label}|{self.aggregator}"
 
 
 def scenario_grid(attacks: Sequence[Spec], switchers: Sequence[Spec],
@@ -116,7 +134,8 @@ def _cell_cfg(sc: Scenario, m: int, T: int, V: float, kappa: float,
 def _row(task: Task, sc: Scenario, params, logs, *, driver: str, m: int,
          T: int, wall: float) -> Dict[str, Any]:
     return {
-        "attack": sc.attack, "switcher": sc.switcher,
+        "attack": sc.attack, "attack_label": sc.attack_label,
+        "switcher": sc.switcher, "switcher_label": sc.switcher_label,
         "aggregator": sc.aggregator, "driver": driver, "m": m, "T": T,
         "final": task.objective(params),
         "failsafe_trips": sum(1 for l in logs if l.level >= 1 and not l.failsafe_ok),
@@ -145,11 +164,20 @@ def run_scenario(
 ) -> Dict[str, Any]:
     """Run one grid cell end to end; returns a tidy results row. ``mesh``
     (with ``driver="scan"``) runs the cell through the sharded compiled
-    driver (DESIGN.md §7)."""
+    driver (DESIGN.md §7); ``driver="vmap"`` routes through the
+    single-lane vmapped sweep."""
     if mesh is not None and driver != "scan":
         raise ValueError(
             f"mesh= requires driver='scan' (the sharded compiled driver); "
             f"got driver={driver!r}")
+    if driver == "vmap":
+        return run_matrix_vmapped(
+            task, [sc], m=m, T=T, V=V, make_opt=make_opt, delta=delta,
+            kappa=kappa, j_cap=j_cap, use_mlmc=use_mlmc, seed=seed,
+            chunk=chunk)[0]
+    if driver not in ("scan", "legacy"):
+        raise ValueError(
+            f"unknown driver {driver!r}; expected 'scan', 'legacy' or 'vmap'")
     cfg = _cell_cfg(sc, m, T, V, kappa, j_cap, use_mlmc, delta)
     switcher = get_switcher(sc.switcher, m, seed=seed,
                             **dict(sc.switcher_kwargs))
@@ -204,18 +232,22 @@ def run_matrix_vmapped(
 ) -> List[Dict[str, Any]]:
     """Sweep a grid with cells batched into vmapped lanes (DESIGN.md §7).
 
-    Cells are grouped by everything that shapes the traced computation —
-    (attack, attack kwargs, aggregator) — and each group's switcher column
-    runs as lanes of one ``run_dynabro_scan_sweep`` call: one compiled
-    driver dispatch per group instead of per cell, equivalent numerics
-    (``tests/test_scenarios.py`` locks rows to the per-cell loop — exact
-    round logs, floats within the parity suite's 1e-6). Rows come back in
-    input order; duplicate scenarios are just duplicate lanes. ``wall_s`` is
-    the group wall clock amortized over its lanes."""
+    Cells are grouped by **aggregator alone** — the only grid axis that still
+    shapes the traced computation. Each group's attack × switcher cells run
+    as lanes of one ``run_dynabro_scan_sweep`` call (per-lane attack id +
+    parameter matrix dispatched in the scan body): an A×S grid costs one
+    compiled dispatch per aggregator instead of one per (attack, kwargs)
+    group, with equivalent numerics (``tests/test_scenarios.py`` locks rows
+    to the per-cell loop — exact round logs, floats within the parity
+    suite's 1e-6). Rows come back in input order; duplicate scenarios are
+    just duplicate lanes. ``wall_s`` is the group wall clock amortized over
+    its lanes. One sampler is shared by every group (lanes share batch
+    draws by construction), so ``task.make_sampler`` must return *pure*
+    samplers — samplers with hidden per-call state need the per-cell
+    drivers (``driver="scan"`` with ``vectorize_batches=False``)."""
     groups: Dict[Tuple, List[int]] = {}
     for i, sc in enumerate(scenarios):
-        key = (sc.attack, sc.attack_kwargs, sc.aggregator)
-        groups.setdefault(key, []).append(i)
+        groups.setdefault((sc.aggregator,), []).append(i)
     rows: List[Any] = [None] * len(scenarios)
     sampler = task.make_sampler(m)
     for idxs in groups.values():
@@ -224,10 +256,12 @@ def run_matrix_vmapped(
         switchers = [get_switcher(scenarios[i].switcher, m, seed=seed,
                                   **dict(scenarios[i].switcher_kwargs))
                      for i in idxs]
+        attacks = [(scenarios[i].attack, dict(scenarios[i].attack_kwargs))
+                   for i in idxs]
         t0 = time.perf_counter()
         outs = run_dynabro_scan_sweep(task.grad_fn, task.params0, make_opt(),
                                       cfg, switchers, sampler, T, seed=seed,
-                                      chunk=chunk)
+                                      chunk=chunk, attacks=attacks)
         jax.block_until_ready(
             [l for p, _ in outs for l in jax.tree.leaves(p)])
         wall = (time.perf_counter() - t0) / max(len(idxs), 1)
@@ -239,13 +273,39 @@ def run_matrix_vmapped(
 
 def format_table(rows: Sequence[Dict[str, Any]], value: str = "final",
                  row_key: str = "aggregator", col_key: str = "attack") -> str:
-    """Pivot a results table for terminal display (one line per row_key)."""
-    cols = list(dict.fromkeys(r[col_key] for r in rows))
-    lines = [f"{'':12s}" + "".join(f"{c:>12s}" for c in cols)]
-    for rk in dict.fromkeys(r[row_key] for r in rows):
+    """Pivot a results table for terminal display (one line per row_key).
+
+    Keys use the kwarg-qualified ``<key>_label`` row field when present (so
+    cells that differ only in ``eps``/``z``/``K`` get their own column/line
+    instead of silently collapsing). If several rows still land on one
+    (row, col) cell with *different* values — a residual collision the labels
+    cannot split, e.g. pivoting away a varying axis — a RuntimeWarning names
+    the cell and the first value is shown; duplicate rows with equal values
+    (duplicate scenarios) stay silent."""
+    def label(r, k):
+        return str(r.get(f"{k}_label", r[k]))
+
+    def differs(a, b):
+        # NaN compares unequal to itself; duplicate lanes of a diverged
+        # scenario (both NaN) are still duplicates, not a collision
+        return a != b and not (a != a and b != b)
+
+    cols = list(dict.fromkeys(label(r, col_key) for r in rows))
+    rks = list(dict.fromkeys(label(r, row_key) for r in rows))
+    cw = max([12] + [len(c) + 2 for c in cols])
+    rw = max([12] + [len(rk) + 1 for rk in rks])
+    lines = [" " * rw + "".join(f"{c:>{cw}s}" for c in cols)]
+    for rk in rks:
         cells = []
         for c in cols:
-            sel = [r[value] for r in rows if r[row_key] == rk and r[col_key] == c]
-            cells.append(f"{sel[0]:12.4f}" if sel else f"{'—':>12s}")
-        lines.append(f"{rk:12s}" + "".join(cells))
+            sel = [r[value] for r in rows
+                   if label(r, row_key) == rk and label(r, col_key) == c]
+            if len(sel) > 1 and any(differs(v, sel[0]) for v in sel[1:]):
+                warnings.warn(
+                    f"format_table: {len(sel)} rows collide on cell "
+                    f"({rk!r}, {c!r}) with differing {value!r} values; "
+                    f"showing the first — pivot on a distinguishing key",
+                    RuntimeWarning, stacklevel=2)
+            cells.append(f"{sel[0]:{cw}.4f}" if sel else f"{'—':>{cw}s}")
+        lines.append(f"{rk:{rw}s}" + "".join(cells))
     return "\n".join(lines)

@@ -45,6 +45,95 @@ def test_attack_registry_none_identity():
     np.testing.assert_allclose(np.asarray(out["g"]), np.asarray(s["g"]))
 
 
+def test_alie_auto_z_matches_baruch_prescription():
+    """z=None derives z from (m, n_byz): with m=20, b=4 the attacker needs
+    s = ⌊m/2+1⌋ − b = 7 supporters, so z = Φ⁻¹((20−4−7)/16) = Φ⁻¹(9/16)."""
+    s = _stack(m=20, d=3, seed=2)
+    mask = jnp.asarray([True] * 4 + [False] * 16)
+    z_want = float(jax.scipy.special.ndtri(9.0 / 16.0))
+    np.testing.assert_allclose(float(atk.alie_auto_z(mask)), z_want, rtol=1e-6)
+    out = atk.alie(s, mask, z=None)
+    h = np.asarray(s["g"][4:])
+    mu, sd = h.mean(0), h.std(0)
+    np.testing.assert_allclose(np.asarray(out["g"][0]), mu - z_want * sd,
+                               rtol=1e-4, atol=1e-5)
+    # more Byzantine workers need fewer honest supporters -> a larger shift
+    z8 = float(atk.alie_auto_z(jnp.asarray([True] * 8 + [False] * 12)))
+    assert z8 > z_want
+    # the fixed default is untouched (existing goldens)
+    out_def = atk.alie(s, mask)
+    np.testing.assert_allclose(np.asarray(out_def["g"][0]),
+                               mu - 1.22 * sd, rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------- uniform traced-theta dispatch
+
+
+THETA_CASES = [
+    ("none", {}),
+    ("sign_flip", {"scale": 2.0}),
+    ("ipm", {"eps": 0.3}),
+    ("alie", {"z": 0.9}),
+    ("alie", {"z": None}),
+    ("random", {"scale": 2.5}),
+    ("shift", {"v": 5.0}),
+]
+
+
+def test_uniform_dispatch_matches_kwarg_attacks():
+    """attack_switch over the full registry reproduces each kwarg-configured
+    attack within the parity tolerance (the switch body is one compiled
+    computation, so XLA may FMA-contract where the eager kwarg path runs op
+    by op — same contract as the sweep drivers, 1e-6)."""
+    s = _mixed_stack(seed=4)
+    mask = jnp.asarray([True, False] * 4)
+    key = jax.random.PRNGKey(7)
+    names = tuple(dict.fromkeys(n for n, _ in THETA_CASES))
+    apply_fn = atk.attack_switch(names)
+    for name, kw in THETA_CASES:
+        want = atk.get_attack(name, **kw)(s, mask, key=key)
+        got = apply_fn(jnp.int32(names.index(name)), s, mask, key,
+                       jnp.asarray(atk.attack_theta(name, kw)))
+        for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-7,
+                                       err_msg=f"{name} {kw}")
+
+
+def test_attack_theta_defaults_and_nan_sentinel():
+    assert atk.N_PARAMS >= 1
+    np.testing.assert_array_equal(atk.attack_theta("sign_flip"),
+                                  np.ones(atk.N_PARAMS, np.float32))
+    assert float(atk.attack_theta("ipm")[0]) == np.float32(0.1)
+    assert np.isnan(atk.attack_theta("alie", {"z": None})[0])
+    assert float(atk.attack_theta("alie")[0]) == np.float32(1.22)
+
+
+def test_attack_theta_rejects_unknown_params():
+    with pytest.raises(TypeError, match="bogus"):
+        atk.attack_theta("ipm", {"bogus": 1.0})
+
+
+def test_attack_theta_rejects_none_without_sentinel_support():
+    """Only alie's z interprets the NaN sentinel; None anywhere else would
+    silently feed NaN gradients on the lane path while the eager kwarg path
+    raises — the drop-in contract demands both fail loudly."""
+    with pytest.raises(TypeError, match="does not accept None"):
+        atk.attack_theta("ipm", {"eps": None})
+    with pytest.raises(TypeError, match="does not accept None"):
+        atk.attack_theta("sign_flip", {"scale": None})
+
+
+def test_single_name_attack_switch_skips_the_switch():
+    s = _stack()
+    mask = jnp.asarray([True] + [False] * 7)
+    apply_fn = atk.attack_switch(("sign_flip",))
+    got = apply_fn(jnp.int32(0), s, mask, jax.random.PRNGKey(0),
+                   jnp.asarray(atk.attack_theta("sign_flip")))
+    want = atk.sign_flip(s, mask)
+    np.testing.assert_array_equal(np.asarray(got["g"]), np.asarray(want["g"]))
+
+
 # ------------------------------------------------------------- switching
 
 

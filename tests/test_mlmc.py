@@ -7,7 +7,7 @@ from _hyp import given, settings, st  # hypothesis, or offline fallback
 
 from repro.core.mlmc import (
     MLMCConfig, expected_cost, level_prefix, level_schedule, mlmc_combine,
-    sample_level, tree_norm, universal_C,
+    round_cost, sample_level, tree_norm, universal_C,
 )
 
 
@@ -25,8 +25,21 @@ def test_expected_cost_logarithmic():
     rng = np.random.default_rng(1)
     T = 1024
     jmax = int(math.log2(T))
-    costs = [expected_cost(min(sample_level(rng, jmax), jmax)) for _ in range(20000)]
+    costs = [round_cost(sample_level(rng, jmax), jmax) for _ in range(20000)]
     assert np.mean(costs) < 3.5 * math.log2(T)
+
+
+def test_round_cost_contract():
+    """One cost accounting for every consumer (DESIGN.md §7): plain-SGD and
+    beyond-cap rounds cost 1 (one unit batch per worker — the correction is
+    dropped past the cap), in-cap MLMC rounds cost 1 + 2^{j-1} + 2^j."""
+    assert round_cost(0, 5) == 1
+    assert round_cost(1, 5) == 1 + 1 + 2
+    assert round_cost(3, 5) == 1 + 4 + 8
+    assert round_cost(5, 5) == 1 + 16 + 32
+    assert round_cost(6, 5) == 1  # beyond cap: NOT 1 + 32 + 64, and not 2
+    assert expected_cost(3) == round_cost(3, 3)  # uncapped back-compat form
+    assert expected_cost(6, 5) == 1
 
 
 def _estimate(option, use_failsafe=True, corrupt_level=None, n_trials=4000, seed=0):
@@ -56,7 +69,7 @@ def _estimate(option, use_failsafe=True, corrupt_level=None, n_trials=4000, seed
         else:
             g, info = mlmc_combine(g0, None, None, j, cfg)
         outs.append(np.asarray(g["g"]))
-        costs.append(expected_cost(min(j, cfg.j_max)))
+        costs.append(round_cost(j, cfg.j_max))
     outs = np.stack(outs)
     return outs, true, np.mean(costs), cfg
 

@@ -98,6 +98,37 @@ def test_scan_chunking_is_invisible():
     _assert_logs_equal(l0, l16)
 
 
+def test_beyond_cap_cost_parity_all_drivers():
+    """Beyond-cap rounds (J > j_max: correction dropped, one unit batch per
+    worker) must be sampled and logged with cost 1 — the ``mlmc.round_cost``
+    contract — identically by the legacy, scan and sweep drivers. j_cap=1
+    makes half of all rounds beyond-cap."""
+    from repro.core.mlmc import round_cost
+    from repro.core.robust_train import run_dynabro_scan_sweep
+
+    cfg = DynaBROConfig(
+        mlmc=MLMCConfig(T=T, m=M, V=3.0, kappa=1.0, j_cap=1),
+        aggregator="cwmed", delta=0.45, attack="sign_flip")
+    (p1, l1, _), (p2, l2, _) = _run_both(cfg)
+    _assert_logs_equal(l1, l2)
+    np.testing.assert_allclose(np.asarray(p1["x"]), np.asarray(p2["x"]),
+                               rtol=1e-6, atol=1e-7)
+    beyond = [l for l in l1 if l.level > cfg.mlmc.j_max]
+    assert beyond  # P(J=2) = 1/2 per round: T=64 rounds surely sample it
+    assert all(l.cost == 1 for l in beyond)
+    in_cap = [l for l in l1 if l.level == 1]
+    assert in_cap and all(l.cost == 1 + 1 + 2 for l in in_cap)
+    assert [l.cost for l in l1] == [round_cost(l.level, cfg.mlmc.j_max)
+                                    for l in l1]
+    # the vmapped sweep logs the same rounds lane for lane
+    [(p3, l3), (p4, l4)] = run_dynabro_scan_sweep(
+        TASK.grad_fn, TASK.params0, sgd(2e-2), cfg, [_sw(), _sw()],
+        TASK.make_sampler(M), T, seed=3)
+    assert l3 == l1 and l4 == l1
+    np.testing.assert_allclose(np.asarray(p3["x"]), np.asarray(p1["x"]),
+                               rtol=1e-6, atol=1e-7)
+
+
 def test_scan_parity_within_round_switching():
     """Identities flipping *within* a round exercise the generic
     ``mask_schedule`` path and the per-k attack keys."""

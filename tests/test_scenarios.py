@@ -8,10 +8,12 @@ masks and the model state — but batching may reorder float ops at ULP level
 parity suite's 1e-6 tolerance while the integer round logs (levels,
 fail-safe trips, costs) must match exactly.
 """
+import warnings
+
 import numpy as np
 import pytest
 
-from repro.core.robust_train import run_dynabro_scan_sweep
+from repro.core.robust_train import run_dynabro_scan, run_dynabro_scan_sweep
 from repro.core.scenarios import (
     Scenario, format_table, make_quadratic_task, run_matrix,
     run_matrix_vmapped, scenario_grid,
@@ -30,7 +32,8 @@ def test_empty_grid():
 
 def test_single_cell_grid():
     grid = scenario_grid(["sign_flip"], [("static", {"n_byz": 3})], ["cwmed"])
-    assert len(grid) == 1 and grid[0].name == "sign_flip|static|cwmed"
+    assert len(grid) == 1
+    assert grid[0].name == "sign_flip|static(n_byz=3)|cwmed"
     [row_v] = run_matrix(TASK, grid, m=M, T=24, V=3.0, driver="vmap")
     [row_s] = run_matrix(TASK, grid, m=M, T=24, V=3.0, driver="scan")
     assert row_v["driver"] == "vmap" and row_s["driver"] == "scan"
@@ -85,6 +88,183 @@ def test_vmapped_chunking_is_invisible():
     r16 = run_matrix_vmapped(TASK, grid, m=M, T=32, V=3.0, chunk=16)
     for a, b in zip(r0, r16):
         assert a["final"] == b["final"]
+
+
+def _cfg_for(attack, T=32, j_cap=3, agg="cwmed"):
+    from repro.core.mlmc import MLMCConfig
+    from repro.core.robust_train import DynaBROConfig
+
+    name, kw = (attack, {}) if isinstance(attack, str) else attack
+    return DynaBROConfig(
+        mlmc=MLMCConfig(T=T, m=M, V=3.0, kappa=1.0, j_cap=j_cap,
+                        option=2 if agg == "mfm" else 1),
+        aggregator=agg, delta=0.45, attack=name,
+        attack_kwargs=dict(kw) or None)
+
+
+def test_attack_lane_sweep_matches_per_cell_scan_exactly():
+    """The tentpole contract: lanes mixing sign_flip / ipm(eps) / alie / none
+    in one vmapped call match per-cell ``run_dynabro_scan`` lane for lane —
+    exact round logs (incl. beyond-cap costs: j_cap=3, T=32 samples J=4
+    w.p. 1/8 per round), finals within the parity tolerance."""
+    from repro.optim.optimizers import sgd
+
+    specs = ["sign_flip", ("ipm", {"eps": 0.3}), "alie", "none"]
+    kss = (5, 8, 13, 20)
+    lanes = [(a, K) for a in specs for K in kss]
+    sampler = TASK.make_sampler(M)
+    switchers = [get_switcher("periodic", M, n_byz=3, K=K, seed=1)
+                 for _, K in lanes]
+    outs = run_dynabro_scan_sweep(
+        TASK.grad_fn, TASK.params0, sgd(2e-2), _cfg_for("sign_flip"),
+        switchers, sampler, 32, seed=1, attacks=[a for a, _ in lanes])
+    assert len(outs) == len(lanes) == 16
+    saw_beyond_cap = False
+    for (attack, K), (p, logs) in zip(lanes, outs):
+        ref_p, ref_logs, _ = run_dynabro_scan(
+            TASK.grad_fn, TASK.params0, sgd(2e-2), _cfg_for(attack),
+            get_switcher("periodic", M, n_byz=3, K=K, seed=1), sampler, 32,
+            seed=1)
+        assert logs == ref_logs, f"lane {attack} K={K}"
+        saw_beyond_cap |= any(l.level > 3 for l in logs)
+        np.testing.assert_allclose(np.asarray(p["x"]), np.asarray(ref_p["x"]),
+                                   rtol=1e-6, atol=1e-7,
+                                   err_msg=f"lane {attack} K={K}")
+    assert saw_beyond_cap  # the exact-log check covered beyond-cap costs
+
+
+def test_vmapped_matrix_single_dispatch_per_aggregator(monkeypatch):
+    """A 4-attack × 4-switcher grid runs as ONE sweep call per aggregator
+    (not one per attack group) with every cell as a lane."""
+    import repro.core.scenarios as scen
+
+    lane_counts = []
+    orig = scen.run_dynabro_scan_sweep
+
+    def counting(*args, **kw):
+        lane_counts.append(len(args[4]))  # the switchers argument
+        return orig(*args, **kw)
+
+    monkeypatch.setattr(scen, "run_dynabro_scan_sweep", counting)
+    grid = scenario_grid(
+        ["sign_flip", ("ipm", {"eps": 0.3}), "alie", "none"],
+        [("periodic", {"n_byz": 3, "K": K}) for K in (5, 8, 13, 20)],
+        ["cwmed", "cwtm"])
+    rows = run_matrix(TASK, grid, m=M, T=16, V=3.0, j_cap=2, driver="vmap")
+    assert lane_counts == [16, 16]
+    assert all(np.isfinite(r["final"]) for r in rows)
+
+
+def test_format_table_kwarg_columns_not_collapsed():
+    """Cells differing only in attack kwargs keep their own pivot columns
+    (and produce no collision warning)."""
+    grid = scenario_grid([("ipm", {"eps": 0.1}), ("ipm", {"eps": 0.9})],
+                         [("static", {"n_byz": 3})], ["cwmed"])
+    rows = run_matrix(TASK, grid, m=M, T=16, V=3.0, j_cap=2, driver="vmap")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        table = format_table(rows)
+    assert "ipm(eps=0.1)" in table and "ipm(eps=0.9)" in table
+    assert rows[0]["attack_label"] != rows[1]["attack_label"]
+    assert rows[0]["attack"] == rows[1]["attack"] == "ipm"
+
+
+def test_format_table_duplicate_nan_rows_stay_silent():
+    """Duplicate lanes of a diverged scenario (both NaN) are duplicates,
+    not a collision."""
+    rows = [{"aggregator": "mean", "attack": "ipm", "final": float("nan")},
+            {"aggregator": "mean", "attack": "ipm", "final": float("nan")}]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        format_table(rows)
+
+
+def test_sweep_rejects_mismatched_lane_scan_fn():
+    """A caller-prebuilt scan_fn whose lax.switch branch order differs from
+    the ids this sweep derives would silently apply the wrong attack per
+    lane — it must be rejected loudly."""
+    from repro.core.robust_train import make_dynabro_scan_fn
+    from repro.optim.optimizers import sgd
+
+    cfg = _cfg_for("sign_flip", T=8, j_cap=1)
+    wrong = make_dynabro_scan_fn(TASK.grad_fn, cfg, sgd(2e-2),
+                                 lane_attacks=("ipm", "sign_flip"))
+    with pytest.raises(ValueError, match="lane_attacks"):
+        run_dynabro_scan_sweep(
+            TASK.grad_fn, TASK.params0, sgd(2e-2), cfg,
+            [get_switcher("static", M, n_byz=2) for _ in range(2)],
+            TASK.make_sampler(M), 8, scan_fn=wrong,
+            attacks=["sign_flip", "ipm"])
+    # and the reverse direction: a lane-built scan_fn without attacks
+    with pytest.raises(ValueError, match="no\\s+attacks"):
+        run_dynabro_scan_sweep(
+            TASK.grad_fn, TASK.params0, sgd(2e-2), cfg,
+            [get_switcher("static", M, n_byz=2) for _ in range(2)],
+            TASK.make_sampler(M), 8, scan_fn=wrong)
+
+
+def test_run_scenario_driver_validation_and_vmap_route():
+    """Unknown driver strings raise instead of silently running legacy;
+    driver='vmap' on a single cell routes through the sweep and matches
+    the scan driver."""
+    from repro.core.scenarios import run_scenario
+
+    sc = Scenario("sign_flip", "static", "cwmed",
+                  switcher_kwargs=(("n_byz", 3),))
+    with pytest.raises(ValueError, match="unknown driver"):
+        run_scenario(TASK, sc, m=M, T=8, V=3.0, driver="lgacy")
+    row_v = run_scenario(TASK, sc, m=M, T=16, V=3.0, j_cap=2, driver="vmap")
+    row_s = run_scenario(TASK, sc, m=M, T=16, V=3.0, j_cap=2, driver="scan")
+    assert row_v["driver"] == "vmap"
+    np.testing.assert_allclose(row_v["final"], row_s["final"], rtol=1e-6,
+                               atol=1e-7)
+    assert row_v["cost"] == row_s["cost"]
+
+
+def test_scan_driver_rejects_lane_built_scan_fn():
+    from repro.core.robust_train import make_dynabro_scan_fn
+    from repro.optim.optimizers import sgd
+
+    cfg = _cfg_for("sign_flip", T=8, j_cap=1)
+    lane_fn = make_dynabro_scan_fn(TASK.grad_fn, cfg, sgd(2e-2),
+                                   lane_attacks=("sign_flip",))
+    with pytest.raises(ValueError, match="run_dynabro_scan_sweep"):
+        run_dynabro_scan(TASK.grad_fn, TASK.params0, sgd(2e-2), cfg,
+                         get_switcher("static", M, n_byz=2),
+                         TASK.make_sampler(M), 8, scan_fn=lane_fn)
+
+
+def test_scan_driver_rejects_mesh_mismatched_scan_fn():
+    """An unsharded prebuilt scan_fn passed with mesh= would silently run
+    the whole loop unsharded; both mismatch directions must fail loudly."""
+    from repro.core.robust_train import make_dynabro_scan_fn
+    from repro.launch.mesh import make_worker_mesh
+    from repro.optim.optimizers import sgd
+
+    cfg = _cfg_for("sign_flip", T=8, j_cap=1)
+    mesh = make_worker_mesh(1)
+    plain_fn = make_dynabro_scan_fn(TASK.grad_fn, cfg, sgd(2e-2))
+    shard_fn = make_dynabro_scan_fn(TASK.grad_fn, cfg, sgd(2e-2), mesh=mesh)
+    sw = get_switcher("static", M, n_byz=2)
+    with pytest.raises(ValueError, match="mesh"):
+        run_dynabro_scan(TASK.grad_fn, TASK.params0, sgd(2e-2), cfg, sw,
+                         TASK.make_sampler(M), 8, scan_fn=plain_fn, mesh=mesh)
+    with pytest.raises(ValueError, match="mesh"):
+        run_dynabro_scan(TASK.grad_fn, TASK.params0, sgd(2e-2), cfg, sw,
+                         TASK.make_sampler(M), 8, scan_fn=shard_fn)
+    with pytest.raises(ValueError, match="unsharded"):
+        run_dynabro_scan_sweep(TASK.grad_fn, TASK.params0, sgd(2e-2), cfg,
+                               [sw], TASK.make_sampler(M), 8,
+                               scan_fn=shard_fn)
+
+
+def test_format_table_warns_on_residual_collision():
+    """Rows the labels cannot split (a varying axis pivoted away) warn
+    instead of silently showing one of several differing values."""
+    rows = [{"aggregator": "cwmed", "attack": "ipm", "final": 1.0},
+            {"aggregator": "cwmed", "attack": "ipm", "final": 2.0}]
+    with pytest.warns(RuntimeWarning, match="collide"):
+        format_table(rows)
 
 
 def test_sweep_driver_T0_and_empty():
