@@ -20,6 +20,19 @@ Two more row families feed the CI perf gates (benchmarks/check_regression.py):
   4-switcher grid through one vmapped call per attack group (the old
   grouping) vs all 16 lanes in a single call with the per-lane attack
   dispatch; the lane-batched row must hold a ≥2x speedup.
+* ``sweep_agg_loop_G4`` / ``sweep_vmap_aggs`` — the full 4-attack ×
+  4-switcher × 4-aggregator grid through one vmapped call per aggregator
+  group (the PR-4 grouping) vs all 64 lanes in a SINGLE call with per-lane
+  attack AND aggregator dispatch (DESIGN.md §7); the one-dispatch row must
+  hold a ≥1.5x speedup. The aggregator axis is CWTM at four deltas — the
+  traced-hyperparameter lanes this PR makes expressible (under the old
+  name-keyed grouping, delta was global and the four cells NEEDED four
+  dispatches), and a shape whose ``agg_switch`` collapses to one branch so
+  the gated number isolates dispatch amortization. Grids mixing *distinct*
+  rules pay the execute-all-branches select per lane under vmap (the level
+  dispatch is paid once per round, ``agg_engine._per_level``) and land near
+  break-even against the group loop on dev CPU at T=64 — correctness-locked
+  in tests/test_scenarios.py, deliberately not perf-gated.
 """
 from __future__ import annotations
 
@@ -42,6 +55,11 @@ from repro.optim.optimizers import sgd
 SWEEP_KS = (5, 8, 10, 15, 20, 25, 40, 50)  # C=8 periodic switcher cells
 ATTACK_SPECS = ("sign_flip", ("ipm", {"eps": 0.3}), "alie", "none")
 ATTACK_KS = (5, 10, 20, 50)  # the switcher column of the attack grid
+# the aggregator axis of the full grid: CWTM at four deltas — the traced
+# hyperparameter lanes (deltas explicit so the per-group baseline cfg and
+# the contender's lane thetas agree exactly; see module docstring)
+AGG_SPECS = (("cwtm", {"delta": 0.1}), ("cwtm", {"delta": 0.2}),
+             ("cwtm", {"delta": 0.3}), ("cwtm", {"delta": 0.45}))
 
 
 def _time(fn, iters: int):
@@ -198,6 +216,75 @@ def run_attack_sweep(T: int = 64, m: int = 9, iters: int = 3, seed: int = 0):
     return _time(t_loop, iters), _time(t_lanes, iters)
 
 
+def run_agg_sweep(T: int = 64, m: int = 9, iters: int = 3, seed: int = 0):
+    """(us_group_loop, us_one_dispatch) for the 4×4×4 attack × switcher ×
+    aggregator grid.
+
+    The baseline is the pre-aggregator-lane grouping: one attack-lane sweep
+    per aggregator group — 4 steady-state dispatches (scan_fns prebuilt per
+    group). The contender runs all 64 cells as lanes of ONE call via the
+    per-lane attack AND aggregator dispatch. Lanes are equality-checked
+    (exact round logs, sweep-tolerance finals) against the group loop
+    before timing."""
+    task, cfg, sampler, opt = _setup(T, m)
+    lane_attacks = [a for a in ATTACK_SPECS for _ in ATTACK_KS]  # 16/group
+    lane_names, _, _ = _lane_attack_plan(lane_attacks)
+    group_cfgs = [dataclasses.replace(cfg, aggregator=n,
+                                      delta=kw.get("delta", cfg.delta),
+                                      aggregator_kwargs=dict(kw) or None)
+                  for n, kw in AGG_SPECS]
+    group_fns = [make_dynabro_scan_fn(task.grad_fn, c, opt,
+                                      lane_attacks=lane_names)
+                 for c in group_cfgs]
+    agg_names = tuple(dict.fromkeys(n for n, _ in AGG_SPECS))
+    full_fn = make_dynabro_scan_fn(task.grad_fn, cfg, opt,
+                                   lane_attacks=lane_names,
+                                   lane_aggregators=agg_names)
+    agg_lanes = [(n, dict(kw)) for n, kw in AGG_SPECS for _ in lane_attacks]
+    atk_lanes = lane_attacks * len(AGG_SPECS)
+
+    def make_sws():
+        return [get_switcher("periodic", m, n_byz=4, K=K, seed=seed)
+                for K in ATTACK_KS]
+
+    def group_sws():
+        return [sw for _ in ATTACK_SPECS for sw in make_sws()]
+
+    def group_loop():
+        outs = []
+        for c, fn in zip(group_cfgs, group_fns):
+            outs.extend(run_dynabro_scan_sweep(
+                task.grad_fn, task.params0, opt, c, group_sws(), sampler, T,
+                seed=seed, scan_fn=fn, attacks=lane_attacks))
+        return outs
+
+    def lanes():
+        return run_dynabro_scan_sweep(
+            task.grad_fn, task.params0, opt, cfg,
+            [sw for _ in AGG_SPECS for sw in group_sws()], sampler, T,
+            seed=seed, scan_fn=full_fn, attacks=atk_lanes,
+            aggregators=agg_lanes)
+
+    per_group = group_loop()
+    per_lane = lanes()
+    assert len(per_group) == len(per_lane) == 64
+    for (p_ref, logs_ref), (p_lane, logs_lane) in zip(per_group, per_lane):
+        assert logs_ref == logs_lane
+        np.testing.assert_allclose(np.asarray(p_ref["x"]),
+                                   np.asarray(p_lane["x"]),
+                                   rtol=1e-6, atol=1e-7)
+
+    def t_loop():
+        outs = group_loop()
+        return (outs[-1][0],)
+
+    def t_lanes():
+        outs = lanes()
+        return (outs[-1][0],)
+
+    return _time(t_loop, iters), _time(t_lanes, iters)
+
+
 def main(fast: bool = False):
     iters = 2 if fast else 3
     rows = []
@@ -220,6 +307,11 @@ def main(fast: bool = False):
     rows.append(f"scan_driver/sweep_attack_loop_A{a}xS{s},{us_groups:.0f},")
     rows.append(f"scan_driver/sweep_vmap_attacks,{us_lanes:.0f},"
                 f"speedup={us_groups / us_lanes:.1f}x")
+    us_agg_groups, us_agg_lanes = run_agg_sweep(iters=iters)
+    g = len(AGG_SPECS)
+    rows.append(f"scan_driver/sweep_agg_loop_G{g},{us_agg_groups:.0f},")
+    rows.append(f"scan_driver/sweep_vmap_aggs,{us_agg_lanes:.0f},"
+                f"speedup={us_agg_groups / us_agg_lanes:.1f}x")
     return rows
 
 

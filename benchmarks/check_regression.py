@@ -29,6 +29,9 @@ GATES = [
     ("scan_driver/sweep_vmap_C8", "speedup", 2.0, ">="),
     # attack-lane-batched sweep vs one vmapped call per attack group (~3x dev)
     ("scan_driver/sweep_vmap_attacks", "speedup", 2.0, ">="),
+    # whole 4x4x4 grid in ONE dispatch (aggregator axis = CWTM delta lanes)
+    # vs one vmapped call per aggregator group (~2x dev)
+    ("scan_driver/sweep_vmap_aggs", "speedup", 1.5, ">="),
 ]
 
 

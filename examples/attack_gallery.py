@@ -3,11 +3,13 @@
 Sweeps the paper's attacks (SF / IPM / ALIE) — including kwarg variants like
 a strong ``ipm(eps=0.9)`` and the Baruch et al. auto-z ``alie(z=None)`` —
 against every aggregation rule on the quadratic testbed under dynamic
-(Periodic) switching. Runs through ``run_matrix(driver="vmap")``: all attack
-variants of an aggregator are lanes of ONE vmapped compiled call (per-lane
-attack dispatch, DESIGN.md §7), so the whole grid costs one dispatch per
-aggregator. Prints a survival matrix of final optimality gaps with
-kwarg-qualified columns.
+(Periodic) switching. Aggregator *hyperparameters* are a grid axis of their
+own (DESIGN.md §4): CWTM runs at two trim levels ``cwtm(delta=...)`` exactly
+like attack kwarg variants. Runs through ``run_matrix(driver="vmap")``: the
+ENTIRE grid — every attack, rule and hyperparameter variant — is lanes of
+ONE vmapped compiled call (per-lane attack AND aggregator dispatch,
+DESIGN.md §7). Prints a survival matrix of final optimality gaps with
+kwarg-qualified columns and lines.
 
   PYTHONPATH=src python examples/attack_gallery.py
 """
@@ -23,19 +25,22 @@ from repro.core.scenarios import (
 
 def main():
     m, n_byz, T = 9, 3, 250
-    aggs = ["mean", "cwmed", "cwtm", "krum", "geomed", "nnm+cwmed", "mfm"]
+    delta = round(n_byz / m + 0.01, 3)
+    aggs = ["mean", "cwmed", ("cwtm", {"delta": 0.15}),
+            ("cwtm", {"delta": delta}), ("cwtm", {"delta": 0.45}),
+            "krum", "geomed", "nnm+cwmed", "mfm"]
     attacks = ["sign_flip", ("ipm", {"eps": 0.1}), ("ipm", {"eps": 0.9}),
                "alie", ("alie", {"z": None})]
     switchers = [("periodic", {"n_byz": n_byz, "K": 20})]
     task = make_quadratic_task()
     rows = run_matrix(task, scenario_grid(attacks, switchers, aggs),
-                      m=m, T=T, V=3.0, delta=n_byz / m + 0.01, j_cap=4,
-                      driver="vmap")
+                      m=m, T=T, V=3.0, delta=delta, j_cap=4, driver="vmap")
     print(format_table(rows))
     total_wall = sum(r["wall_s"] for r in rows)
-    print(f"\n(gap ≈ 0 => survived; mean should fail, robust rules survive; "
-          f"{len(rows)} scenarios in {total_wall:.1f}s — one vmapped dispatch "
-          f"per aggregator)")
+    print(f"\n(gap ≈ 0 => survived; mean should fail, robust rules survive, "
+          f"under-trimmed cwtm(delta=0.15) sits in between; {len(rows)} "
+          f"scenarios in {total_wall:.1f}s — the whole grid is ONE vmapped "
+          f"dispatch)")
 
 
 if __name__ == "__main__":

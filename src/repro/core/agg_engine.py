@@ -26,10 +26,11 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Callable, Dict, Optional
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
@@ -71,12 +72,18 @@ def cw_median(x: jax.Array, *, backend: str = "auto") -> jax.Array:
     return kref.cwmed_ref(x)
 
 
-def cw_trimmed_mean(x: jax.Array, trim: int, *, backend: str = "auto") -> jax.Array:
-    """(m, d) -> (d,) mean after dropping `trim` lowest/highest per coord."""
-    if trim == 0:
-        return cw_mean(x, backend=backend)
+def cw_trimmed_mean(x: jax.Array, trim, *, backend: str = "auto") -> jax.Array:
+    """(m, d) -> (d,) mean after dropping `trim` lowest/highest per coord.
+
+    ``trim`` may be a Python int (the class-rule path) or a traced int32
+    scalar (the uniform theta path, DESIGN.md §4). The ref backend runs one
+    masked sorted-sum form for both, so static and traced calls with the same
+    trim are bitwise identical; the pallas backend picks the statically-sliced
+    kernel when it can and the masked-kernel variant otherwise."""
     if resolve_backend(backend) == "pallas":
-        return kops.cwtm_op(x, trim)
+        if isinstance(trim, (int, np.integer)):
+            return kops.cwtm_op(x, int(trim))
+        return kops.cwtm_masked_op(x, trim)
     return kref.cwtm_ref(x, trim)
 
 
@@ -221,31 +228,216 @@ def registered_rules():
 
 
 def get_aggregator(name: str, delta: float = 0.25, tau: Optional[float] = None,
-                   backend: str = "auto") -> Aggregator:
+                   backend: str = "auto", **kwargs) -> Aggregator:
     """One registry for both training modes: Mode A consumes ``.tree()``,
-    Mode B consumes ``.leaf()`` (coordinate-wise rules only).
+    Mode B consumes ``.leaf()`` (coordinate-wise rules only). Extra rule
+    hyperparameters (Krum's ``multi``, GeoMed's ``iters``/``eps``) pass
+    through ``kwargs`` to the rule factory; unknown ones raise.
 
-    Instances are memoized per (name, delta, tau, backend): rules are
+    Instances are memoized per (name, delta, tau, backend, kwargs): rules are
     stateless after construction, and the compiled drivers resolve the rule
     inside every traced ``lax.switch`` branch of every vmapped sweep lane
     (DESIGN.md §5, §7) — caching keeps that a dict hit instead of a
     re-registration import + object build per trace site."""
-    return _cached_rule(name.lower(), delta, tau, backend)
+    return _cached_rule(name.lower(), delta, tau, backend,
+                        tuple(sorted(kwargs.items())))
 
 
 @functools.lru_cache(maxsize=None)
 def _cached_rule(name: str, delta: float, tau: Optional[float],
-                 backend: str) -> Aggregator:
+                 backend: str, extra: tuple) -> Aggregator:
     import repro.core.aggregators as _rules  # registers on first import
+    kw = dict(extra)
     if name.startswith("nnm+"):
-        return _rules.NNM(get_aggregator(name[4:], delta, tau, backend),
+        return _rules.NNM(get_aggregator(name[4:], delta, tau, backend, **kw),
                           delta, backend=backend)
     if name not in _REGISTRY:
         raise ValueError(f"unknown aggregator {name!r}; known: "
                          f"{registered_rules()} and nnm+<base>")
-    return _REGISTRY[name](delta=delta, tau=tau, backend=backend)
+    return _REGISTRY[name](delta=delta, tau=tau, backend=backend, **kw)
+
+
+def count_ceil(v: float) -> int:
+    """⌈v⌉ for host-side δ·m counts, nudged exactly like ``traced_count`` so
+    the class rules and the traced theta path derive identical counts. The
+    nudge also corrects f64 artifacts: 0.28·25 is exactly 7, but f64 rounds
+    the product to 7.000000000000001 — a bare math.ceil returns 8 there,
+    diverging from both exact arithmetic and the f32 lane path."""
+    return math.ceil(v - 1e-5)
 
 
 def trim_count(delta: float, m: int) -> int:
     """⌈δm⌉ clipped to keep at least one row after two-sided trimming."""
-    return min(math.ceil(delta * m), (m - 1) // 2)
+    return min(count_ceil(delta * m), (m - 1) // 2)
+
+
+# ==================================================== uniform theta dispatch
+#
+# The lane-batched scenario sweep (``core/robust_train.py``) runs cells with
+# *different* aggregation rules as lanes of one vmapped scan, so the rule
+# choice and its hyperparameters must be data, not Python constants — the
+# same treatment ``core/attacks.py`` gives attacks. Every rule is exposed
+# under the uniform signature ``(stacked, n, theta) -> agg_tree``: slot i of
+# ``theta`` holds the i-th hyperparameter of that rule per ``AGG_PARAMS``
+# (``n`` is the static mini-batch size, which MFM's auto-tau scales with),
+# and ``agg_switch(names)`` builds the ``lax.switch`` applier over the
+# compact branch set actually present in the sweep (DESIGN.md §4, §7).
+
+AGG_PARAMS: Dict[str, Tuple[Tuple[str, Any], ...]] = {
+    "mean": (),
+    "cwmed": (),
+    "cwtm": (("delta", 0.25),),
+    "krum": (("delta", 0.25), ("multi", 1)),
+    "geomed": (("iters", 8), ("eps", 1e-8)),
+    "mfm": (("tau", None),),  # None -> NaN sentinel: auto tau from (mlmc, n)
+}
+
+# ``nnm+<base>`` composites prepend NNM's delta and share the slot with the
+# base rule's delta (exactly like ``get_aggregator``, which passes one delta
+# to both); the widest spec is nnm+geomed's (delta, iters, eps).
+N_AGG_PARAMS = 1 + max(
+    len([p for p in spec if p[0] != "delta"]) for spec in AGG_PARAMS.values())
+
+# (rule, param) pairs where None is encoded as NaN in theta and resolved in
+# the uniform form. Plain mfm only: the per-cell driver (`_aggregate`) has
+# an auto-tau path for cfg.aggregator == "mfm" alone, and the lane path
+# must not accept a spec whose per-cell reference run would crash —
+# nnm+mfm therefore needs an explicit tau on both paths.
+AGG_NAN_SENTINELS = {("mfm", "tau")}
+
+# static unroll bound of the uniform GeoMed form: a traced ``iters`` cannot
+# change the trace, so the theta path runs this many gated Weiszfeld steps
+GEOMED_MAX_ITERS = 8
+
+
+def agg_param_spec(name: str) -> Tuple[Tuple[str, Any], ...]:
+    """(name, default) slots of ``name``'s theta vector, composites included."""
+    name = name.lower()
+    if name.startswith("nnm+"):
+        base = agg_param_spec(name[4:])
+        return (("delta", 0.25),) + tuple(p for p in base if p[0] != "delta")
+    if name not in AGG_PARAMS:
+        raise ValueError(f"unknown aggregator {name!r}; known: "
+                         f"{tuple(sorted(AGG_PARAMS))} and nnm+<base>")
+    return AGG_PARAMS[name]
+
+
+def agg_param_names(name: str) -> Tuple[str, ...]:
+    return tuple(p for p, _ in agg_param_spec(name))
+
+
+def agg_theta(name: str,
+              kwargs: Optional[Mapping[str, Any]] = None) -> np.ndarray:
+    """(N_AGG_PARAMS,) float32 hyperparameter vector for ``name`` — the
+    per-lane row of the sweep's (C, N_AGG_PARAMS) parameter matrix. Unset
+    parameters take their ``agg_param_spec`` defaults; unknown ones raise, as
+    does ``None`` for a parameter without NaN-sentinel support, or an
+    ``iters`` beyond the static unroll bound ``GEOMED_MAX_ITERS``. One
+    exception: ``delta`` is accepted (and discarded) even for rules without
+    a delta slot, because ``get_aggregator`` takes a universal ``delta``
+    parameter that such rules ignore — the lane path must not reject a spec
+    the per-cell path runs."""
+    kw = dict(kwargs or {})
+    if "delta" not in agg_param_names(name):
+        kw.pop("delta", None)
+    theta = np.zeros(N_AGG_PARAMS, np.float32)
+    for i, (pname, default) in enumerate(agg_param_spec(name)):
+        val = kw.pop(pname, default)
+        if val is None and (name, pname) not in AGG_NAN_SENTINELS:
+            raise TypeError(
+                f"{name!r} aggregator parameter {pname!r} does not accept None")
+        if pname == "iters" and val is not None and val > GEOMED_MAX_ITERS:
+            raise ValueError(
+                f"{name!r}: iters={val} exceeds the uniform form's static "
+                f"unroll bound GEOMED_MAX_ITERS={GEOMED_MAX_ITERS}; use the "
+                f"class rule (get_aggregator) for longer Weiszfeld runs")
+        theta[i] = np.nan if val is None else float(val)
+    if kw:
+        raise TypeError(f"unknown {name!r} aggregator parameter(s): {sorted(kw)}")
+    return theta
+
+
+def traced_count(v) -> jax.Array:
+    """⌈v⌉ as int32 for a (possibly traced) f32 count like δ·m — the traced
+    twin of ``count_ceil``. The shared 1e-5 nudge (well over half an f32 ulp
+    of any realistic δ·m < 32) keeps both paths agreeing on exact-integer
+    products, where bare f64/f32 ceils would round up on representation
+    noise. Products within 1e-5 of an integer boundary are the caller's
+    precision problem either way."""
+    return jnp.ceil(jnp.asarray(v, jnp.float32) - 1e-5).astype(jnp.int32)
+
+
+def traced_trim_count(delta, m: int) -> jax.Array:
+    """``trim_count`` for a traced delta (same clipping, in-graph)."""
+    return jnp.clip(traced_count(delta * m), 0, (m - 1) // 2)
+
+
+_UNIFORM: Dict[str, Callable] = {}
+
+
+def register_uniform(name: str, builder: Callable) -> None:
+    """``builder(backend, mlmc) -> fn(stacked, n, theta)``; the special key
+    ``"nnm"`` registers the composite wrapper ``builder(base_name, backend,
+    mlmc)``."""
+    _UNIFORM[name] = builder
+
+
+def uniform_aggregator(name: str, *, backend: str = "auto", mlmc=None):
+    """``name`` under the uniform ``(stacked, n, theta)`` signature — the
+    ``lax.switch`` branch form, reading hyperparameters from theta slots.
+
+    ``mlmc`` (an ``MLMCConfig``) supplies MFM's auto threshold
+    ``mlmc.mfm_tau(n)`` when the tau slot carries the NaN sentinel; without
+    it a NaN tau propagates NaN weights, so direct callers should pass an
+    explicit tau. Matches ``get_aggregator(name, ...)`` bitwise on the ref
+    backend for equal hyperparameters (the class rules run the identical
+    masked cores — ``tests/test_agg_engine.py``)."""
+    import repro.core.aggregators  # noqa: F401  (registers the forms)
+    name = name.lower()
+    agg_param_spec(name)  # validates the name
+    if name.startswith("nnm+"):
+        return _UNIFORM["nnm"](name[4:], backend, mlmc)
+    return _UNIFORM[name](backend, mlmc)
+
+
+def _per_level(fn, stacked, n, theta):
+    """Run a uniform form at one batch size — or, when ``n`` is a tuple, at
+    each of several (the leaves of ``stacked`` then carry a leading level
+    axis, and so does the result). The per-level applications are the exact
+    scalar-``n`` calls, just unrolled inside one dispatch."""
+    if not isinstance(n, tuple):
+        return fn(stacked, n, theta)
+    outs = [fn(jax.tree.map(lambda l, i=i: l[i], stacked), ni, theta)
+            for i, ni in enumerate(n)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+
+def agg_switch(names: Sequence[str], *, backend: str = "auto",
+               mlmc=None) -> Callable:
+    """``apply(idx, stacked, n, theta)`` dispatching ``lax.switch`` over the
+    uniform forms of ``names`` (``idx`` indexes into ``names``; ``n`` is
+    static). Under ``vmap`` with a lane-mapped idx this lowers to
+    execute-all-branches-and-select — acceptable, since aggregation is
+    O(m²·d) next to the per-worker gradient work. A single name skips the
+    switch entirely.
+
+    ``n`` may also be a *tuple* of batch sizes with a matching leading level
+    axis on ``stacked``: all levels then run inside ONE switch dispatch.
+    That is how the MLMC scan body aggregates its three levels — the
+    execute-all-branches select is paid once per round instead of once per
+    level, which is most of the lane-batched sweep's overhead at small m·d
+    (DESIGN.md §7)."""
+    branches = tuple(uniform_aggregator(nm, backend=backend, mlmc=mlmc)
+                     for nm in names)
+    if len(branches) == 1:
+        only = branches[0]
+        return lambda idx, stacked, n, theta: _per_level(only, stacked, n,
+                                                         theta)
+
+    def apply(idx, stacked, n, theta):
+        return jax.lax.switch(
+            idx,
+            [lambda op, b=b: _per_level(b, op[0], n, op[1]) for b in branches],
+            (stacked, theta))
+
+    return apply

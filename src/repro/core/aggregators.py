@@ -15,6 +15,14 @@ Every rule runs on either engine backend — ``ref`` (pure jnp) or ``pallas``
 (the repro.kernels TPU kernels; interpret mode on CPU) — selected by the
 ``backend`` argument of ``get_aggregator`` (``"auto"`` picks per platform).
 
+Each rule is also registered under the engine's uniform traced-theta form
+``(stacked, n, theta)`` (DESIGN.md §4, bottom of this file): hyperparameters
+become data read from theta slots, which is what lets the lane-batched
+scenario sweep dispatch a per-lane aggregation rule — and per-lane
+hyperparameters — inside one compiled scan. The class rules and the uniform
+forms share the weight/score cores below, so the two paths are bitwise
+equal on the ref backend.
+
 ``(δ, κ_δ)-robustness`` (Def. 3.2, Allouah et al. 2023) holds for CWMed, CWTM,
 Krum and GeoMed (with κ_δ listed in ``KAPPA``); MFM (Alg. 3 of the paper) is
 deliberately *not* (δ,κ)-robust (App. F.1) but gives the optimal δ²-scaling
@@ -24,16 +32,16 @@ from __future__ import annotations
 
 from typing import Optional
 
-import math
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.agg_engine import (
-    Aggregator, CoordinateWiseRule, GeometryRule, Tree,
-    cw_mean, cw_median, cw_trimmed_mean, get_aggregator, register,
-    tree_cross_sqdist, tree_pairwise_sqdist, tree_weighted_combine,
-    trim_count,
+    GEOMED_MAX_ITERS, Aggregator, CoordinateWiseRule, GeometryRule, Tree,
+    _as_mat, agg_param_spec, count_ceil, cw_mean, cw_median,
+    cw_trimmed_mean, get_aggregator, register, register_uniform,
+    traced_count, traced_trim_count, tree_cross_sqdist,
+    tree_pairwise_sqdist, tree_weighted_combine, trim_count,
 )
 
 __all__ = [
@@ -78,6 +86,78 @@ def tree_pairwise_sqdists(stacked: Tree) -> jax.Array:
     return tree_pairwise_sqdist(stacked, backend="ref")
 
 
+# ---------------------------------------------------------------- cores
+#
+# The weight/score math shared by the class rules (static hyperparameters)
+# and the uniform theta forms (traced hyperparameters, DESIGN.md §4). Both
+# call the SAME functions — structural counts like trim/k arrive as Python
+# ints from one path and int32 scalars from the other, and every core is
+# written in the full-width masked style so the op sequence (and hence the
+# ref-backend bitstream) is identical either way. A statically-sliced
+# variant (``sorted[:, :k].sum(1)``) would reduce over a different tree
+# shape and drift at ULP level between the paths.
+
+
+def _krum_scores(d2: jax.Array, k) -> jax.Array:
+    """Sum of each worker's k nearest squared distances (self excluded)."""
+    m = d2.shape[0]
+    d2 = d2 + jnp.diag(jnp.full((m,), jnp.inf, jnp.float32))
+    srt = jnp.sort(d2, axis=1)
+    return jnp.where(jnp.arange(m)[None, :] < k, srt, 0.0).sum(1)
+
+
+def _krum_weights(d2: jax.Array, k, multi) -> jax.Array:
+    """(m,) selection weights: 1/multi on the multi best-scored workers."""
+    s = _krum_scores(d2, k)
+    m = s.shape[0]
+    _, idx = jax.lax.top_k(-s, m)  # stable full argsort by score
+    per = jnp.where(jnp.arange(m) < multi, 1.0 / multi, 0.0)
+    return jnp.zeros_like(s).at[idx].set(per)
+
+
+def _nnm_weights(d2: jax.Array, k) -> jax.Array:
+    """(m, m) mixing matrix: row i averages worker i's k nearest (incl self)."""
+    m = d2.shape[0]
+    _, idx = jax.lax.top_k(-d2, m)  # stable full argsort per row
+    ws = jnp.where(jnp.arange(m) < k, 1.0 / k, 0.0)
+    return jax.vmap(lambda ix: jnp.zeros((m,)).at[ix].set(ws))(idx)
+
+
+def _mfm_weights(d2: jax.Array, tau) -> jax.Array:
+    """Median-Filtered-Mean weights (Alg. 3); all-zero => output 0."""
+    m = d2.shape[0]
+    d = jnp.sqrt(d2)
+    within_half = (d <= tau / 2).sum(1)  # includes self
+    is_med_candidate = within_half > m / 2
+    any_med = is_med_candidate.any()
+    med_idx = jnp.argmax(is_med_candidate)  # first candidate
+    close = d[med_idx] <= tau  # (m,)
+    w = close.astype(jnp.float32)
+    return jnp.where(any_med, w / jnp.maximum(w.sum(), 1.0), jnp.zeros((m,)))
+
+
+def _geomed_tree(stacked, iters, eps, backend: str, unroll: int):
+    """Weiszfeld iterations, unrolled ``unroll`` times with each step gated
+    on ``i < iters`` — a no-op gate for the class path (static iters ==
+    unroll), the stop condition for the traced path (iters from theta,
+    unroll == GEOMED_MAX_ITERS)."""
+    static = isinstance(iters, (int, np.integer))
+    m = jax.tree.leaves(stacked)[0].shape[0]
+    z = tree_weighted_combine(stacked, jnp.full((m,), 1.0 / m, jnp.float32),
+                              backend=backend, out_dtype=jnp.float32)
+    for i in range(unroll):
+        d2 = tree_cross_sqdist(stacked, z, backend=backend)
+        w = 1.0 / jnp.sqrt(d2 + eps)
+        zn = tree_weighted_combine(stacked, w / w.sum(),
+                                   backend=backend, out_dtype=jnp.float32)
+        if static:
+            z = zn  # every unrolled step is live
+        else:
+            live = jnp.asarray(i, jnp.float32) < iters
+            z = jax.tree.map(lambda a, b: jnp.where(live, a, b), zn, z)
+    return jax.tree.map(lambda zl, l: zl.astype(l.dtype), z, stacked)
+
+
 # ---------------------------------------------------------------- rules
 
 
@@ -119,20 +199,14 @@ class Krum(GeometryRule):
         self.delta = delta
         self.multi = multi
 
+    def _k(self, m: int) -> int:
+        return max(m - count_ceil(self.delta * m) - 2, 1)
+
     def scores(self, d2: jax.Array) -> jax.Array:
-        m = d2.shape[0]
-        f = math.ceil(self.delta * m)
-        k = max(m - f - 2, 1)
-        d2 = d2 + jnp.diag(jnp.full((m,), jnp.inf, jnp.float32))
-        nearest = jnp.sort(d2, axis=1)[:, :k]
-        return nearest.sum(1)
+        return _krum_scores(d2, self._k(d2.shape[0]))
 
     def _weights(self, d2):
-        s = self.scores(d2)
-        if self.multi == 1:
-            return jax.nn.one_hot(jnp.argmin(s), s.shape[0])
-        _, idx = jax.lax.top_k(-s, self.multi)
-        return jnp.zeros_like(s).at[idx].set(1.0 / self.multi)
+        return _krum_weights(d2, self._k(d2.shape[0]), self.multi)
 
 
 class GeoMed(Aggregator):
@@ -147,15 +221,8 @@ class GeoMed(Aggregator):
         self.eps = eps
 
     def tree(self, stacked):
-        m = jax.tree.leaves(stacked)[0].shape[0]
-        z = tree_weighted_combine(stacked, jnp.full((m,), 1.0 / m, jnp.float32),
-                                  backend=self.backend, out_dtype=jnp.float32)
-        for _ in range(self.iters):
-            d2 = tree_cross_sqdist(stacked, z, backend=self.backend)
-            w = 1.0 / jnp.sqrt(d2 + self.eps)
-            z = tree_weighted_combine(stacked, w / w.sum(),
-                                      backend=self.backend, out_dtype=jnp.float32)
-        return jax.tree.map(lambda zl, l: zl.astype(l.dtype), z, stacked)
+        return _geomed_tree(stacked, self.iters, self.eps, self.backend,
+                            unroll=self.iters)
 
 
 class NNM(GeometryRule):
@@ -171,11 +238,7 @@ class NNM(GeometryRule):
 
     def _weights(self, d2: jax.Array) -> jax.Array:
         m = d2.shape[0]
-        f = math.ceil(self.delta * m)
-        k = m - f
-        _, idx = jax.lax.top_k(-d2, k)  # (m, k) nearest (incl self, d=0)
-        w = jax.vmap(lambda ix: jnp.zeros((m,)).at[ix].set(1.0 / k))(idx)
-        return w  # (m, m) row i = mixing weights for worker i
+        return _nnm_weights(d2, m - count_ceil(self.delta * m))
 
     def tree(self, stacked):
         d2 = tree_pairwise_sqdist(stacked, backend=self.backend)
@@ -193,18 +256,6 @@ class MFM(GeometryRule):
         super().__init__(backend)
         self.tau = tau
 
-    def _mfm_weights(self, d2: jax.Array, tau) -> jax.Array:
-        m = d2.shape[0]
-        d = jnp.sqrt(d2)
-        within_half = (d <= tau / 2).sum(1)  # includes self
-        is_med_candidate = within_half > m / 2
-        any_med = is_med_candidate.any()
-        med_idx = jnp.argmax(is_med_candidate)  # first candidate
-        close = d[med_idx] <= tau  # (m,)
-        w = close.astype(jnp.float32)
-        w = jnp.where(any_med, w / jnp.maximum(w.sum(), 1.0), jnp.zeros((m,)))
-        return w  # all-zero => output 0 (the algorithm's fallback)
-
     def __call__(self, x, tau: Optional[float] = None):
         return self.tree(jnp.asarray(x).astype(jnp.float32), tau)
 
@@ -212,7 +263,7 @@ class MFM(GeometryRule):
         tau = tau if tau is not None else self.tau
         assert tau is not None, "MFM needs a threshold"
         d2 = tree_pairwise_sqdist(stacked, backend=self.backend)
-        return tree_weighted_combine(stacked, self._mfm_weights(d2, tau),
+        return tree_weighted_combine(stacked, _mfm_weights(d2, tau),
                                      backend=self.backend)
 
 
@@ -230,6 +281,87 @@ KAPPA = {
 register("mean", lambda delta=0.25, tau=None, backend="auto": Mean(backend=backend))
 register("cwmed", lambda delta=0.25, tau=None, backend="auto": CWMed(backend=backend))
 register("cwtm", lambda delta=0.25, tau=None, backend="auto": CWTM(delta, backend=backend))
-register("krum", lambda delta=0.25, tau=None, backend="auto": Krum(delta, backend=backend))
-register("geomed", lambda delta=0.25, tau=None, backend="auto": GeoMed(backend=backend))
+register("krum", lambda delta=0.25, tau=None, backend="auto", multi=1:
+         Krum(delta, multi=int(multi), backend=backend))
+register("geomed", lambda delta=0.25, tau=None, backend="auto", iters=8,
+         eps=1e-8: GeoMed(int(iters), eps, backend=backend))
 register("mfm", lambda delta=0.25, tau=None, backend="auto": MFM(tau, backend=backend))
+
+
+# ------------------------------------------------- uniform theta forms
+#
+# The ``(stacked, n, theta) -> agg_tree`` implementations behind
+# ``agg_engine.uniform_aggregator`` / ``agg_switch`` (DESIGN.md §4): the
+# lax.switch branch forms of the lane-batched sweep, reading hyperparameters
+# from theta slots per ``agg_param_spec``. They call the identical cores as
+# the classes above, so on the ref backend a uniform call is bitwise equal
+# to ``get_aggregator(name, ...)`` with the same hyperparameters.
+
+
+def _uniform_cw(reduce_fn):
+    """Coordinate-wise uniform form from a (mat, theta, backend) reducer —
+    per-leaf reshape/astype exactly as ``CoordinateWiseRule.leaf``."""
+    def build(backend, mlmc):
+        def fn(stacked, n, theta):
+            def leaf(l):
+                out = reduce_fn(_as_mat(l), theta, backend)
+                return out.reshape(l.shape[1:]).astype(l.dtype)
+            return jax.tree.map(leaf, stacked)
+        return fn
+    return build
+
+
+def _build_krum(backend, mlmc):
+    def fn(stacked, n, theta):
+        m = jax.tree.leaves(stacked)[0].shape[0]
+        k = jnp.maximum(m - traced_count(theta[0] * m) - 2, 1)
+        d2 = tree_pairwise_sqdist(stacked, backend=backend)
+        return tree_weighted_combine(stacked, _krum_weights(d2, k, theta[1]),
+                                     backend=backend)
+    return fn
+
+
+def _build_geomed(backend, mlmc):
+    def fn(stacked, n, theta):
+        return _geomed_tree(stacked, theta[0], theta[1], backend,
+                            unroll=GEOMED_MAX_ITERS)
+    return fn
+
+
+def _build_mfm(backend, mlmc):
+    def fn(stacked, n, theta):
+        tau = theta[0]
+        if mlmc is not None:  # NaN sentinel -> the Option-2 auto threshold
+            tau = jnp.where(jnp.isnan(tau), jnp.float32(mlmc.mfm_tau(n)), tau)
+        d2 = tree_pairwise_sqdist(stacked, backend=backend)
+        return tree_weighted_combine(stacked, _mfm_weights(d2, tau),
+                                     backend=backend)
+    return fn
+
+
+def _build_nnm(base_name, backend, mlmc):
+    from repro.core.agg_engine import uniform_aggregator
+    base_fn = uniform_aggregator(base_name, backend=backend, mlmc=mlmc)
+    merged = [p for p, _ in agg_param_spec("nnm+" + base_name)]
+    idx = np.array([merged.index(p) for p, _ in agg_param_spec(base_name)],
+                   np.int32)
+
+    def fn(stacked, n, theta):
+        m = jax.tree.leaves(stacked)[0].shape[0]
+        k = m - traced_count(theta[0] * m)
+        d2 = tree_pairwise_sqdist(stacked, backend=backend)
+        mixed = tree_weighted_combine(stacked, _nnm_weights(d2, k),
+                                      backend=backend)
+        return base_fn(mixed, n, theta[idx] if idx.size else theta[:0])
+    return fn
+
+
+register_uniform("mean", _uniform_cw(lambda mat, th, b: cw_mean(mat, backend=b)))
+register_uniform("cwmed", _uniform_cw(lambda mat, th, b: cw_median(mat, backend=b)))
+register_uniform("cwtm", _uniform_cw(
+    lambda mat, th, b: cw_trimmed_mean(
+        mat, traced_trim_count(th[0], mat.shape[0]), backend=b)))
+register_uniform("krum", _build_krum)
+register_uniform("geomed", _build_geomed)
+register_uniform("mfm", _build_mfm)
+register_uniform("nnm", _build_nnm)

@@ -79,10 +79,19 @@ class MLMCConfig:
             return 6.0 * math.sqrt(2.0)
         return math.sqrt(self.gamma)
 
+    @property
+    def threshold_coeff(self) -> float:
+        """The j-independent factor (1+√2)·c_E·C·V of the fail-safe bound —
+        what the lane-batched sweep carries per lane (aggregator option/c_E
+        is per-lane data there, DESIGN.md §7). Kept as one left-associated
+        f64 product so the traced path (f32 coeff / √2^j) is bitwise equal
+        to ``threshold``."""
+        C = universal_C(self.m, self.T)
+        return (1.0 + math.sqrt(2.0)) * self.c_E * C * self.V
+
     def threshold(self, j) -> jax.Array:
         """Fail-safe bound (1+√2)·c_E·C·V/√(2^j)."""
-        C = universal_C(self.m, self.T)
-        return (1.0 + math.sqrt(2.0)) * self.c_E * C * self.V / jnp.sqrt(2.0 ** j)
+        return self.threshold_coeff / jnp.sqrt(2.0 ** j)
 
     def mfm_tau(self, n: int) -> float:
         """MFM threshold T^N = 2·C·V/√N (Option 2)."""
@@ -94,18 +103,22 @@ def tree_norm(tree) -> jax.Array:
                         for l in jax.tree.leaves(tree)))
 
 
-def mlmc_combine(g0, gjm1, gj, j: int, cfg: MLMCConfig):
+def mlmc_combine(g0, gjm1, gj, j: int, cfg: MLMCConfig, threshold=None):
     """Combine aggregated level gradients into the MLMC estimate.
 
     g0/gjm1/gj: pytrees (aggregated gradients at batch sizes 1, 2^{j-1}, 2^j).
-    ``j`` is static (host-sampled). Returns (g, info dict).
-    """
+    ``j`` is static (host-sampled). Returns (g, info dict). ``threshold``
+    overrides ``cfg.threshold(j)`` — the lane-batched sweep passes a traced
+    per-lane bound there, because lanes mixing MFM with (δ,κ)-robust rules
+    differ in the fail-safe constant c_E (DESIGN.md §7)."""
     if j > cfg.j_max or gj is None:
         info = {"level": j, "failsafe_ok": jnp.array(True), "corr_norm": jnp.zeros(())}
         return g0, info
     diff = jax.tree.map(lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32), gj, gjm1)
     dn = tree_norm(diff)
-    ok = dn <= cfg.threshold(j) if cfg.use_failsafe else jnp.array(True)
+    if threshold is None:
+        threshold = cfg.threshold(j)
+    ok = dn <= threshold if cfg.use_failsafe else jnp.array(True)
     scale = jnp.where(ok, 2.0 ** j, 0.0)
     g = jax.tree.map(lambda a, d: (a.astype(jnp.float32) + scale * d).astype(a.dtype),
                      g0, diff)

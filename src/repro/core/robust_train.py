@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import agg_engine
 from repro.core import attacks as attacks_lib
 from repro.core.aggregators import MFM, get_aggregator
 from repro.core.mlmc import (
@@ -42,6 +43,10 @@ class DynaBROConfig:
     attack_kwargs: Optional[dict] = None
     use_mlmc: bool = True  # False -> plain robust-aggregated SGD
     agg_backend: str = "auto"  # engine backend: ref | pallas | auto
+    # extra rule hyperparameters (Krum's multi, GeoMed's iters/eps, MFM's
+    # tau, or a delta overriding the field above) — the per-cell mirror of
+    # the sweep's per-lane agg theta (DESIGN.md §4)
+    aggregator_kwargs: Optional[dict] = None
 
 
 def _per_worker_grads(grad_fn: GradFn, params, batches):
@@ -79,32 +84,62 @@ def _attack_stack(cfg: DynaBROConfig, grads, masks, key, lane_attack=None):
     return jax.tree.map(lambda l: jnp.swapaxes(l, 0, 1), attacked)  # (m, n, ...)
 
 
-def _aggregate(cfg: DynaBROConfig, stacked, n: int):
-    """Robustly aggregate a worker-stacked tree; MFM threshold scales 1/√n."""
+def _aggregate(cfg: DynaBROConfig, stacked, n: int, lane_agg=None):
+    """Robustly aggregate a worker-stacked tree; MFM threshold scales 1/√n.
+
+    ``lane_agg`` (an ``(apply, agg_id, theta)`` triple, with ``apply`` from
+    ``agg_engine.agg_switch``) routes through the traced per-lane rule
+    dispatch of the lane-batched sweep instead of the cfg-static rule."""
+    if lane_agg is not None:
+        apply_fn, agg_id, theta = lane_agg
+        return apply_fn(agg_id, stacked, n, theta)
+    kw = dict(cfg.aggregator_kwargs or {})
+    delta = kw.pop("delta", cfg.delta)
     if cfg.aggregator == "mfm":
-        agg = MFM(backend=cfg.agg_backend)
-        return agg.tree(stacked, tau=cfg.mlmc.mfm_tau(n))
-    agg = get_aggregator(cfg.aggregator, delta=cfg.delta, backend=cfg.agg_backend)
+        tau = kw.pop("tau", None)
+        agg = MFM(backend=cfg.agg_backend, **kw)
+        return agg.tree(stacked, tau=cfg.mlmc.mfm_tau(n) if tau is None else tau)
+    agg = get_aggregator(cfg.aggregator, delta=delta, backend=cfg.agg_backend,
+                         **kw)
     return agg.tree(stacked)
 
 
-def _combine_levels(cfg: DynaBROConfig, grads, j: int):
+def _combine_levels(cfg: DynaBROConfig, grads, j: int, lane_agg=None,
+                    lane_thr=None):
     """Aggregate the attacked (m, n, ...) stack at levels 0 / J-1 / J and
     apply the MLMC combine — the one round body shared by the per-level
     jitted step and every ``lax.switch`` branch of the scan driver, so the
-    two cannot diverge. ``j`` and the leaf batch size n are static."""
+    two cannot diverge. ``j`` and the leaf batch size n are static.
+    ``lane_thr`` is the per-lane fail-safe coefficient (1+√2)·c_E·C·V of the
+    aggregator-lane sweep — c_E depends on the lane's rule (MFM is Option
+    2), so it travels as data next to the lane's (agg_id, theta)."""
     n = jax.tree.leaves(grads)[0].shape[1]
     gbar_all = jax.tree.map(lambda l: l.mean(1), grads)  # level j: mean of n
     g0_stack = jax.tree.map(lambda l: l[:, 0], grads)  # level 0: first sample
-    g0 = _aggregate(cfg, g0_stack, 1)
     if cfg.use_mlmc and j >= 1 and j <= cfg.mlmc.j_max:
         gh = jax.tree.map(lambda l: l[:, : n // 2].mean(1), grads)
-        gjm1 = _aggregate(cfg, gh, n // 2)
-        gj = _aggregate(cfg, gbar_all, n)
-        return mlmc_combine(g0, gjm1, gj, j, cfg.mlmc)
+        if lane_agg is not None:
+            # all three levels through ONE rule dispatch: under vmap the
+            # agg_switch select executes every branch per lane, so paying it
+            # once per round instead of once per level is most of the
+            # aggregator-lane sweep's win (DESIGN.md §7); the per-level
+            # numerics are the exact scalar-n calls (agg_engine._per_level)
+            apply_fn, agg_id, theta = lane_agg
+            stacked = jax.tree.map(lambda a, b, c: jnp.stack([a, b, c]),
+                                   g0_stack, gh, gbar_all)
+            out = apply_fn(agg_id, stacked, (1, n // 2, n), theta)
+            g0, gjm1, gj = (jax.tree.map(lambda l, i=i: l[i], out)
+                            for i in range(3))
+        else:
+            g0 = _aggregate(cfg, g0_stack, 1)
+            gjm1 = _aggregate(cfg, gh, n // 2)
+            gj = _aggregate(cfg, gbar_all, n)
+        thr = None if lane_thr is None else lane_thr / jnp.sqrt(2.0 ** j)
+        return mlmc_combine(g0, gjm1, gj, j, cfg.mlmc, threshold=thr)
+    g0 = _aggregate(cfg, g0_stack, 1, lane_agg)
     g, info = mlmc_combine(g0, None, None, cfg.mlmc.j_max + 1, cfg.mlmc)
     if not cfg.use_mlmc:  # plain robust SGD on the full mini-batch
-        g = _aggregate(cfg, gbar_all, n)
+        g = _aggregate(cfg, gbar_all, n, lane_agg)
     return g, info
 
 
@@ -416,7 +451,8 @@ def _segment_bounds(T: int, eval_every: int, chunk: int):
 
 def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer,
                          *, mesh=None, worker_axis: str = "workers",
-                         lane_attacks: Optional[Sequence[str]] = None):
+                         lane_attacks: Optional[Sequence[str]] = None,
+                         lane_aggregators: Optional[Sequence[str]] = None):
     """Build the compiled DynaBRO round loop (DESIGN.md §5, §7).
 
     Returns a jitted ``seg((params, opt_state), xs)`` running ``lax.scan``
@@ -442,32 +478,46 @@ def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer,
     ``atk = (attack_id, theta)`` — a scalar index into ``lane_attacks`` plus
     the (N_PARAMS,) parameter vector, both loop-invariant — and the scan body
     dispatches the attack via a second ``lax.switch``
-    (``attacks.attack_switch``). The MLMC level switch is untouched (its
-    index stays scalar and shared across lanes). Mutually exclusive with
-    ``mesh`` — sweeps run unsharded (DESIGN.md §7).
+    (``attacks.attack_switch``). ``lane_aggregators`` does the same for the
+    aggregation rule: the segment takes a fourth argument
+    ``agg = (agg_id, theta, thr_coeff)`` — an index into ``lane_aggregators``,
+    the (N_AGG_PARAMS,) hyperparameter vector and the lane's fail-safe
+    coefficient (1+√2)·c_E·C·V — dispatched via ``agg_engine.agg_switch`` at
+    every aggregation site. Either axis may be present alone (the segment
+    signature is always ``seg(carry, xs, atk, agg)`` with ``None`` for the
+    absent one). The MLMC level switch is untouched (its index stays scalar
+    and shared across lanes). Both are mutually exclusive with ``mesh`` —
+    sweeps run unsharded (DESIGN.md §7).
     """
-    if lane_attacks is not None and mesh is not None:
+    if (lane_attacks is not None or lane_aggregators is not None) \
+            and mesh is not None:
         raise ValueError(
-            "lane_attacks is for the vmapped sweep, which runs unsharded; "
-            "drop mesh= (DESIGN.md §7)")
+            "lane_attacks/lane_aggregators are for the vmapped sweep, which "
+            "runs unsharded; drop mesh= (DESIGN.md §7)")
     j_max = cfg.mlmc.j_max
     n_max = 2 ** j_max if cfg.use_mlmc else 1
     gather = _worker_gather(mesh, worker_axis)
     atk_apply = (attacks_lib.attack_switch(tuple(lane_attacks))
                  if lane_attacks is not None else None)
+    agg_apply = (agg_engine.agg_switch(tuple(lane_aggregators),
+                                       backend=cfg.agg_backend, mlmc=cfg.mlmc)
+                 if lane_aggregators is not None else None)
 
     def level_branch(j: int):
         n = 2 ** j if (cfg.use_mlmc and 1 <= j <= j_max) else 1
 
         def branch(operand):
-            params, batches, masks, key, atk = operand
+            params, batches, masks, key, atk, agg = operand
             lane = None if atk_apply is None else (atk_apply, *atk)
+            lane_agg = None if agg_apply is None else (agg_apply, *agg[:2])
+            lane_thr = None if agg_apply is None else agg[2]
             b = level_prefix(batches, n, n_max, axis=1)
             grads = _per_worker_grads(grad_fn, params, b)  # (m[_local], n, ...)
             if gather is not None:
                 grads = gather(grads)  # (m, n, ...) in worker order
             grads = _attack_stack(cfg, grads, masks[:n], key, lane_attack=lane)
-            g, info = _combine_levels(cfg, grads, j)
+            g, info = _combine_levels(cfg, grads, j, lane_agg=lane_agg,
+                                      lane_thr=lane_thr)
             return g, info["failsafe_ok"], info["corr_norm"]
 
         return branch
@@ -475,10 +525,10 @@ def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer,
     branches = ([level_branch(j) for j in range(1, j_max + 2)]
                 if cfg.use_mlmc else [level_branch(0)])
 
-    def body(carry, xs, atk=None):
+    def body(carry, xs, atk=None, agg=None):
         params, opt_state = carry
         level, batches, masks, key = xs
-        operand = (params, batches, masks, key, atk)
+        operand = (params, batches, masks, key, atk, agg)
         if cfg.use_mlmc:
             g, ok, dn = jax.lax.switch(level - 1, branches, operand)
         else:
@@ -487,14 +537,18 @@ def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer,
         params = apply_updates(params, updates)
         return (params, opt_state), (ok, dn)
 
-    if lane_attacks is not None:
-        def seg_lane(carry, xs, atk):
-            return jax.lax.scan(lambda c, x: body(c, x, atk), carry, xs)
+    if lane_attacks is not None or lane_aggregators is not None:
+        def seg_lane(carry, xs, atk=None, agg=None):
+            return jax.lax.scan(lambda c, x: body(c, x, atk, agg), carry, xs)
 
         # un-jitted: the sweep jits the vmapped wrapper anyway, and a plain
-        # function can carry the branch order for the sweep's id-consistency
-        # check (a mismatched order would silently apply the wrong attacks)
-        seg_lane.lane_attacks = tuple(lane_attacks)
+        # function can carry the branch orders for the sweep's id-consistency
+        # checks (a mismatched order would silently apply the wrong attack
+        # or rule per lane)
+        seg_lane.lane_attacks = (tuple(lane_attacks)
+                                 if lane_attacks is not None else None)
+        seg_lane.lane_aggregators = (tuple(lane_aggregators)
+                                     if lane_aggregators is not None else None)
         return seg_lane
 
     def seg(carry, xs):
@@ -588,11 +642,12 @@ def run_dynabro_scan(
     if mesh is not None:
         _check_worker_mesh(mesh, worker_axis, switcher.m)
     if scan_fn is not None:
-        if getattr(scan_fn, "lane_attacks", None) is not None:
-            raise ValueError(
-                f"scan_fn was built with lane_attacks="
-                f"{scan_fn.lane_attacks!r}; that variant is for "
-                f"run_dynabro_scan_sweep(attacks=...), not run_dynabro_scan")
+        for lane_kind in ("lane_attacks", "lane_aggregators"):
+            if getattr(scan_fn, lane_kind, None) is not None:
+                raise ValueError(
+                    f"scan_fn was built with {lane_kind}="
+                    f"{getattr(scan_fn, lane_kind)!r}; that variant is for "
+                    f"run_dynabro_scan_sweep(...), not run_dynabro_scan")
         _check_scan_fn_mesh(scan_fn, mesh)
     if T <= 0:
         return params, [], []
@@ -721,24 +776,34 @@ _VMAPPED_CACHE: list = []  # MRU-first [(scan_fn, lane_attacks, vseg), ...]
 _VMAPPED_CACHE_SIZE = 8
 
 
-def _vmapped_scan_fn(scan_fn, lane_attacks: bool = False):
+def _vmapped_scan_fn(scan_fn, lane: bool = False):
     """Lane-batched segment fn: model/optimizer state and the mask schedule
     are mapped over the lane axis; levels / batches / keys stay shared (they
     depend only on the sweep seed) — crucially the ``lax.switch`` level index
-    stays a scalar, keeping the one-branch-per-round dispatch. With
-    ``lane_attacks`` the segment's extra ``(attack_id, theta)`` argument is
-    mapped over lanes as well (the attack dispatch is per-lane data)."""
+    stays a scalar, keeping the one-branch-per-round dispatch. With ``lane``
+    the segment's extra ``atk = (attack_id, theta)`` and ``agg = (agg_id,
+    theta, thr_coeff)`` arguments are mapped over lanes as well (both
+    dispatches are per-lane data; an absent axis is just ``None``, an empty
+    pytree vmap maps over trivially)."""
     for i, entry in enumerate(_VMAPPED_CACHE):
-        if entry[0] is scan_fn and entry[1] == lane_attacks:
+        if entry[0] is scan_fn and entry[1] == lane:
             _VMAPPED_CACHE.insert(0, _VMAPPED_CACHE.pop(i))
             return entry[2]
     in_axes = ((0, 0), (None, None, 0, None))
-    if lane_attacks:
-        in_axes = in_axes + (0,)
+    if lane:
+        in_axes = in_axes + (0, 0)
     vseg = jax.jit(jax.vmap(scan_fn, in_axes=in_axes))
-    _VMAPPED_CACHE.insert(0, (scan_fn, lane_attacks, vseg))
+    _VMAPPED_CACHE.insert(0, (scan_fn, lane, vseg))
     del _VMAPPED_CACHE[_VMAPPED_CACHE_SIZE:]
     return vseg
+
+
+def _norm_lane_specs(specs):
+    out = []
+    for a in specs:
+        name, kw = (a, {}) if isinstance(a, str) else (a[0], dict(a[1] or {}))
+        out.append((name, kw))
+    return out
 
 
 def _lane_attack_plan(attacks):
@@ -746,15 +811,30 @@ def _lane_attack_plan(attacks):
     the compact dispatch plan: the tuple of distinct names in
     first-appearance order (the ``lax.switch`` branch set), the (C,) int32
     lane->branch index vector and the (C, N_PARAMS) parameter matrix."""
-    specs = []
-    for a in attacks:
-        name, kw = (a, {}) if isinstance(a, str) else (a[0], dict(a[1] or {}))
-        specs.append((name, kw))
+    specs = _norm_lane_specs(attacks)
     names = tuple(dict.fromkeys(name for name, _ in specs))
     ids = np.array([names.index(name) for name, _ in specs], np.int32)
     thetas = np.stack([attacks_lib.attack_theta(name, kw)
                        for name, kw in specs])
     return names, ids, thetas
+
+
+def _lane_agg_plan(aggregators, cfg: DynaBROConfig):
+    """The aggregator-axis analog of ``_lane_attack_plan``: distinct rule
+    names (the ``agg_switch`` branch set), lane->branch ids, the
+    (C, N_AGG_PARAMS) theta matrix — plus the (C,) fail-safe coefficient
+    vector, because each lane's c_E follows its rule exactly as
+    ``scenarios._cell_cfg`` sets it per cell: MFM runs the paper's
+    δ-oblivious Option 2, every other rule Option 1 with ``cfg`` kappa."""
+    specs = _norm_lane_specs(aggregators)
+    names = tuple(dict.fromkeys(name for name, _ in specs))
+    ids = np.array([names.index(name) for name, _ in specs], np.int32)
+    thetas = np.stack([agg_engine.agg_theta(name, kw) for name, kw in specs])
+    coeffs = np.array(
+        [dataclasses.replace(
+            cfg.mlmc, option=2 if name == "mfm" else 1).threshold_coeff
+         for name, _ in specs], np.float32)
+    return names, ids, thetas, coeffs
 
 
 def run_dynabro_scan_sweep(
@@ -770,16 +850,18 @@ def run_dynabro_scan_sweep(
     scan_fn=None,
     vectorize_batches: bool = True,
     attacks=None,
+    aggregators=None,
 ):
     """Run C = len(switchers) DynaBRO cells as one vmapped compiled loop.
 
-    Every cell shares ``cfg`` / ``seed`` / ``sample_batches`` and differs only
-    in its switcher — and, with ``attacks``, in its attack — so the level /
-    key / batch schedules coincide and stay *un-batched* under ``vmap`` — in
-    particular the ``lax.switch`` level dispatch keeps its scalar index (a
-    batched index would degrade to execute-all-branches-and-select). Only the
-    (C, T, n_max, m) mask schedule, the model/optimizer state and (with
-    ``attacks``) the per-lane attack id + parameters are batched over lanes.
+    Every cell shares ``cfg`` / ``seed`` / ``sample_batches`` and differs
+    only in its switcher — and, with ``attacks`` / ``aggregators``, in its
+    attack and aggregation rule — so the level / key / batch schedules
+    coincide and stay *un-batched* under ``vmap`` — in particular the
+    ``lax.switch`` level dispatch keeps its scalar index (a batched index
+    would degrade to execute-all-branches-and-select). Only the
+    (C, T, n_max, m) mask schedule, the model/optimizer state and the
+    per-lane attack/aggregator ids + parameters are batched over lanes.
 
     ``attacks`` (one spec per lane: a name or ``(name, kwargs)``) lets lanes
     differ in attack and attack kwargs: the sweep builds a per-lane (C,)
@@ -791,23 +873,34 @@ def run_dynabro_scan_sweep(
     next to the per-worker gradient work. ``attacks=None`` keeps every lane
     on ``cfg.attack`` through the original static path, bitwise-unchanged.
 
+    ``aggregators`` (same spec shape; kwargs are rule hyperparameters like
+    ``delta`` / ``tau`` / ``multi`` / ``iters``) does the same for the
+    aggregation rule via ``agg_engine.agg_switch`` over the uniform
+    ``(stacked, n, theta)`` forms — so grids varying only an aggregator
+    hyperparameter (CWTM at several δ) are free lanes, and each lane also
+    carries its own fail-safe coefficient (MFM lanes run the Option-2 c_E,
+    see ``_lane_agg_plan``). ``aggregators=None`` keeps every lane on
+    ``cfg.aggregator`` through the static path, bitwise-unchanged.
+
     Returns ``[(params_c, logs_c), ...]`` in input order, each lane equal to
     the corresponding ``run_dynabro_scan(...)`` call with that lane's
-    switcher and attack — usually bitwise, always within the parity suite's
-    1e-6 tolerance (XLA may reorder float ops at ULP level when it fuses the
-    batched body; the round logs match exactly — locked by
+    switcher, attack and aggregator — usually bitwise, always within the
+    parity suite's 1e-6 tolerance (XLA may reorder float ops at ULP level
+    when it fuses the batched body; the round logs match exactly — locked by
     tests/test_scenarios.py). ``scan_fn`` accepts a prebuilt *unsharded*
-    ``make_dynabro_scan_fn`` result and must match the attack mode: built
-    with ``lane_attacks=<the distinct attack names in first-appearance
-    order>`` when ``attacks`` is passed, without it otherwise. The jitted
-    vmap wrapper is memoized per scan_fn (``_vmapped_scan_fn``), so repeated
-    sweeps with shared scan_fns reuse one compile cache.
+    ``make_dynabro_scan_fn`` result and must match both lane axes: built
+    with ``lane_attacks=`` / ``lane_aggregators=`` equal to the distinct
+    names (first-appearance order) this sweep derives, and without either
+    when the corresponding axis is absent. The jitted vmap wrapper is
+    memoized per scan_fn (``_vmapped_scan_fn``), so repeated sweeps with
+    shared scan_fns reuse one compile cache.
     """
     C = len(switchers)
-    if attacks is not None and len(attacks) != C:
-        raise ValueError(
-            f"attacks: expected one per-lane spec per switcher "
-            f"({C}), got {len(attacks)}")
+    for axis_name, specs in (("attacks", attacks), ("aggregators", aggregators)):
+        if specs is not None and len(specs) != C:
+            raise ValueError(
+                f"{axis_name}: expected one per-lane spec per switcher "
+                f"({C}), got {len(specs)}")
     if C == 0:
         return []
     if T <= 0:
@@ -815,35 +908,41 @@ def run_dynabro_scan_sweep(
     levels, ns, n_max = _level_plan(cfg, np.random.default_rng(seed), T)
     masks = np.stack([_mask_schedule(sw, T, n_max, ns) for sw in switchers])
     keys = _np_prng_keys(seed * 100_003 + np.arange(T, dtype=np.int64))
-    if attacks is None:
-        atk = None
-        if scan_fn is None:
-            scan_fn = make_dynabro_scan_fn(grad_fn, cfg, opt)
-        elif getattr(scan_fn, "worker_mesh", None) is not None:
+    atk = agg = atk_names = agg_names = None
+    if attacks is not None:
+        atk_names, ids, thetas = _lane_attack_plan(attacks)
+        atk = (jnp.asarray(ids), jnp.asarray(thetas))
+    if aggregators is not None:
+        agg_names, gids, gthetas, coeffs = _lane_agg_plan(aggregators, cfg)
+        agg = (jnp.asarray(gids), jnp.asarray(gthetas), jnp.asarray(coeffs))
+    lane_mode = atk is not None or agg is not None
+    if scan_fn is None:
+        scan_fn = make_dynabro_scan_fn(grad_fn, cfg, opt,
+                                       lane_attacks=atk_names,
+                                       lane_aggregators=agg_names)
+    else:
+        if getattr(scan_fn, "worker_mesh", None) is not None:
             raise ValueError(
                 "scan_fn was built with mesh=; vmapped sweeps run unsharded "
                 "(DESIGN.md §7) — rebuild it without mesh")
-        elif getattr(scan_fn, "lane_attacks", None) is not None:
+        # the lane ids index the derived name tuples; a scan_fn whose
+        # lax.switch branch order differs — or that lacks/adds a lane axis —
+        # would silently apply the wrong attack or rule per lane
+        for kind, want, arg in (("lane_attacks", atk_names, "attacks"),
+                                ("lane_aggregators", agg_names, "aggregators")):
+            have = getattr(scan_fn, kind, None)
+            if have == want:
+                continue
+            if want is None:
+                raise ValueError(
+                    f"scan_fn was built with {kind}={have!r} but this sweep "
+                    f"passes no {arg}; rebuild it without {kind} (or pass "
+                    f"the per-lane {arg})")
             raise ValueError(
-                f"scan_fn was built with lane_attacks="
-                f"{scan_fn.lane_attacks!r} but this sweep passes no "
-                f"attacks; rebuild it without lane_attacks (or pass the "
-                f"per-lane attacks)")
-    else:
-        names, ids, thetas = _lane_attack_plan(attacks)
-        atk = (jnp.asarray(ids), jnp.asarray(thetas))
-        if scan_fn is None:
-            scan_fn = make_dynabro_scan_fn(grad_fn, cfg, opt,
-                                           lane_attacks=names)
-        elif getattr(scan_fn, "lane_attacks", None) != names:
-            # the lane ids index `names`; a scan_fn whose lax.switch branch
-            # order differs would silently apply the wrong attack per lane
-            raise ValueError(
-                f"scan_fn was built with lane_attacks="
-                f"{getattr(scan_fn, 'lane_attacks', None)!r} but this "
-                f"sweep's attacks derive {names!r}; rebuild it with "
-                f"make_dynabro_scan_fn(..., lane_attacks={names!r})")
-    vseg = _vmapped_scan_fn(scan_fn, lane_attacks=atk is not None)
+                f"scan_fn was built with {kind}={have!r} but this sweep's "
+                f"{arg} derive {want!r}; rebuild it with "
+                f"make_dynabro_scan_fn(..., {kind}={want!r})")
+    vseg = _vmapped_scan_fn(scan_fn, lane=lane_mode)
 
     def lanes(tree):  # identical initial state in every lane
         return jax.tree.map(
@@ -860,10 +959,10 @@ def run_dynabro_scan_sweep(
             sample_batches, list(zip(range(a, b), ns[a:b])), n_max,
             vectorize=vectorize_batches)
         xs = (levels_dev[a:b], batches, masks_dev[:, a:b], keys_dev[a:b])
-        if atk is None:
-            carry, (ok, _dn) = vseg(carry, xs)
+        if lane_mode:
+            carry, (ok, _dn) = vseg(carry, xs, atk, agg)
         else:
-            carry, (ok, _dn) = vseg(carry, xs, atk)
+            carry, (ok, _dn) = vseg(carry, xs)
         oks.append(np.asarray(ok))  # (C, b - a)
         a = b
     ok_all = np.concatenate(oks, axis=1)

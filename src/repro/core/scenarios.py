@@ -6,11 +6,18 @@ the ROADMAP's many-scenario coverage goal means): every cell is one full
 DynaBRO (or worker-momentum baseline) run, so the per-round dispatch cost of
 the Python-loop drivers multiplies across the grid. ``run_matrix`` drives
 every cell through ``run_dynabro_scan`` and returns a tidy list-of-dicts
-results table; ``driver="vmap"`` instead batches all cells sharing an
-aggregator — attack, attack kwargs and switcher all vary per lane — into one
-vmapped compiled call per group (``run_dynabro_scan_sweep`` — no re-trace,
-no per-cell dispatch); ``format_table`` pivots the rows for terminal
-display, disambiguating cells that differ only in kwargs.
+results table; ``driver="vmap"`` batches the ENTIRE grid — attack, attack
+kwargs, switcher, aggregator and aggregator kwargs all vary per lane — into
+ONE vmapped compiled call (``run_dynabro_scan_sweep`` with per-lane attack
+and aggregator dispatch — no re-trace, no per-cell or per-group dispatch);
+``format_table`` pivots the rows for terminal display, disambiguating cells
+that differ only in kwargs.
+
+Aggregator hyperparameters are a scenario axis of their own: because rule
+parameters are *traced* theta data in the engine (DESIGN.md §4), grids
+varying only ``delta`` / ``tau`` / ``multi`` / ``iters`` — e.g. CWTM at
+δ ∈ {0.1, 0.25, 0.4} — are free lanes of the same dispatch, written
+``("cwtm", {"delta": 0.4})`` exactly like attack kwarg variants.
 
 Used by ``examples/attack_gallery.py`` and ``benchmarks/bench_scan_driver.py``.
 """
@@ -24,6 +31,7 @@ from typing import Any, Callable, Dict, List, Mapping, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+from repro.core.agg_engine import agg_param_names
 from repro.core.mlmc import MLMCConfig
 from repro.core.robust_train import (
     DynaBROConfig, run_dynabro, run_dynabro_scan, run_dynabro_scan_sweep,
@@ -54,6 +62,7 @@ class Scenario:
     aggregator: str
     attack_kwargs: Tuple[Tuple[str, Any], ...] = ()
     switcher_kwargs: Tuple[Tuple[str, Any], ...] = ()
+    aggregator_kwargs: Tuple[Tuple[str, Any], ...] = ()
 
     @property
     def attack_label(self) -> str:
@@ -68,21 +77,33 @@ class Scenario:
         return f"{self.switcher}({kw})" if kw else self.switcher
 
     @property
+    def aggregator_label(self) -> str:
+        """Rule name qualified with its hyperparameters — ``cwtm(delta=0.4)``
+        — so delta/tau-only grids keep distinct pivot lines."""
+        kw = _fmt_kw(self.aggregator_kwargs)
+        return f"{self.aggregator}({kw})" if kw else self.aggregator
+
+    @property
     def name(self) -> str:
-        return f"{self.attack_label}|{self.switcher_label}|{self.aggregator}"
+        return (f"{self.attack_label}|{self.switcher_label}|"
+                f"{self.aggregator_label}")
 
 
 def scenario_grid(attacks: Sequence[Spec], switchers: Sequence[Spec],
-                  aggregators: Sequence[str]) -> List[Scenario]:
-    """Cartesian product of the three grid axes."""
+                  aggregators: Sequence[Spec]) -> List[Scenario]:
+    """Cartesian product of the three grid axes; every axis takes bare names
+    or ``(name, kwargs)`` — aggregator kwargs are rule hyperparameters
+    (``delta`` / ``tau`` / ``multi`` / ``iters``, see ``agg_engine``)."""
     out = []
     for a in attacks:
         an, akw = _norm(a)
         for s in switchers:
             sn, skw = _norm(s)
             for g in aggregators:
-                out.append(Scenario(an, sn, g, tuple(sorted(akw.items())),
-                                    tuple(sorted(skw.items()))))
+                gn, gkw = _norm(g)
+                out.append(Scenario(an, sn, gn, tuple(sorted(akw.items())),
+                                    tuple(sorted(skw.items())),
+                                    tuple(sorted(gkw.items()))))
     return out
 
 
@@ -122,13 +143,26 @@ def make_quadratic_task(sigma: float = 0.5, seed: int = 0) -> Task:
 def _cell_cfg(sc: Scenario, m: int, T: int, V: float, kappa: float,
               j_cap: int, use_mlmc: bool, delta: float) -> DynaBROConfig:
     """One cfg builder for the per-cell and vmapped paths — they must agree
-    for ``driver="vmap"`` to be a drop-in."""
+    for ``driver="vmap"`` to be a drop-in. A ``delta`` in the scenario's
+    aggregator kwargs overrides the grid-wide default."""
+    akw = dict(sc.aggregator_kwargs)
     return DynaBROConfig(
         mlmc=MLMCConfig(T=T, m=m, V=V,
                         option=2 if sc.aggregator == "mfm" else 1,
                         kappa=kappa, j_cap=j_cap),
-        aggregator=sc.aggregator, delta=delta, attack=sc.attack,
-        attack_kwargs=dict(sc.attack_kwargs) or None, use_mlmc=use_mlmc)
+        aggregator=sc.aggregator, delta=akw.get("delta", delta),
+        attack=sc.attack, attack_kwargs=dict(sc.attack_kwargs) or None,
+        use_mlmc=use_mlmc, aggregator_kwargs=akw or None)
+
+
+def _agg_spec(sc: Scenario, delta: float):
+    """The per-lane aggregator spec of the vmapped sweep: the scenario's
+    kwargs, with the grid-wide ``delta`` filled in for rules that take one
+    (so the lane theta matches ``_cell_cfg``'s per-cell delta)."""
+    kw = dict(sc.aggregator_kwargs)
+    if "delta" not in kw and "delta" in agg_param_names(sc.aggregator):
+        kw["delta"] = delta
+    return (sc.aggregator, kw)
 
 
 def _row(task: Task, sc: Scenario, params, logs, *, driver: str, m: int,
@@ -136,7 +170,9 @@ def _row(task: Task, sc: Scenario, params, logs, *, driver: str, m: int,
     return {
         "attack": sc.attack, "attack_label": sc.attack_label,
         "switcher": sc.switcher, "switcher_label": sc.switcher_label,
-        "aggregator": sc.aggregator, "driver": driver, "m": m, "T": T,
+        "aggregator": sc.aggregator,
+        "aggregator_label": sc.aggregator_label,
+        "driver": driver, "m": m, "T": T,
         "final": task.objective(params),
         "failsafe_trips": sum(1 for l in logs if l.level >= 1 and not l.failsafe_ok),
         "mean_level": sum(l.level for l in logs) / max(len(logs), 1),
@@ -202,9 +238,10 @@ def run_matrix(
 ) -> List[Dict[str, Any]]:
     """Sweep every scenario through the compiled driver -> results table.
 
-    ``driver="vmap"`` routes through ``run_matrix_vmapped`` (cells batched
-    into vmapped lane groups; unsharded only — combine with ``mesh=`` and it
-    raises); ``"scan"`` / ``"legacy"`` run one driver call per cell."""
+    ``driver="vmap"`` routes through ``run_matrix_vmapped`` (the whole grid
+    as lanes of ONE vmapped compiled dispatch; unsharded only — combine with
+    ``mesh=`` and it raises); ``"scan"`` / ``"legacy"`` run one driver call
+    per cell."""
     if kw.get("driver") == "vmap":
         if kw.get("mesh") is not None:
             raise ValueError(
@@ -230,45 +267,43 @@ def run_matrix_vmapped(
     seed: int = 0,
     chunk: int = 0,
 ) -> List[Dict[str, Any]]:
-    """Sweep a grid with cells batched into vmapped lanes (DESIGN.md §7).
+    """Sweep a grid with every cell a lane of ONE vmapped dispatch
+    (DESIGN.md §7).
 
-    Cells are grouped by **aggregator alone** — the only grid axis that still
-    shapes the traced computation. Each group's attack × switcher cells run
-    as lanes of one ``run_dynabro_scan_sweep`` call (per-lane attack id +
-    parameter matrix dispatched in the scan body): an A×S grid costs one
-    compiled dispatch per aggregator instead of one per (attack, kwargs)
-    group, with equivalent numerics (``tests/test_scenarios.py`` locks rows
-    to the per-cell loop — exact round logs, floats within the parity
+    No grid axis shapes the traced computation any more: attacks AND
+    aggregation rules dispatch per lane through traced-theta ``lax.switch``
+    layers, so the whole attack × switcher × aggregator grid — aggregator
+    hyperparameter variants included — runs as lanes of a single
+    ``run_dynabro_scan_sweep`` call: one compile, one dispatch, regardless of
+    grid shape, with equivalent numerics (``tests/test_scenarios.py`` locks
+    rows to the per-cell loop — exact round logs, floats within the parity
     suite's 1e-6). Rows come back in input order; duplicate scenarios are
-    just duplicate lanes. ``wall_s`` is the group wall clock amortized over
-    its lanes. One sampler is shared by every group (lanes share batch
-    draws by construction), so ``task.make_sampler`` must return *pure*
-    samplers — samplers with hidden per-call state need the per-cell
-    drivers (``driver="scan"`` with ``vectorize_batches=False``)."""
-    groups: Dict[Tuple, List[int]] = {}
-    for i, sc in enumerate(scenarios):
-        groups.setdefault((sc.aggregator,), []).append(i)
-    rows: List[Any] = [None] * len(scenarios)
+    just duplicate lanes. ``wall_s`` is the grid wall clock amortized over
+    its lanes. One sampler is shared by every lane (lanes share batch draws
+    by construction), so ``task.make_sampler`` must return *pure* samplers —
+    samplers with hidden per-call state need the per-cell drivers
+    (``driver="scan"`` with ``vectorize_batches=False``)."""
+    scs = list(scenarios)
+    if not scs:
+        return []
     sampler = task.make_sampler(m)
-    for idxs in groups.values():
-        cfg = _cell_cfg(scenarios[idxs[0]], m, T, V, kappa, j_cap, use_mlmc,
-                        delta)
-        switchers = [get_switcher(scenarios[i].switcher, m, seed=seed,
-                                  **dict(scenarios[i].switcher_kwargs))
-                     for i in idxs]
-        attacks = [(scenarios[i].attack, dict(scenarios[i].attack_kwargs))
-                   for i in idxs]
-        t0 = time.perf_counter()
-        outs = run_dynabro_scan_sweep(task.grad_fn, task.params0, make_opt(),
-                                      cfg, switchers, sampler, T, seed=seed,
-                                      chunk=chunk, attacks=attacks)
-        jax.block_until_ready(
-            [l for p, _ in outs for l in jax.tree.leaves(p)])
-        wall = (time.perf_counter() - t0) / max(len(idxs), 1)
-        for i, (params, logs) in zip(idxs, outs):
-            rows[i] = _row(task, scenarios[i], params, logs, driver="vmap",
-                           m=m, T=T, wall=wall)
-    return rows
+    # the shared cfg's aggregator/option fields are inert in lane mode (rule
+    # and fail-safe coefficient are per-lane data), but build it through
+    # _cell_cfg anyway so the two paths cannot drift
+    cfg = _cell_cfg(scs[0], m, T, V, kappa, j_cap, use_mlmc, delta)
+    switchers = [get_switcher(sc.switcher, m, seed=seed,
+                              **dict(sc.switcher_kwargs)) for sc in scs]
+    attacks = [(sc.attack, dict(sc.attack_kwargs)) for sc in scs]
+    aggregators = [_agg_spec(sc, delta) for sc in scs]
+    t0 = time.perf_counter()
+    outs = run_dynabro_scan_sweep(task.grad_fn, task.params0, make_opt(),
+                                  cfg, switchers, sampler, T, seed=seed,
+                                  chunk=chunk, attacks=attacks,
+                                  aggregators=aggregators)
+    jax.block_until_ready([l for p, _ in outs for l in jax.tree.leaves(p)])
+    wall = (time.perf_counter() - t0) / len(scs)
+    return [_row(task, sc, params, logs, driver="vmap", m=m, T=T, wall=wall)
+            for sc, (params, logs) in zip(scs, outs)]
 
 
 def format_table(rows: Sequence[Dict[str, Any]], value: str = "final",

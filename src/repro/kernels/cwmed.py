@@ -67,6 +67,20 @@ def cwtm_kernel(x_ref, o_ref, *, m: int, trim: int):
     o_ref[...] = acc / float(len(keep))
 
 
+def cwtm_masked_kernel(x_ref, t_ref, o_ref, *, m: int):
+    """Trimmed mean with a *data* trim count (the uniform theta path of
+    ``core.agg_engine``): same bitonic sort, but the kept band is selected by
+    per-row masks against the trim scalar instead of static slicing, so one
+    compiled kernel serves every trim value."""
+    rows = _sorted_rows(x_ref, m)
+    trim = t_ref[0]
+    acc = jnp.zeros_like(rows[0])
+    for i in range(m):
+        keep = jnp.logical_and(i >= trim, i < m - trim)
+        acc = acc + jnp.where(keep, rows[i], 0.0)
+    o_ref[...] = acc / (m - 2 * trim).astype(jnp.float32)
+
+
 def _call(kernel, x, tile_d: int, interpret: bool):
     m, d = x.shape
     dp = -(-d // tile_d) * tile_d
@@ -95,3 +109,27 @@ def cwtm(x: jax.Array, trim: int, *, tile_d: int = 2048,
     m = x.shape[0]
     trim = min(trim, (m - 1) // 2)
     return _call(functools.partial(cwtm_kernel, m=m, trim=trim), x, tile_d, interpret)
+
+
+def cwtm_masked(x: jax.Array, trim: jax.Array, *, tile_d: int = 2048,
+                interpret: bool = False) -> jax.Array:
+    """Trimmed mean with a traced trim scalar. x: (m, d) -> (d,) float32.
+
+    ``trim`` rides along as a (1,) int32 operand every grid step reads whole
+    (scalars belong in SMEM on real TPUs; a rank-1 int block is the
+    interpret-mode-portable equivalent this CPU-validated repo can test)."""
+    m, d = x.shape
+    trim = jnp.clip(jnp.asarray(trim, jnp.int32), 0, (m - 1) // 2)
+    dp = -(-d // tile_d) * tile_d
+    if dp != d:
+        x = jnp.pad(x, ((0, 0), (0, dp - d)))
+    out = pl.pallas_call(
+        functools.partial(cwtm_masked_kernel, m=m),
+        grid=(dp // tile_d,),
+        in_specs=[pl.BlockSpec((m, tile_d), lambda i: (0, i)),
+                  pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((tile_d,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), jnp.float32),
+        interpret=interpret,
+    )(x, trim.reshape(1))
+    return out[:d]

@@ -35,6 +35,13 @@ def cwtm_op(x: jax.Array, trim: int, tile_d: int = 2048) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("tile_d",))
+def cwtm_masked_op(x: jax.Array, trim: jax.Array, tile_d: int = 2048) -> jax.Array:
+    """``cwtm_op`` with the trim count as *data* (traced int32 scalar) — the
+    uniform theta path of ``core.agg_engine`` (DESIGN.md §4)."""
+    return _cwmed_mod.cwtm_masked(x, trim, tile_d=tile_d, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d",))
 def pairwise_sqdist_op(x: jax.Array, tile_d: int = 4096) -> jax.Array:
     return _pairwise_mod.pairwise_sqdist(x, tile_d=tile_d, interpret=_interpret())
 

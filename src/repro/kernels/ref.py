@@ -9,13 +9,19 @@ def cwmed_ref(x: jnp.ndarray) -> jnp.ndarray:
     return jnp.median(x.astype(jnp.float32), axis=0)
 
 
-def cwtm_ref(x: jnp.ndarray, trim: int) -> jnp.ndarray:
-    """x: (m, d) -> (d,) trimmed mean dropping `trim` lowest/highest."""
+def cwtm_ref(x: jnp.ndarray, trim) -> jnp.ndarray:
+    """x: (m, d) -> (d,) trimmed mean dropping `trim` lowest/highest.
+
+    ``trim`` may be a Python int or a traced int32 scalar (the uniform
+    theta path of ``core.agg_engine``): one masked sorted-sum form serves
+    both, so static and traced calls are bitwise identical by construction
+    — a sliced ``xs[trim:m-trim].mean(0)`` would reduce over a different
+    tree shape and drift at ULP level."""
     m = x.shape[0]
     xs = jnp.sort(x.astype(jnp.float32), axis=0)
-    if trim == 0:
-        return xs.mean(0)
-    return xs[trim:m - trim].mean(0)
+    i = jnp.arange(m)[:, None]
+    keep = ((i >= trim) & (i < m - trim)).astype(jnp.float32)
+    return (xs * keep).sum(0) / jnp.asarray(m - 2 * trim, jnp.float32)
 
 
 def pairwise_sqdist_ref(x: jnp.ndarray) -> jnp.ndarray:

@@ -4,11 +4,19 @@ For every registry rule (plus the nnm+ composites): the matrix and tree
 conventions agree, and the ``ref`` (pure jnp) and ``pallas`` (interpret-mode
 kernels on CPU) backends agree within 1e-5 — on randomized (m, d) matrices
 and on a model-shaped gradient pytree.
+
+The uniform-theta layer (DESIGN.md §4) is property-tested at the bottom:
+for every rule, random worker stacks and random hyperparameters,
+``agg_switch`` under the traced ``(stacked, n, theta)`` signature matches
+``get_aggregator(name)(...)`` **bitwise** on the ref backend (the class
+rules run the identical masked cores) and within kernel tolerance on
+pallas (the traced-trim kernel masks where the static one slices).
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hyp import given, settings, st  # hypothesis, or offline fallback
 
 from repro.core import agg_engine as E
 from repro.core.aggregators import MFM, get_aggregator
@@ -72,7 +80,10 @@ def test_ref_vs_pallas_model_tree(name):
 def test_matrix_vs_tree_per_backend(name, backend):
     """The matrix convention is the tree convention on one leaf; a split tree
     must reproduce it (global geometry from summed per-leaf distances)."""
-    x = _mk(9, 24, seed=hash(name) % 1000)
+    # deterministic per-name seed — hash() is salted per interpreter, which
+    # made this test flaky across runs (a few seeds flip Krum's discrete
+    # selection past the tolerance)
+    x = _mk(9, 24, seed=sum(map(ord, name)) % 1000)
     agg = get_aggregator(name, delta=0.25, backend=backend)
     flat = np.asarray(agg(x))
     tree = {"a": x[:, :10].reshape(9, 2, 5), "b": x[:, 10:]}
@@ -159,3 +170,132 @@ def test_no_full_matrix_materialization():
     finally:
         jnp.concatenate = orig
     assert not any(s[-1] == total for s in seen if len(s) == 2), seen
+
+
+# ------------------------------------------------- uniform theta dispatch
+#
+# DESIGN.md §4: every rule under the traced (stacked, n, theta) signature.
+
+UNIFORM_RULES = ["mean", "cwmed", "cwtm", "krum", "geomed", "mfm",
+                 "nnm+cwmed", "nnm+krum", "nnm+geomed"]
+# deltas clear of ⌈δm⌉ integer boundaries: the class path ceils in f64, the
+# traced path in (nudged) f32 — equal counts, hence bitwise parity, need
+# δ·m not within ~1e-5 of an integer, which every realistic δ satisfies
+SAFE_DELTAS = [0.1, 0.2, 0.25, 0.3, 0.37, 0.45]
+
+
+def _rule_kwargs(name, delta, multi, iters, tau, m):
+    """Random-hyperparameter kwargs restricted to the slots ``name`` takes."""
+    pool = {"delta": delta, "multi": min(multi, max(m - 4, 1)),
+            "iters": iters, "tau": tau}
+    return {p: pool[p] for p in E.agg_param_names(name) if p in pool}
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(5, 12), st.integers(2, 24),
+       st.sampled_from(SAFE_DELTAS), st.integers(1, 4), st.integers(1, 8),
+       st.floats(5.0, 80.0), st.integers(0, 10_000))
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("name", UNIFORM_RULES)
+def test_uniform_theta_matches_class_rule(name, backend, m, d, delta, multi,
+                                          iters, tau, seed):
+    """agg_switch(agg_id, stacked, n, theta) == get_aggregator(name)(...):
+    bitwise on ref, within kernel tolerance on pallas — random stacks and
+    random hyperparameters, two-leaf trees (global geometry exercised)."""
+    rng = np.random.default_rng(seed)
+    tree = {"a": jnp.asarray(rng.normal(size=(m, d)).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(size=(m, 3, 2)).astype(np.float32))}
+    kw = _rule_kwargs(name, delta, multi, iters, tau, m)
+    theta = jnp.asarray(E.agg_theta(name, kw))
+    apply_fn = E.agg_switch((name,), backend=backend)
+    got = apply_fn(jnp.asarray(0, jnp.int32), tree, 4, theta)
+    want = get_aggregator(name, backend=backend, **kw).tree(tree)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        if backend == "ref":
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                          err_msg=f"{name} {kw}")
+        else:
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=f"{name} {kw}")
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_agg_switch_multi_branch_dispatch(backend):
+    """A 4-branch agg_switch routes each lane id to its own rule — every
+    branch compared against the direct uniform form."""
+    names = ("cwmed", "cwtm", "krum", "mfm")
+    apply_fn = E.agg_switch(names, backend=backend)
+    rng = np.random.default_rng(7)
+    tree = {"w": jnp.asarray(rng.normal(size=(9, 11)).astype(np.float32))}
+    for i, nm in enumerate(names):
+        kw = {"tau": 40.0} if nm == "mfm" else {}
+        theta = jnp.asarray(E.agg_theta(nm, kw))
+        got = apply_fn(jnp.asarray(i, jnp.int32), tree, 2, theta)
+        want = E.uniform_aggregator(nm, backend=backend)(tree, 2, theta)
+        np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(want["w"]),
+                                   rtol=1e-6, atol=1e-7, err_msg=nm)
+
+
+def test_uniform_mfm_nan_sentinel_auto_tau():
+    """NaN in the tau slot + an MLMCConfig derives the Option-2 threshold
+    2CV/√n — equal to the class rule at the explicitly-computed tau."""
+    from repro.core.mlmc import MLMCConfig
+
+    mlmc = MLMCConfig(T=64, m=8, V=3.0, option=2)
+    rng = np.random.default_rng(3)
+    tree = {"w": jnp.asarray(rng.normal(size=(8, 9)).astype(np.float32))}
+    fn = E.uniform_aggregator("mfm", backend="ref", mlmc=mlmc)
+    for n in (1, 4, 16):
+        got = fn(tree, n, jnp.asarray(E.agg_theta("mfm", {})))  # tau=None
+        want = MFM(backend="ref").tree(tree, tau=mlmc.mfm_tau(n))
+        np.testing.assert_array_equal(np.asarray(got["w"]),
+                                      np.asarray(want["w"]))
+
+
+def test_agg_theta_validation():
+    th = E.agg_theta("cwtm", {"delta": 0.4})
+    assert th.shape == (E.N_AGG_PARAMS,) and th[0] == np.float32(0.4)
+    assert np.isnan(E.agg_theta("mfm", {})[0])  # tau=None -> NaN sentinel
+    # delta is tolerated (and discarded) for rules without a delta slot —
+    # get_aggregator's universal delta parameter ignores it there too, and
+    # the lane path must not reject a spec the per-cell path runs
+    np.testing.assert_array_equal(E.agg_theta("cwmed", {"delta": 0.3}),
+                                  E.agg_theta("cwmed", {}))
+    with pytest.raises(TypeError, match="unknown"):
+        E.agg_theta("cwmed", {"trim": 2})  # anything else still raises
+    with pytest.raises(TypeError, match="does not accept None"):
+        E.agg_theta("cwtm", {"delta": None})
+    with pytest.raises(ValueError, match="GEOMED_MAX_ITERS"):
+        E.agg_theta("geomed", {"iters": E.GEOMED_MAX_ITERS + 1})
+    with pytest.raises(ValueError, match="unknown aggregator"):
+        E.agg_theta("nope", {})
+    # composite slots: nnm's delta is shared with (not duplicated by) the base
+    assert E.agg_param_names("nnm+cwtm") == ("delta",)
+    assert E.agg_param_names("nnm+geomed") == ("delta", "iters", "eps")
+    # the NaN auto-tau sentinel is plain mfm only: the per-cell driver has no
+    # auto-tau path for nnm+mfm, so the lane path must reject what the
+    # reference driver would crash on (explicit tau works on both)
+    with pytest.raises(TypeError, match="does not accept None"):
+        E.agg_theta("nnm+mfm", {})
+    assert E.agg_theta("nnm+mfm", {"delta": 0.3, "tau": 40.0})[1] == \
+        np.float32(40.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from(SAFE_DELTAS), st.integers(3, 33))
+def test_traced_trim_count_matches_host(delta, m):
+    assert int(E.traced_trim_count(jnp.float32(delta), m)) == \
+        E.trim_count(delta, m)
+
+
+@pytest.mark.parametrize("trim", [0, 1, 3])
+def test_cwtm_masked_kernel_matches_static(trim):
+    """The traced-trim pallas kernel agrees with the statically-sliced one
+    (masked summation may differ at ULP level, hence allclose)."""
+    from repro.kernels.ops import cwtm_masked_op, cwtm_op
+
+    x = _mk(8, 130, seed=trim)
+    got = np.asarray(cwtm_masked_op(x, jnp.asarray(trim, jnp.int32)))
+    want = np.asarray(cwtm_op(x, trim))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)

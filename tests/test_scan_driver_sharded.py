@@ -143,6 +143,7 @@ def _run(body: str):
     return r.stdout
 
 
+@pytest.mark.slow
 def test_sharded_multi_device_parity():
     """m=8 workers across 2/4/8 devices: bitwise parity with the unsharded
     driver, including the omniscient attacks whose statistics span the whole
@@ -165,6 +166,7 @@ def test_sharded_multi_device_parity():
     """)
 
 
+@pytest.mark.slow
 def test_sharded_multi_device_momentum_and_chunking():
     _run("""
         cfg = DynaBROConfig(mlmc=MLMCConfig(T=T, m=m, V=3.0, kappa=1.0),

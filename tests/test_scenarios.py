@@ -133,9 +133,11 @@ def test_attack_lane_sweep_matches_per_cell_scan_exactly():
     assert saw_beyond_cap  # the exact-log check covered beyond-cap costs
 
 
-def test_vmapped_matrix_single_dispatch_per_aggregator(monkeypatch):
-    """A 4-attack × 4-switcher grid runs as ONE sweep call per aggregator
-    (not one per attack group) with every cell as a lane."""
+def test_vmapped_matrix_single_dispatch_whole_grid(monkeypatch):
+    """The tentpole contract: a 4-attack × 4-switcher × 4-aggregator grid
+    runs as ONE sweep call for the WHOLE grid — every cell a lane, the
+    aggregator axis dispatched per lane like the attack axis (not one call
+    per aggregator group)."""
     import repro.core.scenarios as scen
 
     lane_counts = []
@@ -149,10 +151,106 @@ def test_vmapped_matrix_single_dispatch_per_aggregator(monkeypatch):
     grid = scenario_grid(
         ["sign_flip", ("ipm", {"eps": 0.3}), "alie", "none"],
         [("periodic", {"n_byz": 3, "K": K}) for K in (5, 8, 13, 20)],
-        ["cwmed", "cwtm"])
+        ["cwmed", ("cwtm", {"delta": 0.4}), "krum", "mfm"])
     rows = run_matrix(TASK, grid, m=M, T=16, V=3.0, j_cap=2, driver="vmap")
-    assert lane_counts == [16, 16]
+    assert lane_counts == [64]
     assert all(np.isfinite(r["final"]) for r in rows)
+
+
+def test_agg_lane_sweep_matches_per_cell_scan_exactly():
+    """Aggregator-axis analog of the attack-lane contract: a 16-lane grid
+    mixing aggregation rules (incl. MFM, whose Option-2 fail-safe constant
+    differs, an nnm+ composite, and CWTM at two deltas — the traced
+    hyperparameter axis) with mixed attacks matches per-cell
+    ``run_dynabro_scan`` lane for lane — exact round logs, finals within
+    the parity tolerance."""
+    import dataclasses
+
+    from repro.optim.optimizers import sgd
+
+    aggs = [("cwmed", {}), ("cwtm", {"delta": 0.45}), ("cwtm", {"delta": 0.2}),
+            ("mfm", {}), ("krum", {"delta": 0.3}), ("nnm+cwmed", {"delta": 0.3}),
+            ("geomed", {"iters": 6}), ("cwtm", {"delta": 0.45})]
+    attacks = ["sign_flip", ("ipm", {"eps": 0.3})]
+    lanes = [(a, g) for a in attacks for g in aggs]
+    sampler = TASK.make_sampler(M)
+    switchers = [get_switcher("periodic", M, n_byz=3, K=7, seed=1)
+                 for _ in lanes]
+    outs = run_dynabro_scan_sweep(
+        TASK.grad_fn, TASK.params0, sgd(2e-2), _cfg_for("sign_flip"),
+        switchers, sampler, 32, seed=1, attacks=[a for a, _ in lanes],
+        aggregators=[g for _, g in lanes])
+    assert len(outs) == len(lanes) == 16
+    for (attack, (gname, gkw)), (p, logs) in zip(lanes, outs):
+        cfg = _cfg_for(attack, agg=gname)
+        cfg = dataclasses.replace(
+            cfg, delta=gkw.get("delta", cfg.delta),
+            aggregator_kwargs=dict(gkw) or None)
+        ref_p, ref_logs, _ = run_dynabro_scan(
+            TASK.grad_fn, TASK.params0, sgd(2e-2), cfg,
+            get_switcher("periodic", M, n_byz=3, K=7, seed=1), sampler, 32,
+            seed=1)
+        assert logs == ref_logs, f"lane {attack} {gname}{gkw}"
+        np.testing.assert_allclose(np.asarray(p["x"]), np.asarray(ref_p["x"]),
+                                   rtol=1e-6, atol=1e-7,
+                                   err_msg=f"lane {attack} {gname}{gkw}")
+
+
+def test_agg_hyperparameter_axis_free_lanes():
+    """Grids varying ONLY an aggregator hyperparameter (CWTM at three δ) are
+    lanes of one dispatch, produce distinct results, and keep their own
+    pivot lines via aggregator_label."""
+    grid = scenario_grid(
+        ["sign_flip"], [("static", {"n_byz": 3})],
+        [("cwtm", {"delta": d}) for d in (0.1, 0.25, 0.4)])
+    rows = run_matrix(TASK, grid, m=M, T=24, V=3.0, j_cap=2, driver="vmap")
+    assert len({r["aggregator_label"] for r in rows}) == 3
+    assert len({r["final"] for r in rows}) > 1  # the deltas actually matter
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        table = format_table(rows, row_key="aggregator")
+    assert "cwtm(delta=0.1)" in table and "cwtm(delta=0.4)" in table
+    # and each lane matches its per-cell scan run
+    for sc, rv in zip(grid, rows):
+        rs = run_matrix(TASK, [sc], m=M, T=24, V=3.0, j_cap=2,
+                        driver="scan")[0]
+        np.testing.assert_allclose(rv["final"], rs["final"], rtol=1e-6,
+                                   atol=1e-7)
+        assert rv["cost"] == rs["cost"]
+        assert rv["failsafe_trips"] == rs["failsafe_trips"]
+
+
+def test_sweep_rejects_mismatched_agg_lane_scan_fn():
+    """Prebuilt-scan_fn validation on the aggregator lane axis, both
+    directions (mirrors the attack-axis checks)."""
+    from repro.core.robust_train import make_dynabro_scan_fn
+    from repro.optim.optimizers import sgd
+
+    cfg = _cfg_for("sign_flip", T=8, j_cap=1)
+    sws = [get_switcher("static", M, n_byz=2) for _ in range(2)]
+    wrong = make_dynabro_scan_fn(TASK.grad_fn, cfg, sgd(2e-2),
+                                 lane_aggregators=("cwtm", "cwmed"))
+    with pytest.raises(ValueError, match="lane_aggregators"):
+        run_dynabro_scan_sweep(
+            TASK.grad_fn, TASK.params0, sgd(2e-2), cfg, sws,
+            TASK.make_sampler(M), 8, scan_fn=wrong,
+            aggregators=["cwmed", "cwtm"])
+    # lane-built scan_fn but no aggregators passed
+    with pytest.raises(ValueError, match="no\\s+aggregators"):
+        run_dynabro_scan_sweep(
+            TASK.grad_fn, TASK.params0, sgd(2e-2), cfg, sws,
+            TASK.make_sampler(M), 8, scan_fn=wrong)
+    # plain scan_fn but aggregators passed
+    plain = make_dynabro_scan_fn(TASK.grad_fn, cfg, sgd(2e-2))
+    with pytest.raises(ValueError, match="lane_aggregators"):
+        run_dynabro_scan_sweep(
+            TASK.grad_fn, TASK.params0, sgd(2e-2), cfg, sws,
+            TASK.make_sampler(M), 8, scan_fn=plain,
+            aggregators=["cwmed", "cwtm"])
+    # and the per-cell driver rejects an aggregator-lane-built fn
+    with pytest.raises(ValueError, match="run_dynabro_scan_sweep"):
+        run_dynabro_scan(TASK.grad_fn, TASK.params0, sgd(2e-2), cfg, sws[0],
+                         TASK.make_sampler(M), 8, scan_fn=wrong)
 
 
 def test_format_table_kwarg_columns_not_collapsed():

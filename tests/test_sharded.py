@@ -5,6 +5,12 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+# every test here spawns an 8-device subprocess that recompiles Mode B from
+# scratch — CI runs them in the dedicated slow-parity job, not the tier-1 lane
+pytestmark = pytest.mark.slow
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
