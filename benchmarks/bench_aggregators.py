@@ -1,9 +1,16 @@
-"""Aggregator micro-benchmarks: Pallas kernels (interpret mode on CPU;
-compiled on TPU) vs the pure-jnp references, plus the full engine rules on a
-model-sized gradient stack, per backend. On-CPU numbers are correctness-path
-timings; the derived column reports bytes processed per call. Each ref/pallas
-pair is asserted numerically equal before it is timed, so a kernel regression
-fails the benchmark instead of silently reporting a fast wrong answer."""
+"""Aggregator micro-benchmarks: the engine's size-dispatched path (what the
+driver actually runs — ``agg_engine.dispatch_backend`` picks pallas or ref
+from the bytes moved and the kernel kind) vs the forced pure-jnp references,
+the fused one-pass kernel vs a split three-dispatch pipeline, and the full
+engine rules on a model-sized gradient stack, per backend. On-CPU numbers
+are correctness-path timings (kernels run in interpret mode); the derived
+column reports the bytes-moved model per call — ``MB_in``/``MB_out`` are the
+ideal once-through traffic, ``MB_moved`` is what the implementation actually
+streams (the fused one-pass reads the gradient stack once; the split
+pipeline re-reads it per stage), and ``benchmarks/roofline.py --check``
+gates kernel rows' achieved-vs-ideal ratio. Each contender/ref pair is
+asserted numerically equal before it is timed, so a kernel regression fails
+the benchmark instead of silently reporting a fast wrong answer."""
 from __future__ import annotations
 
 import jax
@@ -11,13 +18,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks._clf import timed
+from repro.core import agg_engine as E
 from repro.core.aggregators import get_aggregator
-from repro.kernels.ops import (cwmed_op, cwtm_op, pairwise_sqdist_op,
-                               weighted_combine_op)
+from repro.kernels.ops import fused_op
 from repro.kernels.ref import (cwmed_ref, cwtm_ref, pairwise_sqdist_ref,
                                weighted_combine_ref)
 
 TREE_RULES = ("mean", "cwmed", "cwtm", "krum", "geomed", "nnm+cwmed")
+TRIM = 4
 
 
 def _assert_close(a, b, name, tol=2e-4):
@@ -25,6 +33,17 @@ def _assert_close(a, b, name, tol=2e-4):
     scale = np.abs(b).max() + 1e-9
     err = np.abs(a - b).max() / scale
     assert err < tol, f"ref/pallas parity broke for {name}: rel err {err:.2e}"
+
+
+def _mb(*shapes):
+    return sum(4 * int(np.prod(s)) for s in shapes) / 1e6
+
+
+def _best(fn, *args, rounds=3, iters=5):
+    """Best-of-rounds us/call: interpret-mode pallas and ~ms-scale jnp calls
+    both jitter ±30% on a busy host; the min over a few timed rounds is the
+    stable statistic the vs_* ratio gates need."""
+    return min(timed(fn, *args, iters=iters)[1] for _ in range(rounds))
 
 
 def _model_stack(m):
@@ -43,26 +62,94 @@ def main(fast: bool = False):
     out = []
     m, d = 16, (1 << 16 if fast else 1 << 20)
     x = jax.random.normal(jax.random.PRNGKey(0), (m, d), jnp.float32)
-    w = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(5), (1, m)))
-    mb = m * d * 4 / 1e6
-    kernel_pairs = [
-        ("cwmed", lambda: cwmed_op(x), lambda: jax.jit(cwmed_ref)(x)),
-        ("cwtm", lambda: cwtm_op(x, 4), lambda: jax.jit(lambda a: cwtm_ref(a, 4))(x)),
-        ("pairwise", lambda: pairwise_sqdist_op(x),
-         lambda: jax.jit(pairwise_sqdist_ref)(x)),
-        ("combine", lambda: weighted_combine_op(x, w),
-         lambda: jax.jit(weighted_combine_ref)(x, w)),
+    w1 = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(5), (1, m)))
+    nbytes = 4 * x.size
+    # engine primitives: the auto-dispatched path vs the forced reference
+    prim = [
+        ("cwmed", "sort",
+         jax.jit(lambda a: E.cw_median(a, backend="auto")),
+         jax.jit(lambda a: E.cw_median(a, backend="ref")),
+         _mb((m, d)), _mb((d,))),
+        ("cwtm", "sort",
+         jax.jit(lambda a: E.cw_trimmed_mean(a, TRIM, backend="auto")),
+         jax.jit(lambda a: E.cw_trimmed_mean(a, TRIM, backend="ref")),
+         _mb((m, d)), _mb((d,))),
+        ("pairwise", "matmul",
+         jax.jit(lambda a: E.pairwise_sqdist(a, backend="auto")),
+         jax.jit(lambda a: E.pairwise_sqdist(a, backend="ref")),
+         _mb((m, d)), _mb((m, m))),
+        ("combine", "matmul",
+         jax.jit(lambda a, b: E.weighted_combine(a, b, backend="auto")),
+         jax.jit(lambda a, b: E.weighted_combine(a, b, backend="ref")),
+         _mb((m, d), (1, m)), _mb((1, d))),
     ]
-    for name, kfn, rfn in kernel_pairs:
-        _assert_close(kfn(), rfn(), name)
-        _, kus = timed(kfn, iters=2)
-        _, rus = timed(rfn, iters=5)
-        out.append(f"aggregators/{name}_kernel,{kus:.0f},MB_in={mb:.1f}")
-        out.append(f"aggregators/{name}_ref,{rus:.0f},MB_in={mb:.1f}")
+    sep_us = {}
+    for name, kind, kfn, rfn, mb_in, mb_out in prim:
+        args = (x, w1) if name == "combine" else (x,)
+        _assert_close(kfn(*args), rfn(*args), name)
+        iters = 3 if kind == "sort" else 20
+        kus = _best(kfn, *args, iters=iters)
+        rus = _best(rfn, *args, iters=iters)
+        sep_us[name] = kus
+        impl = E.dispatch_backend("auto", kind=kind, nbytes=nbytes)
+        out.append(f"aggregators/{name}_kernel,{kus:.0f},"
+                   f"MB_in={mb_in:.2f};MB_out={mb_out:.2f};"
+                   f"MB_moved={mb_in + mb_out:.2f};impl={impl};"
+                   f"vs_ref={rus / kus:.2f}x")
+        out.append(f"aggregators/{name}_ref,{rus:.0f},MB_in={mb_in:.2f}")
+    # fused reductions vs the (now fused-backed) separate dispatched path
+    fused_single = [
+        ("fused_cwmed", jax.jit(lambda a: fused_op(a, reduce="med")),
+         cwmed_ref(x), "cwmed"),
+        ("fused_cwtm", jax.jit(lambda a: fused_op(a, reduce="tm", trim=TRIM)),
+         cwtm_ref(x, TRIM), "cwtm"),
+    ]
+    for name, fn, ref, sep in fused_single:
+        _assert_close(fn(x)["reduce"], ref, name)
+        us = _best(fn, x, iters=3)
+        out.append(f"aggregators/{name}_kernel,{us:.0f},"
+                   f"MB_in={_mb((m, d)):.2f};MB_out={_mb((d,)):.2f};"
+                   f"MB_moved={_mb((m, d), (d,)):.2f};impl=pallas;"
+                   f"vs_sep={sep_us[sep] / us:.2f}x")
+    # the full one-pass round (combine + trimmed reduce + pairwise in ONE
+    # dispatch, x streamed once) vs the same outputs as three kernel calls
+    wm = jax.random.uniform(jax.random.PRNGKey(6), (m, m), jnp.float32) + 0.1
+    wm = wm / wm.sum(axis=1, keepdims=True)
+    one = jax.jit(lambda a, b: fused_op(a, b, reduce="tm", trim=TRIM,
+                                        pairwise=True, combine=True))
+
+    def _split_fn(a, b):
+        y = fused_op(a, b, combine=True)["combine"]
+        red = fused_op(y, reduce="tm", trim=TRIM)["reduce"]
+        pw = fused_op(a, pairwise=True)["pairwise"]
+        return {"combine": y, "reduce": red, "pairwise": pw}
+
+    split = jax.jit(_split_fn)
+    got, want = one(x, wm), split(x, wm)
+    mixed = weighted_combine_ref(x, wm)
+    _assert_close(got["combine"], mixed, "fused_onepass_combine")
+    _assert_close(got["reduce"], cwtm_ref(mixed, TRIM), "fused_onepass_reduce")
+    _assert_close(got["pairwise"], pairwise_sqdist_ref(x), "fused_onepass_pw")
+    for key in ("combine", "reduce", "pairwise"):
+        _assert_close(got[key], want[key], f"onepass_vs_split_{key}")
+    one_us = _best(one, x, wm, iters=2)
+    split_us = _best(split, x, wm, iters=2)
+    mb_in = _mb((m, d), (m, m))
+    mb_out = _mb((m, d), (d,), (m, m))
+    # split traffic: x read by combine AND pairwise, w once, y written by
+    # combine then re-read by the reduce stage, plus the shared outputs
+    mb_split = _mb((m, d), (m, d), (m, m), (m, d)) + mb_out
+    out.append(f"aggregators/fused_onepass_kernel,{one_us:.0f},"
+               f"MB_in={mb_in:.2f};MB_out={mb_out:.2f};"
+               f"MB_moved={mb_in + mb_out:.2f};impl=pallas;"
+               f"vs_split={split_us / one_us:.2f}x")
+    out.append(f"aggregators/fused_onepass_split,{split_us:.0f},"
+               f"MB_in={mb_in:.2f};MB_out={mb_out:.2f};"
+               f"MB_moved={mb_split:.2f}")
     # engine rules on a model-sized gradient stack, per backend
     mt = 4 if fast else 16
     tree = _model_stack(mt)
-    nbytes = sum(l.size * 4 for l in jax.tree.leaves(tree)) / 1e6
+    tree_mb = sum(l.size * 4 for l in jax.tree.leaves(tree)) / 1e6
     for name in TREE_RULES:
         results = {}
         for backend in ("ref",) if fast else ("ref", "pallas"):
@@ -70,7 +157,7 @@ def main(fast: bool = False):
             f = jax.jit(agg.tree)
             results[backend], us = timed(f, tree, iters=2)
             out.append(f"aggregators/tree_{name}_{backend},{us:.0f},"
-                       f"MB_in={nbytes:.0f};m={mt}")
+                       f"MB_in={tree_mb:.0f};m={mt}")
         if "pallas" in results:
             for rl, pl in zip(jax.tree.leaves(results["ref"]),
                               jax.tree.leaves(results["pallas"])):

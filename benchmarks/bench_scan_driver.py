@@ -28,11 +28,15 @@ Two more row families feed the CI perf gates (benchmarks/check_regression.py):
   traced-hyperparameter lanes this PR makes expressible (under the old
   name-keyed grouping, delta was global and the four cells NEEDED four
   dispatches), and a shape whose ``agg_switch`` collapses to one branch so
-  the gated number isolates dispatch amortization. Grids mixing *distinct*
-  rules pay the execute-all-branches select per lane under vmap (the level
-  dispatch is paid once per round, ``agg_engine._per_level``) and land near
-  break-even against the group loop on dev CPU at T=64 — correctness-locked
-  in tests/test_scenarios.py, deliberately not perf-gated.
+  the gated number isolates dispatch amortization.
+* ``sweep_agg_loop`` / ``sweep_vmap_mixed_aggs`` — a 4-rule × 4-switcher
+  grid mixing *distinct* aggregation rules (CWMed / CWTM / Krum /
+  nnm+cwmed) through the per-cell compiled driver vs one grouped sweep
+  call: branch-homogeneous lane grouping (DESIGN.md §7) splits the grid
+  into one single-rule sub-dispatch per distinct rule, so no lane pays the
+  vmapped ``lax.switch``'s execute-all-branches select that used to leave
+  mixed grids near break-even (correctness-locked but not perf-gated
+  before the grouping landed); the grouped row must hold a ≥1.5x speedup.
 """
 from __future__ import annotations
 
@@ -60,6 +64,11 @@ ATTACK_KS = (5, 10, 20, 50)  # the switcher column of the attack grid
 # the contender's lane thetas agree exactly; see module docstring)
 AGG_SPECS = (("cwtm", {"delta": 0.1}), ("cwtm", {"delta": 0.2}),
              ("cwtm", {"delta": 0.3}), ("cwtm", {"delta": 0.45}))
+# the mixed-rule grid: four DISTINCT rules (deltas explicit so the per-cell
+# baseline cfgs and the grouped sweep's lane thetas agree exactly — a bare
+# krum lane would default delta=0.25 while the baseline cfg carries 0.45)
+AGG_MIX_SPECS = (("cwmed", {}), ("cwtm", {"delta": 0.3}),
+                 ("krum", {"delta": 0.45}), ("nnm+cwmed", {"delta": 0.45}))
 
 
 def _time(fn, iters: int):
@@ -285,6 +294,65 @@ def run_agg_sweep(T: int = 64, m: int = 9, iters: int = 3, seed: int = 0):
     return _time(t_loop, iters), _time(t_lanes, iters)
 
 
+def run_mixed_agg_sweep(T: int = 64, m: int = 9, iters: int = 3,
+                        seed: int = 0):
+    """(us_cell_loop, us_grouped) for the 4-rule × 4-switcher MIXED-rule
+    grid — the shape the old aggregator grouping could not lane-batch.
+
+    The baseline runs each of the 16 cells through the per-cell compiled
+    driver (4 prebuilt plain scan_fns, one per rule — steady state). The
+    contender runs the whole grid through ONE ``run_dynabro_scan_sweep``
+    call with a prebuilt ``{rule: scan_fn}`` mapping: branch-homogeneous
+    lane grouping (DESIGN.md §7) splits it into 4 single-rule vmapped
+    dispatches, so no lane pays the execute-all-branches ``lax.switch``.
+    Exact round logs + sweep-tolerance finals asserted before timing."""
+    task, cfg, sampler, opt = _setup(T, m)
+    cells = [(n, dict(kw), K) for n, kw in AGG_MIX_SPECS for K in ATTACK_KS]
+    cell_cfgs = {n: dataclasses.replace(cfg, aggregator=n,
+                                        delta=kw.get("delta", cfg.delta),
+                                        aggregator_kwargs=dict(kw) or None)
+                 for n, kw in AGG_MIX_SPECS}
+    cell_fns = {n: make_dynabro_scan_fn(task.grad_fn, c, opt)
+                for n, c in cell_cfgs.items()}
+    group_fns = {n: make_dynabro_scan_fn(task.grad_fn, cfg, opt,
+                                         lane_aggregators=(n,))
+                 for n, _ in AGG_MIX_SPECS}
+
+    def sws(K):
+        return get_switcher("periodic", m, n_byz=4, K=K, seed=seed)
+
+    def cell_loop():
+        return [run_dynabro_scan(task.grad_fn, task.params0, opt,
+                                 cell_cfgs[n], sws(K), sampler, T, seed=seed,
+                                 scan_fn=cell_fns[n])
+                for n, _, K in cells]
+
+    def grouped():
+        return run_dynabro_scan_sweep(
+            task.grad_fn, task.params0, opt, cfg,
+            [sws(K) for _, _, K in cells], sampler, T, seed=seed,
+            scan_fn=group_fns, aggregators=[(n, kw) for n, kw, _ in cells])
+
+    per_cell = cell_loop()
+    per_lane = grouped()
+    assert len(per_cell) == len(per_lane) == 16
+    for (p_ref, logs_ref, _), (p_lane, logs_lane) in zip(per_cell, per_lane):
+        assert logs_ref == logs_lane
+        np.testing.assert_allclose(np.asarray(p_ref["x"]),
+                                   np.asarray(p_lane["x"]),
+                                   rtol=1e-6, atol=1e-7)
+
+    def t_loop():
+        outs = cell_loop()
+        return (outs[-1][0],)
+
+    def t_grouped():
+        outs = grouped()
+        return (outs[-1][0],)
+
+    return _time(t_loop, iters), _time(t_grouped, iters)
+
+
 def main(fast: bool = False):
     iters = 2 if fast else 3
     rows = []
@@ -312,6 +380,10 @@ def main(fast: bool = False):
     rows.append(f"scan_driver/sweep_agg_loop_G{g},{us_agg_groups:.0f},")
     rows.append(f"scan_driver/sweep_vmap_aggs,{us_agg_lanes:.0f},"
                 f"speedup={us_agg_groups / us_agg_lanes:.1f}x")
+    us_cells, us_grouped = run_mixed_agg_sweep(iters=iters)
+    rows.append(f"scan_driver/sweep_agg_loop,{us_cells:.0f},")
+    rows.append(f"scan_driver/sweep_vmap_mixed_aggs,{us_grouped:.0f},"
+                f"speedup={us_cells / us_grouped:.1f}x")
     return rows
 
 

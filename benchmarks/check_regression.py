@@ -15,6 +15,7 @@ bound, with a message naming the row, the observed value and the threshold.
 from __future__ import annotations
 
 import json
+import os
 import sys
 
 # (row name, derived-field key, bound, direction). ">=": the observed value
@@ -32,6 +33,26 @@ GATES = [
     # whole 4x4x4 grid in ONE dispatch (aggregator axis = CWTM delta lanes)
     # vs one vmapped call per aggregator group (~2x dev)
     ("scan_driver/sweep_vmap_aggs", "speedup", 1.5, ">="),
+    # MIXED-rule 4-rule x 4-switcher grid: branch-homogeneous lane grouping
+    # (one vmapped dispatch per distinct rule) vs the per-cell compiled
+    # loop (~4x dev) — the grid shape that used to be break-even
+    ("scan_driver/sweep_vmap_mixed_aggs", "speedup", 1.5, ">="),
+    # size-dispatched engine primitives vs forced references. Sort-kernel
+    # rows dispatch to pallas and must keep a real win (~3.5-4.5x dev);
+    # matmul rows dispatch to ref below the TPU threshold, so their ratio
+    # is ~1.0x by construction and the bound only allows measurement noise
+    # (the old always-pallas rows lost 6-45x here).
+    ("aggregators/cwmed_kernel", "vs_ref", 1.5, ">="),
+    ("aggregators/cwtm_kernel", "vs_ref", 1.5, ">="),
+    ("aggregators/pairwise_kernel", "vs_ref", 0.8, ">="),
+    ("aggregators/combine_kernel", "vs_ref", 0.8, ">="),
+    # fused single-rule reductions vs the dispatched separate path (~1.0x —
+    # the separate path IS the fused kernel now; the gate pins the identity)
+    ("aggregators/fused_cwmed_kernel", "vs_sep", 0.8, ">="),
+    ("aggregators/fused_cwtm_kernel", "vs_sep", 0.8, ">="),
+    # combine + trimmed reduce + pairwise in ONE dispatch, gradient stack
+    # streamed once, vs the same outputs as three kernel calls (~2.5x dev)
+    ("aggregators/fused_onepass_kernel", "vs_split", 1.5, ">="),
 ]
 
 
@@ -69,6 +90,19 @@ def check(path: str) -> int:
         print(f"{verdict}: {name} {key}={val:g}x {want}")
         if not ok:
             failures += 1
+    # bytes-moved budget: every aggregators/*_kernel row must stream no more
+    # than its ideal once-through traffic (roofline.BYTES_TOL)
+    try:
+        from benchmarks.roofline import check_bytes, load_bench
+    except ImportError:  # invoked as a path, not a module
+        sys.path.insert(0, os.path.dirname(os.path.dirname(__file__)))
+        from benchmarks.roofline import check_bytes, load_bench
+    byte_fails = check_bytes(load_bench(path))
+    for msg in byte_fails:
+        print(f"FAIL: bytes-moved budget: {msg}")
+    failures += len(byte_fails)
+    if not byte_fails:
+        print("ok: bytes-moved budget (aggregators/*_kernel rows)")
     if failures:
         print(f"{failures} perf gate(s) failed")
     return 1 if failures else 0

@@ -11,7 +11,17 @@ already, so no division by chip count is applied to those; collective bytes
 are parsed per device from the HLO (ring (n-1)/n conventions, scan
 trip-weighted).
 
-  PYTHONPATH=src python -m benchmarks.roofline [--write-md]
+Also ingests the ``aggregators/*`` rows of a BENCH json (``--bench``): those
+rows carry a per-call bytes-moved model — ``MB_in``/``MB_out`` are the ideal
+once-through traffic for the rule, ``MB_moved`` is what the implementation
+actually streams (the fused one-pass kernel reads the gradient stack once;
+split pipelines re-read it per stage, 2–3x). The report shows achieved vs
+ideal bytes per rule plus the realized bandwidth, and ``--check`` fails (for
+CI) if any ``*_kernel`` row moves more than BYTES_TOL times its ideal —
+the budget that keeps the fused kernel honest about its one-pass claim.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--mesh M] [--csv]
+  PYTHONPATH=src python -m benchmarks.roofline --bench BENCH_cpu.json [--check]
 """
 from __future__ import annotations
 
@@ -23,6 +33,8 @@ import os
 PEAK_FLOPS = 197e12  # TPU v5e bf16
 HBM_BW = 819e9
 ICI_BW = 50e9
+# a *_kernel row may move at most this multiple of its ideal (MB_in+MB_out)
+BYTES_TOL = 1.01
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
 
@@ -41,7 +53,7 @@ def model_flops(rec) -> float:
     return 2.0 * n * toks
 
 
-def load(mesh_filter=None):
+def load(mesh_filter=None, bench=None):
     recs = []
     for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
         with open(p) as f:
@@ -49,12 +61,64 @@ def load(mesh_filter=None):
         if mesh_filter and r.get("mesh") != mesh_filter:
             continue
         recs.append(r)
+    if bench:
+        recs.extend(load_bench(bench))
     return recs
+
+
+def _parse_derived(derived):
+    """'MB_in=4.19;impl=pallas;vs_ref=3.6x' -> dict (floats where they parse,
+    trailing benchmark-convention 'x' stripped)."""
+    fields = {}
+    for part in (derived or "").split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            fields[k] = float(v.rstrip("x%"))
+        except ValueError:
+            fields[k] = v
+    return fields
+
+
+def load_bench(path):
+    """aggregators/* rows of a BENCH json as roofline records
+    (kind='agg_bench'); rows without a bytes model (MB_in) are skipped."""
+    with open(path) as f:
+        rows = json.load(f)["rows"]
+    recs = []
+    for row in rows:
+        name = row["name"]
+        if not name.startswith("aggregators/"):
+            continue
+        fields = _parse_derived(row.get("derived") or "")
+        if "MB_in" not in fields:
+            continue
+        us = row.get("us_per_call")
+        recs.append({"kind": "agg_bench", "rule": name.split("/", 1)[1],
+                     "us_per_call": float(us) if us else 0.0, **fields})
+    return recs
+
+
+def _analyze_agg(rec):
+    ideal = rec["MB_in"] + rec.get("MB_out", 0.0)
+    moved = rec.get("MB_moved", ideal)
+    us = rec["us_per_call"]
+    return {
+        "kind": "agg_bench", "rule": rec["rule"],
+        "us_per_call": us,
+        "mb_ideal": ideal, "mb_moved": moved,
+        "bytes_ratio": moved / ideal if ideal else 1.0,
+        "gb_per_s": moved / us * 1e6 / 1e3 if us else 0.0,
+        "impl": rec.get("impl", "?"),
+    }
 
 
 def analyze(rec):
     if rec.get("skipped"):
         return None
+    if rec.get("kind") == "agg_bench":
+        return _analyze_agg(rec)
     chips = 512 if rec["mesh"] == "2x16x16" else 256
     flops = rec.get("flops") or 0.0
     byts = rec.get("bytes_accessed") or 0.0
@@ -107,11 +171,55 @@ def table(recs, mesh):
     return "\n".join(out)
 
 
+def agg_table(recs):
+    rows = [analyze(r) for r in recs if r.get("kind") == "agg_bench"]
+    out = ["| rule | impl | us/call | ideal MB | moved MB | moved/ideal | GB/s |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['rule']} | {r['impl']} | {r['us_per_call']:.0f} | "
+            f"{r['mb_ideal']:.2f} | {r['mb_moved']:.2f} | "
+            f"{r['bytes_ratio']:.2f}x | {r['gb_per_s']:.2f} |")
+    return "\n".join(out)
+
+
+def check_bytes(recs, tol=BYTES_TOL):
+    """Failure strings for *_kernel agg rows moving more than tol× ideal."""
+    fails = []
+    for r in recs:
+        a = analyze(r)
+        if not a or a.get("kind") != "agg_bench":
+            continue
+        if a["rule"].endswith("_kernel") and a["bytes_ratio"] > tol:
+            fails.append(f"{a['rule']}: moves {a['mb_moved']:.2f}MB vs ideal "
+                         f"{a['mb_ideal']:.2f}MB ({a['bytes_ratio']:.2f}x > "
+                         f"{tol}x budget)")
+    return fails
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="16x16")
     ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--bench", default=None,
+                    help="BENCH json whose aggregators/* rows carry the "
+                         "bytes-moved model")
+    ap.add_argument("--check", action="store_true",
+                    help="fail if any *_kernel bench row exceeds the "
+                         "bytes-moved budget")
     args = ap.parse_args()
+    if args.bench:
+        recs = load_bench(args.bench)
+        print(agg_table(recs))
+        if args.check:
+            fails = check_bytes(recs)
+            for f in fails:
+                print(f"FAIL {f}")
+            if fails:
+                raise SystemExit(1)
+            print(f"bytes-moved budget OK ({len(recs)} rows, "
+                  f"tol {BYTES_TOL}x)")
+        return
     recs = load()
     if args.csv:
         print("name,us_per_call,derived")

@@ -10,7 +10,12 @@ GeoMed / NNM / MFM — decomposes into three primitives:
 
 Each primitive has two backends: ``ref`` (pure jnp) and ``pallas`` (the
 kernels under ``repro.kernels``, interpret-mode on CPU, compiled on TPU).
-``backend="auto"`` picks per platform: pallas on TPU, ref elsewhere.
+``backend="auto"`` dispatches per call site on platform, primitive kind and
+bytes moved (``dispatch_backend``): below ``PALLAS_MIN_BYTES`` the kernel
+launch overhead dominates and every call goes ref; above it, TPU always
+takes the kernels, while CPU takes them only for sort-based reduces (the
+bitonic network beats ``jnp.sort`` even interpreted — BENCH_cpu.json)
+and leaves matmul-shaped work to BLAS.
 
 The crucial consequence for gradient pytrees: only the ``(m, m)`` distance
 statistics are global.  Rules therefore *stream leaf by leaf* through the
@@ -51,6 +56,38 @@ def resolve_backend(backend: str) -> str:
     return backend
 
 
+# Below this many bytes of worker stack, one kernel dispatch costs more than
+# the whole ref computation (launch + interpret overhead on CPU, launch alone
+# on TPU), so ``auto`` falls back to ref. 1 MiB ≈ m=16 × d=16k × f32; the
+# bench grid (m=16, d=2¹⁶ → 4.2 MiB) sits above it, the unit-test and
+# quadratic-task shapes sit below.
+PALLAS_MIN_BYTES = 1 << 20
+
+_DISPATCH_KINDS = ("sort", "matmul")
+
+
+def dispatch_backend(backend: str, *, kind: str, nbytes: int) -> str:
+    """Per-call backend choice for one primitive. Explicit backends are
+    honoured as before (``resolve_backend``); ``auto`` picks by size and
+    primitive kind: ref below ``PALLAS_MIN_BYTES``; above it, pallas on TPU
+    for everything, and on CPU only for ``kind="sort"`` primitives (the
+    bitonic-network reduces, where the interpreted kernel still beats
+    ``jnp.sort``-based refs) — ``kind="matmul"`` primitives stay on BLAS,
+    which an interpreted MXU kernel cannot beat. This is what fixes the
+    pairwise/combine kernel rows losing to ref in BENCH_cpu.json: those
+    shapes now never reach the interpreted kernel on the auto path."""
+    if backend != "auto":
+        return resolve_backend(backend)
+    if kind not in _DISPATCH_KINDS:
+        raise ValueError(f"unknown dispatch kind {kind!r}; want one of "
+                         f"{_DISPATCH_KINDS}")
+    if nbytes < PALLAS_MIN_BYTES:
+        return "ref"
+    if jax.default_backend() == "tpu":
+        return "pallas"
+    return "pallas" if kind == "sort" else "ref"
+
+
 # ============================================================ primitives
 #
 # All matrix primitives take x: (m, d) and return float32.
@@ -58,7 +95,7 @@ def resolve_backend(backend: str) -> str:
 
 def cw_mean(x: jax.Array, *, backend: str = "auto") -> jax.Array:
     """(m, d) -> (d,) mean. Pallas path: uniform-weight combine kernel."""
-    if resolve_backend(backend) == "pallas":
+    if dispatch_backend(backend, kind="matmul", nbytes=4 * x.size) == "pallas":
         m = x.shape[0]
         w = jnp.full((1, m), 1.0 / m, jnp.float32)
         return kops.weighted_combine_op(x, w)[0]
@@ -67,7 +104,7 @@ def cw_mean(x: jax.Array, *, backend: str = "auto") -> jax.Array:
 
 def cw_median(x: jax.Array, *, backend: str = "auto") -> jax.Array:
     """(m, d) -> (d,) coordinate-wise median."""
-    if resolve_backend(backend) == "pallas":
+    if dispatch_backend(backend, kind="sort", nbytes=4 * x.size) == "pallas":
         return kops.cwmed_op(x)
     return kref.cwmed_ref(x)
 
@@ -80,7 +117,7 @@ def cw_trimmed_mean(x: jax.Array, trim, *, backend: str = "auto") -> jax.Array:
     masked sorted-sum form for both, so static and traced calls with the same
     trim are bitwise identical; the pallas backend picks the statically-sliced
     kernel when it can and the masked-kernel variant otherwise."""
-    if resolve_backend(backend) == "pallas":
+    if dispatch_backend(backend, kind="sort", nbytes=4 * x.size) == "pallas":
         if isinstance(trim, (int, np.integer)):
             return kops.cwtm_op(x, int(trim))
         return kops.cwtm_masked_op(x, trim)
@@ -89,14 +126,14 @@ def cw_trimmed_mean(x: jax.Array, trim, *, backend: str = "auto") -> jax.Array:
 
 def pairwise_sqdist(x: jax.Array, *, backend: str = "auto") -> jax.Array:
     """(m, d) -> (m, m) squared L2 distances."""
-    if resolve_backend(backend) == "pallas":
+    if dispatch_backend(backend, kind="matmul", nbytes=4 * x.size) == "pallas":
         return kops.pairwise_sqdist_op(x)
     return kref.pairwise_sqdist_ref(x)
 
 
 def cross_sqdist(x: jax.Array, y: jax.Array, *, backend: str = "auto") -> jax.Array:
     """(m, d), (k, d) -> (m, k) squared L2 distances."""
-    if resolve_backend(backend) == "pallas":
+    if dispatch_backend(backend, kind="matmul", nbytes=4 * x.size) == "pallas":
         return kops.cross_sqdist_op(x, y)
     return kref.cross_sqdist_ref(x, y)
 
@@ -104,11 +141,39 @@ def cross_sqdist(x: jax.Array, y: jax.Array, *, backend: str = "auto") -> jax.Ar
 def weighted_combine(x: jax.Array, w: jax.Array, *, backend: str = "auto") -> jax.Array:
     """(m, d) rows combined with weights w: (k, m) -> (k, d), or (m,) -> (d,)."""
     w2 = w[None] if w.ndim == 1 else w
-    if resolve_backend(backend) == "pallas":
+    if dispatch_backend(backend, kind="matmul", nbytes=4 * x.size) == "pallas":
         out = kops.weighted_combine_op(x, w2)
     else:
         out = kref.weighted_combine_ref(x, w2)
     return out[0] if w.ndim == 1 else out
+
+
+def combine_reduce(x: jax.Array, w: jax.Array, mode: str, trim=0, *,
+                   backend: str = "auto") -> jax.Array:
+    """Mix-then-reduce in one primitive: rows of ``w @ x`` (w: (k, m),
+    x: (m, d)) reduced coordinate-wise to (d,) by ``mode`` ∈ {"med", "tm",
+    "mean"} — the hot step of NNM composites with a coordinate-wise base.
+    The pallas path is ONE fused kernel dispatch: the stack is streamed
+    once and the mixed (k, d) matrix never exists in HBM. The ref fallback
+    runs the exact two-step the separate primitives would (combine ref,
+    then the same reduce refs ``cw_median``/``cw_trimmed_mean``/``cw_mean``
+    use), so class and uniform rules routed through here stay bitwise
+    identical to each other on ref. ``trim`` (for "tm") may be a Python int
+    or a traced int32 count, exactly as in ``cw_trimmed_mean``."""
+    kind = "sort" if mode in ("med", "tm") else "matmul"
+    if dispatch_backend(backend, kind=kind, nbytes=4 * x.size) == "pallas":
+        if mode == "tm" and not isinstance(trim, (int, np.integer)):
+            return kops.fused_op(x, w, trim_arr=trim, reduce=mode)["reduce"]
+        return kops.fused_op(x, w, reduce=mode,
+                             trim=int(trim) if mode == "tm" else 0)["reduce"]
+    mixed = kref.weighted_combine_ref(x, w)
+    if mode == "med":
+        return kref.cwmed_ref(mixed)
+    if mode == "tm":
+        return kref.cwtm_ref(mixed, trim)
+    if mode != "mean":
+        raise ValueError(f"unknown combine_reduce mode {mode!r}")
+    return jnp.mean(mixed, axis=0)
 
 
 # ------------------------------------------------------------ tree forms
@@ -149,6 +214,20 @@ def tree_weighted_combine(stacked: Tree, w: jax.Array, *, backend: str = "auto",
         out = weighted_combine(_as_mat(l), w, backend=backend)
         shape = l.shape if w.ndim == 2 else l.shape[1:]
         return out.reshape(shape).astype(out_dtype or l.dtype)
+    return jax.tree.map(leaf, stacked)
+
+
+def tree_combine_reduce(stacked: Tree, w: jax.Array, *, mode: str, trim=0,
+                        backend: str = "auto") -> Tree:
+    """Per-leaf ``combine_reduce``: mix the m worker rows with w (k, m) and
+    coordinate-wise reduce the result, returning a tree shaped like one
+    worker's entry. One fused kernel dispatch per leaf on the pallas path —
+    NNM with a coordinate-wise base goes pairwise -> weights -> THIS,
+    instead of a combine pass that materializes the mixed stack followed by
+    a reduce pass that re-reads it (DESIGN.md §7)."""
+    def leaf(l):
+        out = combine_reduce(_as_mat(l), w, mode, trim, backend=backend)
+        return out.reshape(l.shape[1:]).astype(l.dtype)
     return jax.tree.map(leaf, stacked)
 
 

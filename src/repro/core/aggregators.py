@@ -40,7 +40,7 @@ from repro.core.agg_engine import (
     GEOMED_MAX_ITERS, Aggregator, CoordinateWiseRule, GeometryRule, Tree,
     _as_mat, agg_param_spec, count_ceil, cw_mean, cw_median,
     cw_trimmed_mean, get_aggregator, register, register_uniform,
-    traced_count, traced_trim_count, tree_cross_sqdist,
+    traced_count, traced_trim_count, tree_combine_reduce, tree_cross_sqdist,
     tree_pairwise_sqdist, tree_weighted_combine, trim_count,
 )
 
@@ -163,6 +163,7 @@ def _geomed_tree(stacked, iters, eps, backend: str, unroll: int):
 
 class Mean(CoordinateWiseRule):
     name = "mean"
+    cr_mode = "mean"  # combine_reduce mode: NNM fuses mix+reduce for us
 
     def _reduce(self, mat):
         return cw_mean(mat, backend=self.backend)
@@ -171,6 +172,7 @@ class Mean(CoordinateWiseRule):
 class CWMed(CoordinateWiseRule):
     """Coordinate-wise median (Yin et al., 2018)."""
     name = "cwmed"
+    cr_mode = "med"
 
     def _reduce(self, mat):
         return cw_median(mat, backend=self.backend)
@@ -179,6 +181,7 @@ class CWMed(CoordinateWiseRule):
 class CWTM(CoordinateWiseRule):
     """Coordinate-wise trimmed mean: drop ⌈δm⌉ highest/lowest per coordinate."""
     name = "cwtm"
+    cr_mode = "tm"
 
     def __init__(self, delta: float = 0.25, backend: str = "auto"):
         super().__init__(backend)
@@ -242,8 +245,15 @@ class NNM(GeometryRule):
 
     def tree(self, stacked):
         d2 = tree_pairwise_sqdist(stacked, backend=self.backend)
-        mixed = tree_weighted_combine(stacked, self._weights(d2),
-                                      backend=self.backend)
+        w = self._weights(d2)
+        mode = getattr(self.base, "cr_mode", None)
+        if mode is not None:
+            # coordinate-wise base: mix+reduce as ONE fused primitive — the
+            # (m, d) mixed stack never materializes (agg_engine.combine_reduce)
+            trim = trim_count(self.base.delta, d2.shape[0]) if mode == "tm" else 0
+            return tree_combine_reduce(stacked, w, mode=mode, trim=trim,
+                                       backend=self.backend)
+        mixed = tree_weighted_combine(stacked, w, backend=self.backend)
         return self.base.tree(mixed)
 
 
@@ -345,13 +355,20 @@ def _build_nnm(base_name, backend, mlmc):
     merged = [p for p, _ in agg_param_spec("nnm+" + base_name)]
     idx = np.array([merged.index(p) for p, _ in agg_param_spec(base_name)],
                    np.int32)
+    # coordinate-wise bases take the fused mix+reduce primitive, mirroring
+    # NNM.tree exactly (same ops either path => ref bitstreams stay equal)
+    mode = {"mean": "mean", "cwmed": "med", "cwtm": "tm"}.get(base_name)
 
     def fn(stacked, n, theta):
         m = jax.tree.leaves(stacked)[0].shape[0]
         k = m - traced_count(theta[0] * m)
         d2 = tree_pairwise_sqdist(stacked, backend=backend)
-        mixed = tree_weighted_combine(stacked, _nnm_weights(d2, k),
-                                      backend=backend)
+        w = _nnm_weights(d2, k)
+        if mode is not None:
+            trim = traced_trim_count(theta[0], m) if mode == "tm" else 0
+            return tree_combine_reduce(stacked, w, mode=mode, trim=trim,
+                                       backend=backend)
+        mixed = tree_weighted_combine(stacked, w, backend=backend)
         return base_fn(mixed, n, theta[idx] if idx.size else theta[:0])
     return fn
 

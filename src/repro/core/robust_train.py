@@ -15,7 +15,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import warnings
-from typing import Any, Callable, Dict, Optional, Sequence
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -494,6 +494,13 @@ def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer,
         raise ValueError(
             "lane_attacks/lane_aggregators are for the vmapped sweep, which "
             "runs unsharded; drop mesh= (DESIGN.md §7)")
+    if mesh is not None:
+        # inside the manual shard_map region the size dispatch must never
+        # pick an interpret-mode pallas kernel (the legacy lowering cannot
+        # host a pallas_call there) — freeze 'auto' at build time to its
+        # pre-dispatch meaning: pallas on TPU, ref elsewhere
+        cfg = dataclasses.replace(
+            cfg, agg_backend=agg_engine.resolve_backend(cfg.agg_backend))
     j_max = cfg.mlmc.j_max
     n_max = 2 ** j_max if cfg.use_mlmc else 1
     gather = _worker_gather(mesh, worker_axis)
@@ -683,6 +690,11 @@ def make_momentum_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, lr: float,
     ``make_momentum_step``, scanned over (batches, masks, keys) schedules.
     ``mesh`` shards the per-worker gradient vmap across devices exactly as in
     ``make_dynabro_scan_fn`` (worker momenta stay replicated)."""
+    if mesh is not None:
+        # same backend freeze as make_dynabro_scan_fn: no interpret-mode
+        # pallas inside the manual shard_map region
+        cfg = dataclasses.replace(
+            cfg, agg_backend=agg_engine.resolve_backend(cfg.agg_backend))
     round_fn = _make_momentum_round(grad_fn, cfg, lr, beta,
                                     gather=_worker_gather(mesh, worker_axis))
 
@@ -882,6 +894,21 @@ def run_dynabro_scan_sweep(
     see ``_lane_agg_plan``). ``aggregators=None`` keeps every lane on
     ``cfg.aggregator`` through the static path, bitwise-unchanged.
 
+    Mixed-rule grids are split **branch-homogeneously**: lanes are grouped
+    by aggregator name (one sub-sweep per distinct rule, lanes permuted into
+    groups and results un-permuted back to the caller's lane order), so each
+    group's ``agg_switch`` has a single branch and skips the ``lax.switch``
+    entirely — a 4-rule grid pays each rule's cost once per group instead of
+    every lane paying all four under the vmapped switch's
+    execute-all-branches-and-select (DESIGN.md §7). Grouping applies when
+    ``scan_fn`` is None (one scan_fn built per group) or a *Mapping*
+    ``{rule_name: scan_fn}`` with exactly the grid's distinct rule names as
+    keys, each value a prebuilt ``make_dynabro_scan_fn(...,
+    lane_aggregators=(rule_name,))`` (plus this sweep's attack names) — the
+    steady-state form benchmarks use, since per-call rebuilt scan_fns miss
+    ``_vmapped_scan_fn``'s identity-keyed cache. A plain prebuilt scan_fn
+    runs the grid as one multi-branch dispatch, exactly as before.
+
     Returns ``[(params_c, logs_c), ...]`` in input order, each lane equal to
     the corresponding ``run_dynabro_scan(...)`` call with that lane's
     switcher, attack and aggregator — usually bitwise, always within the
@@ -905,6 +932,44 @@ def run_dynabro_scan_sweep(
         return []
     if T <= 0:
         return [(params, []) for _ in switchers]
+
+    # ---- branch-homogeneous lane grouping (DESIGN.md §7): split a
+    # mixed-rule grid into one sub-sweep per distinct aggregator name, in
+    # first-appearance order, and scatter results back to caller lane order.
+    # Every schedule a sub-sweep derives (levels, keys, batches) is a pure
+    # function of (cfg, seed, T), so the groups share them by construction.
+    group_fns = None
+    if isinstance(scan_fn, Mapping):
+        if aggregators is None:
+            raise ValueError(
+                "scan_fn given as a {rule_name: scan_fn} mapping but this "
+                "sweep passes no aggregators to group by")
+        group_fns = scan_fn
+    if aggregators is not None:
+        agg_specs = _norm_lane_specs(aggregators)
+        distinct = tuple(dict.fromkeys(name for name, _ in agg_specs))
+        if group_fns is not None and set(group_fns) != set(distinct):
+            raise ValueError(
+                f"scan_fn mapping keys {sorted(group_fns)} do not match the "
+                f"grid's distinct aggregator names {sorted(distinct)}")
+        if len(distinct) > 1 and (scan_fn is None or group_fns is not None):
+            outs = [None] * C
+            for name in distinct:
+                idx = [c for c in range(C) if agg_specs[c][0] == name]
+                sub = run_dynabro_scan_sweep(
+                    grad_fn, params, opt, cfg, [switchers[c] for c in idx],
+                    sample_batches, T, seed=seed, chunk=chunk,
+                    scan_fn=None if group_fns is None else group_fns[name],
+                    vectorize_batches=vectorize_batches,
+                    attacks=(None if attacks is None
+                             else [attacks[c] for c in idx]),
+                    aggregators=[aggregators[c] for c in idx])
+                for j, c in enumerate(idx):
+                    outs[c] = sub[j]
+            return outs
+        if group_fns is not None:  # single distinct rule: unwrap and run
+            scan_fn = group_fns[distinct[0]]
+
     levels, ns, n_max = _level_plan(cfg, np.random.default_rng(seed), T)
     masks = np.stack([_mask_schedule(sw, T, n_max, ns) for sw in switchers])
     keys = _np_prng_keys(seed * 100_003 + np.arange(T, dtype=np.int64))

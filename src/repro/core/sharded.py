@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.agg_engine import get_aggregator
+from repro.core.agg_engine import get_aggregator, resolve_backend
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,7 +62,12 @@ def _make_leaf_agg(cfg: ShardedByzConfig):
     Mode B aggregates each parameter shard independently, which is exact only
     for coordinate-wise rules (DESIGN.md §3) — the engine's registry carries
     that metadata, so misconfiguration fails at build time, not in backward."""
-    agg = get_aggregator(cfg.aggregator, delta=cfg.delta, backend=cfg.backend)
+    # resolve 'auto' eagerly (pallas on TPU, ref elsewhere): the leaf runs
+    # inside the partial-manual shard_map region, where the per-call size
+    # dispatch must never route a big leaf to an interpret-mode pallas call
+    # the legacy manual lowering cannot host
+    agg = get_aggregator(cfg.aggregator, delta=cfg.delta,
+                         backend=resolve_backend(cfg.backend))
     if not agg.coordinate_wise:
         raise ValueError(
             f"sharded mode supports coordinate-wise rules, got {cfg.aggregator}")

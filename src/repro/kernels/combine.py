@@ -1,48 +1,6 @@
-"""Pallas TPU kernel: fused weighted select/combine ``W @ X`` over d tiles.
+"""Weighted-combine kernel — now the mix stage of the fused one-pass kernel
+in ``fused.py``; this module re-exports the single-stage form so existing
+imports keep working."""
+from repro.kernels.fused import weighted_combine  # noqa: F401
 
-One kernel serves every "combine the m worker rows with per-worker weights"
-step of the aggregation engine:
-
-  * Krum selection      — W is a (1, m) one-hot (or top-k averaged) row,
-  * NNM mixing          — W is the (m, m) nearest-neighbour mixing matrix,
-  * MFM filtering       — W is the (1, m) median-filter indicator row,
-  * GeoMed/Weiszfeld    — W is the (1, m) inverse-distance weight row,
-  * Mean                — W is the uniform (1, m) row.
-
-Layout mirrors ``cwmed.py``: m (and the weight rank k ≤ m) are tiny while d
-is huge, so the grid walks d tiles; each step loads an (m, TILE_D) block into
-VMEM and performs a (k, m) × (m, TILE_D) MXU matmul straight into the output
-tile. The weights are a single (k, m) block revisited by every grid step.
-"""
-from __future__ import annotations
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-
-
-def _combine_kernel(w_ref, x_ref, o_ref):
-    w = w_ref[...].astype(jnp.float32)  # (k, m)
-    x = x_ref[...].astype(jnp.float32)  # (m, tile)
-    o_ref[...] = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
-                                     preferred_element_type=jnp.float32)
-
-
-def weighted_combine(x: jax.Array, w: jax.Array, *, tile_d: int = 2048,
-                     interpret: bool = False) -> jax.Array:
-    """x: (m, d), w: (k, m) -> (k, d) float32 (``w @ x`` streamed over d)."""
-    m, d = x.shape
-    k = w.shape[0]
-    dp = -(-d // tile_d) * tile_d
-    if dp != d:
-        x = jnp.pad(x, ((0, 0), (0, dp - d)))
-    out = pl.pallas_call(
-        _combine_kernel,
-        grid=(dp // tile_d,),
-        in_specs=[pl.BlockSpec((k, m), lambda i: (0, 0)),
-                  pl.BlockSpec((m, tile_d), lambda i: (0, i))],
-        out_specs=pl.BlockSpec((k, tile_d), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((k, dp), jnp.float32),
-        interpret=interpret,
-    )(w.astype(jnp.float32), x)
-    return out[:, :d]
+__all__ = ["weighted_combine"]

@@ -1,135 +1,13 @@
-"""Pallas TPU kernel: coordinate-wise median / trimmed mean over m workers.
+"""Coordinate-wise median / trimmed-mean kernels — now stages of the fused
+one-pass kernel in ``fused.py``; this module re-exports the single-stage
+forms so existing imports keep working. See fused.py for the kernel body
+(the bitonic row-sort network lives there too)."""
+from repro.kernels.fused import (  # noqa: F401
+    _INF,
+    _bitonic_sort_rows,
+    cwmed,
+    cwtm,
+    cwtm_masked,
+)
 
-Layout: input (m, d) with m small (16/32 workers) and d huge (up to 4.8e11/m
-coordinates per device after the worker all-to-all). The grid tiles d; each
-step loads an (m, TILE_D) block into VMEM and sorts the m rows with a bitonic
-sorting network (min/max row swaps — no data-dependent control flow, VPU
-friendly), then emits the middle row(s) (median) or the trimmed row mean.
-
-The m axis is padded to the next power of two with +inf rows so the network
-is shape-static; statistics index only the valid prefix.
-"""
-from __future__ import annotations
-
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-
-_INF = 3.0e38  # python float: becomes a kernel-local constant, not a capture
-
-
-def _bitonic_sort_rows(rows):
-    """Sort a list of (TILE_D,) f32 rows ascending, element-wise (each
-    coordinate sorted independently across rows). len(rows) must be a power
-    of two. Returns the sorted list."""
-    n = len(rows)
-    k = 2
-    while k <= n:
-        j = k // 2
-        while j >= 1:
-            for i in range(n):
-                l = i ^ j
-                if l > i:
-                    up = (i & k) == 0
-                    a, b = rows[i], rows[l]
-                    lo = jnp.minimum(a, b)
-                    hi = jnp.maximum(a, b)
-                    rows[i] = lo if up else hi
-                    rows[l] = hi if up else lo
-            j //= 2
-        k *= 2
-    return rows
-
-
-def _sorted_rows(x_ref, m: int):
-    mp = 1 << (m - 1).bit_length()
-    rows = [x_ref[i, :].astype(jnp.float32) for i in range(m)]
-    rows += [jnp.full_like(rows[0], _INF) for _ in range(mp - m)]
-    return _bitonic_sort_rows(rows)
-
-
-def cwmed_kernel(x_ref, o_ref, *, m: int):
-    rows = _sorted_rows(x_ref, m)
-    if m % 2:
-        o_ref[...] = rows[m // 2]
-    else:
-        o_ref[...] = 0.5 * (rows[m // 2 - 1] + rows[m // 2])
-
-
-def cwtm_kernel(x_ref, o_ref, *, m: int, trim: int):
-    rows = _sorted_rows(x_ref, m)
-    keep = rows[trim:m - trim] if trim else rows[:m]
-    acc = keep[0]
-    for r in keep[1:]:
-        acc = acc + r
-    o_ref[...] = acc / float(len(keep))
-
-
-def cwtm_masked_kernel(x_ref, t_ref, o_ref, *, m: int):
-    """Trimmed mean with a *data* trim count (the uniform theta path of
-    ``core.agg_engine``): same bitonic sort, but the kept band is selected by
-    per-row masks against the trim scalar instead of static slicing, so one
-    compiled kernel serves every trim value."""
-    rows = _sorted_rows(x_ref, m)
-    trim = t_ref[0]
-    acc = jnp.zeros_like(rows[0])
-    for i in range(m):
-        keep = jnp.logical_and(i >= trim, i < m - trim)
-        acc = acc + jnp.where(keep, rows[i], 0.0)
-    o_ref[...] = acc / (m - 2 * trim).astype(jnp.float32)
-
-
-def _call(kernel, x, tile_d: int, interpret: bool):
-    m, d = x.shape
-    dp = -(-d // tile_d) * tile_d
-    if dp != d:
-        x = jnp.pad(x, ((0, 0), (0, dp - d)))
-    out = pl.pallas_call(
-        kernel,
-        grid=(dp // tile_d,),
-        in_specs=[pl.BlockSpec((m, tile_d), lambda i: (0, i))],
-        out_specs=pl.BlockSpec((tile_d,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((dp,), jnp.float32),
-        interpret=interpret,
-    )(x)
-    return out[:d]
-
-
-def cwmed(x: jax.Array, *, tile_d: int = 2048, interpret: bool = False) -> jax.Array:
-    """Coordinate-wise median. x: (m, d) -> (d,) float32."""
-    m = x.shape[0]
-    return _call(functools.partial(cwmed_kernel, m=m), x, tile_d, interpret)
-
-
-def cwtm(x: jax.Array, trim: int, *, tile_d: int = 2048,
-         interpret: bool = False) -> jax.Array:
-    """Coordinate-wise trimmed mean. x: (m, d) -> (d,) float32."""
-    m = x.shape[0]
-    trim = min(trim, (m - 1) // 2)
-    return _call(functools.partial(cwtm_kernel, m=m, trim=trim), x, tile_d, interpret)
-
-
-def cwtm_masked(x: jax.Array, trim: jax.Array, *, tile_d: int = 2048,
-                interpret: bool = False) -> jax.Array:
-    """Trimmed mean with a traced trim scalar. x: (m, d) -> (d,) float32.
-
-    ``trim`` rides along as a (1,) int32 operand every grid step reads whole
-    (scalars belong in SMEM on real TPUs; a rank-1 int block is the
-    interpret-mode-portable equivalent this CPU-validated repo can test)."""
-    m, d = x.shape
-    trim = jnp.clip(jnp.asarray(trim, jnp.int32), 0, (m - 1) // 2)
-    dp = -(-d // tile_d) * tile_d
-    if dp != d:
-        x = jnp.pad(x, ((0, 0), (0, dp - d)))
-    out = pl.pallas_call(
-        functools.partial(cwtm_masked_kernel, m=m),
-        grid=(dp // tile_d,),
-        in_specs=[pl.BlockSpec((m, tile_d), lambda i: (0, i)),
-                  pl.BlockSpec((1,), lambda i: (0,))],
-        out_specs=pl.BlockSpec((tile_d,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((dp,), jnp.float32),
-        interpret=interpret,
-    )(x, trim.reshape(1))
-    return out[:d]
+__all__ = ["cwmed", "cwtm", "cwtm_masked"]

@@ -2,12 +2,16 @@
 
 On TPU the Pallas kernels run compiled; on CPU (this container) they run in
 ``interpret=True`` mode, executing the same kernel bodies for correctness.
-These wrappers are the ``pallas`` backend of ``core.agg_engine`` — the three
-engine primitives map onto them as
+These wrappers are the ``pallas`` backend of ``core.agg_engine``. Every
+single-stage op below is one stage of the fused one-pass kernel
+(``fused.py``); ``fused_op`` exposes the multi-stage form — one dispatch,
+one HBM read of the (m, d) stack — for composites like NNM's
+mix-then-reduce.
 
-  coordinate-wise reduce      -> ``cwmed_op`` / ``cwtm_op``
+  coordinate-wise reduce      -> ``cwmed_op`` / ``cwtm_op`` / ``cwtm_masked_op``
   pairwise-distance accumulate-> ``pairwise_sqdist_op`` / ``cross_sqdist_op``
   weighted-combine            -> ``weighted_combine_op``
+  fused multi-stage           -> ``fused_op``
 """
 from __future__ import annotations
 
@@ -15,9 +19,7 @@ import functools
 
 import jax
 
-from repro.kernels import combine as _combine_mod
-from repro.kernels import cwmed as _cwmed_mod
-from repro.kernels import pairwise as _pairwise_mod
+from repro.kernels import fused as _fused_mod
 
 
 def _interpret() -> bool:
@@ -26,32 +28,51 @@ def _interpret() -> bool:
 
 @functools.partial(jax.jit, static_argnames=("tile_d",))
 def cwmed_op(x: jax.Array, tile_d: int = 2048) -> jax.Array:
-    return _cwmed_mod.cwmed(x, tile_d=tile_d, interpret=_interpret())
+    return _fused_mod.cwmed(x, tile_d=tile_d, interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("trim", "tile_d"))
 def cwtm_op(x: jax.Array, trim: int, tile_d: int = 2048) -> jax.Array:
-    return _cwmed_mod.cwtm(x, trim, tile_d=tile_d, interpret=_interpret())
+    return _fused_mod.cwtm(x, trim, tile_d=tile_d, interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("tile_d",))
 def cwtm_masked_op(x: jax.Array, trim: jax.Array, tile_d: int = 2048) -> jax.Array:
     """``cwtm_op`` with the trim count as *data* (traced int32 scalar) — the
     uniform theta path of ``core.agg_engine`` (DESIGN.md §4)."""
-    return _cwmed_mod.cwtm_masked(x, trim, tile_d=tile_d, interpret=_interpret())
+    return _fused_mod.cwtm_masked(x, trim, tile_d=tile_d, interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("tile_d",))
 def pairwise_sqdist_op(x: jax.Array, tile_d: int = 4096) -> jax.Array:
-    return _pairwise_mod.pairwise_sqdist(x, tile_d=tile_d, interpret=_interpret())
+    return _fused_mod.pairwise_sqdist(x, tile_d=tile_d, interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("tile_d",))
 def cross_sqdist_op(x: jax.Array, y: jax.Array, tile_d: int = 4096) -> jax.Array:
-    return _pairwise_mod.cross_sqdist(x, y, tile_d=tile_d, interpret=_interpret())
+    return _fused_mod.cross_sqdist(x, y, tile_d=tile_d, interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("tile_d",))
 def weighted_combine_op(x: jax.Array, w: jax.Array, tile_d: int = 2048) -> jax.Array:
     """x: (m, d), w: (k, m) -> (k, d) = w @ x, streamed over d tiles."""
-    return _combine_mod.weighted_combine(x, w, tile_d=tile_d, interpret=_interpret())
+    return _fused_mod.weighted_combine(x, w, tile_d=tile_d, interpret=_interpret())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("reduce", "trim", "pairwise", "combine",
+                                    "tile_d"))
+def fused_op(x: jax.Array, w: jax.Array | None = None,
+             trim_arr: jax.Array | None = None, *, reduce: str | None = None,
+             trim: int = 0, pairwise: bool = False, combine: bool = False,
+             tile_d: int = 2048) -> dict:
+    """Multi-stage fused pass: one dispatch streams the (m, d) stack once and
+    returns a dict with any requested subset of ``reduce`` (median /
+    trimmed-mean / mean over ``w @ x`` rows, of x rows when w is None),
+    ``pairwise`` ((m, m) squared distances of x rows) and ``combine``
+    (``w @ x``). Pass a traced trim count via ``trim_arr`` (the static
+    ``trim`` is ignored then); a Python trim goes in ``trim``."""
+    t = trim_arr if trim_arr is not None else trim
+    return _fused_mod.fused_pass(x, w=w, reduce=reduce, trim=t,
+                                 pairwise=pairwise, combine=combine,
+                                 tile_d=tile_d, interpret=_interpret())

@@ -1,92 +1,7 @@
-"""Pallas TPU kernel: m×m pairwise squared distances over a huge feature dim.
+"""Pairwise / cross squared-distance kernels — the pairwise form is now a
+stage of the fused one-pass kernel in ``fused.py`` (cross_sqdist keeps its
+own two-operand kernel there for Weiszfeld numerics); this module re-exports
+both so existing imports keep working."""
+from repro.kernels.fused import cross_sqdist, pairwise_sqdist  # noqa: F401
 
-Used by the distance-based aggregators (Krum / NNM / MFM / GeoMed init): the
-(m, m) Gram/statistics are tiny but the reduction runs over d ~ 1e9+ floats,
-so this is a bandwidth-bound streaming reduction. The grid walks d tiles; each
-step does an (m, TILE_D) x (TILE_D, m) MXU matmul and accumulates
-sq-norm/gram partials straight into the (m, m) output block (output revisited
-across the sequential TPU grid => accumulation is safe).
-"""
-from __future__ import annotations
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-
-
-def _pairwise_kernel(x_ref, o_ref):
-    i = pl.program_id(0)
-    x = x_ref[...].astype(jnp.float32)  # (m, tile)
-    gram = jax.lax.dot_general(x, x, (((1,), (1,)), ((), ())),
-                               preferred_element_type=jnp.float32)  # (m, m)
-    sq = jnp.diagonal(gram)
-    part = sq[:, None] + sq[None, :] - 2.0 * gram
-
-    @pl.when(i == 0)
-    def _init():
-        o_ref[...] = part
-
-    @pl.when(i != 0)
-    def _acc():
-        o_ref[...] += part
-
-
-def pairwise_sqdist(x: jax.Array, *, tile_d: int = 4096,
-                    interpret: bool = False) -> jax.Array:
-    """x: (m, d) -> (m, m) squared L2 distances, f32."""
-    m, d = x.shape
-    dp = -(-d // tile_d) * tile_d
-    if dp != d:
-        x = jnp.pad(x, ((0, 0), (0, dp - d)))
-    out = pl.pallas_call(
-        _pairwise_kernel,
-        grid=(dp // tile_d,),
-        in_specs=[pl.BlockSpec((m, tile_d), lambda i: (0, i))],
-        out_specs=pl.BlockSpec((m, m), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((m, m), jnp.float32),
-        interpret=interpret,
-    )(x)
-    return jnp.maximum(out, 0.0)
-
-
-def _cross_kernel(x_ref, y_ref, o_ref):
-    i = pl.program_id(0)
-    x = x_ref[...].astype(jnp.float32)  # (m, tile)
-    y = y_ref[...].astype(jnp.float32)  # (k, tile)
-    # direct subtraction, not the gram expansion: Weiszfeld iterates sit
-    # close to the points and the expansion cancels catastrophically in f32
-    # (see cross_sqdist_ref); k is tiny so the (m, k, tile) broadcast fits
-    part = jnp.sum(jnp.square(x[:, None, :] - y[None, :, :]), axis=-1)
-
-    @pl.when(i == 0)
-    def _init():
-        o_ref[...] = part
-
-    @pl.when(i != 0)
-    def _acc():
-        o_ref[...] += part
-
-
-def cross_sqdist(x: jax.Array, y: jax.Array, *, tile_d: int = 4096,
-                 interpret: bool = False) -> jax.Array:
-    """x: (m, d), y: (k, d) -> (m, k) squared L2 distances, f32.
-
-    Same streaming reduction as ``pairwise_sqdist`` but between two row sets;
-    the aggregation engine uses it for GeoMed's per-iteration distances to the
-    Weiszfeld iterate (k = 1)."""
-    m, d = x.shape
-    k = y.shape[0]
-    dp = -(-d // tile_d) * tile_d
-    if dp != d:
-        x = jnp.pad(x, ((0, 0), (0, dp - d)))
-        y = jnp.pad(y, ((0, 0), (0, dp - d)))
-    out = pl.pallas_call(
-        _cross_kernel,
-        grid=(dp // tile_d,),
-        in_specs=[pl.BlockSpec((m, tile_d), lambda i: (0, i)),
-                  pl.BlockSpec((k, tile_d), lambda i: (0, i))],
-        out_specs=pl.BlockSpec((m, k), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
-        interpret=interpret,
-    )(x, y)
-    return jnp.maximum(out, 0.0)
+__all__ = ["pairwise_sqdist", "cross_sqdist"]

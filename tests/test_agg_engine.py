@@ -299,3 +299,155 @@ def test_cwtm_masked_kernel_matches_static(trim):
     got = np.asarray(cwtm_masked_op(x, jnp.asarray(trim, jnp.int32)))
     want = np.asarray(cwtm_op(x, trim))
     np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------- fused one-pass kernel
+#
+# One pallas_call streams the (m, d) stack once and emits any subset of the
+# reduce / pairwise / combine stages (DESIGN.md §7). Parity vs the ref
+# oracles in interpret mode at adversarial tile boundaries: d not a multiple
+# of tile_d (zero-padded columns must stay inert for every stage), m odd /
+# even / 1, and trim at its clip limit (m-1)//2 — a single surviving row
+# for odd m.
+
+
+def _pw_close(got, want, atol=2e-6):
+    scale = np.asarray(want).max() + 1e-9
+    np.testing.assert_allclose(np.asarray(got) / scale,
+                               np.asarray(want) / scale, atol=atol)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 9), st.integers(1, 333), st.sampled_from([32, 64, 128]),
+       st.booleans(), st.integers(0, 10_000))
+def test_fused_pass_all_stages_tile_boundaries(m, d, tile_d, traced, seed):
+    """All three stages from one dispatch == the three separate refs, with
+    trim at the single-survivor limit and a random (usually non-dividing)
+    d/tile_d ratio; the trim count rides as data when ``traced``."""
+    from repro.kernels import ref as kref
+    from repro.kernels.fused import fused_pass
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32) * 3)
+    w = jnp.asarray(rng.random((m, m)).astype(np.float32))
+    w = w / w.sum(1, keepdims=True)
+    trim = (m - 1) // 2  # clip limit: one survivor for odd m, two for even
+    out = fused_pass(
+        x, w=w, reduce="tm",
+        trim=jnp.asarray(trim, jnp.int32) if traced else trim,
+        pairwise=True, combine=True, tile_d=tile_d, interpret=True)
+    mixed = kref.weighted_combine_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out["combine"]), np.asarray(mixed),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out["reduce"]),
+                               np.asarray(kref.cwtm_ref(mixed, trim)),
+                               rtol=1e-5, atol=1e-5)
+    _pw_close(out["pairwise"], kref.pairwise_sqdist_ref(x))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 300), st.sampled_from([64, 256]),
+       st.sampled_from(["med", "tm", "mean"]), st.integers(0, 10_000))
+def test_fused_pass_reduce_only_matches_ref(m, d, tile_d, mode, seed):
+    """Reduce-of-x (no weights) at odd/even/1 m and non-dividing d."""
+    from repro.kernels import ref as kref
+    from repro.kernels.fused import fused_pass
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32) * 3)
+    trim = (m - 1) // 2 if mode == "tm" else 0
+    got = fused_pass(x, reduce=mode, trim=trim, tile_d=tile_d,
+                     interpret=True)["reduce"]
+    want = {"med": lambda: kref.cwmed_ref(x),
+            "tm": lambda: kref.cwtm_ref(x, trim),
+            "mean": lambda: jnp.mean(x, axis=0)}[mode]()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_pass_k_lt_m_combine_reduce():
+    """A (k, m) weight matrix with k < m: the reduce stage runs over the k
+    mixed rows, not the m inputs."""
+    from repro.kernels import ref as kref
+    from repro.kernels.fused import fused_pass
+
+    x = _mk(7, 123, seed=11)
+    w = jnp.asarray(np.random.default_rng(1).random((3, 7)).astype(np.float32))
+    out = fused_pass(x, w=w, reduce="med", combine=True, tile_d=64,
+                     interpret=True)
+    mixed = kref.weighted_combine_ref(x, w)
+    assert out["combine"].shape == (3, 123)
+    np.testing.assert_allclose(np.asarray(out["reduce"]),
+                               np.asarray(kref.cwmed_ref(mixed)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_pass_validates_requests():
+    from repro.kernels.fused import fused_pass
+
+    x = _mk(4, 16)
+    with pytest.raises(ValueError, match="at least one"):
+        fused_pass(x, interpret=True)
+    with pytest.raises(ValueError, match="unknown reduce mode"):
+        fused_pass(x, reduce="max", interpret=True)
+    with pytest.raises(ValueError, match="needs weights"):
+        fused_pass(x, combine=True, interpret=True)
+
+
+# ------------------------------------------------- size-aware dispatch
+
+
+def test_dispatch_backend_heuristic():
+    """Explicit backends are honoured; auto goes ref below PALLAS_MIN_BYTES
+    and (off-TPU) takes the kernel only for sort-shaped primitives."""
+    big = E.PALLAS_MIN_BYTES
+    assert E.dispatch_backend("ref", kind="sort", nbytes=big) == "ref"
+    assert E.dispatch_backend("pallas", kind="matmul", nbytes=0) == "pallas"
+    assert E.dispatch_backend("auto", kind="sort", nbytes=big - 1) == "ref"
+    assert E.dispatch_backend("auto", kind="matmul", nbytes=big - 1) == "ref"
+    if jax.default_backend() != "tpu":
+        assert E.dispatch_backend("auto", kind="sort", nbytes=big) == "pallas"
+        assert E.dispatch_backend("auto", kind="matmul", nbytes=big) == "ref"
+    with pytest.raises(ValueError, match="unknown dispatch kind"):
+        E.dispatch_backend("auto", kind="conv", nbytes=big)
+    with pytest.raises(ValueError, match="unknown backend"):
+        E.dispatch_backend("tpu", kind="sort", nbytes=big)
+
+
+@pytest.mark.parametrize("mode,trim", [("med", 0), ("tm", 2), ("mean", 0)])
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_combine_reduce_matches_two_step(backend, mode, trim):
+    """The fused mix+reduce primitive == combine followed by the matching
+    coordinate-wise reduce, on both backends (NNM's hot step)."""
+    x = _mk(7, 61, seed=5)
+    w = jnp.asarray(np.random.default_rng(2).random((7, 7)).astype(np.float32))
+    w = w / w.sum(1, keepdims=True)
+    got = np.asarray(E.combine_reduce(x, w, mode, trim, backend=backend))
+    mixed = E.weighted_combine(x, w, backend="ref")
+    want = {"med": lambda: E.cw_median(mixed, backend="ref"),
+            "tm": lambda: E.cw_trimmed_mean(mixed, trim, backend="ref"),
+            "mean": lambda: E.cw_mean(mixed, backend="ref")}[mode]()
+    np.testing.assert_allclose(got, np.asarray(want), rtol=1e-5, atol=1e-5)
+    # traced trim takes the masked kernel path; same tolerance
+    if mode == "tm":
+        got_t = np.asarray(E.combine_reduce(
+            x, w, mode, jnp.asarray(trim, jnp.int32), backend=backend))
+        np.testing.assert_allclose(got_t, np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_tree_combine_reduce_matches_leafwise(backend):
+    """Tree form: per-leaf mix+reduce, output shaped like one worker entry."""
+    tree = _model_tree(m=6, seed=8)
+    w = jnp.asarray(np.random.default_rng(3).random((6, 6)).astype(np.float32))
+    w = w / w.sum(1, keepdims=True)
+    out = E.tree_combine_reduce(tree, w, mode="med", backend=backend)
+    mixed = E.tree_weighted_combine(tree, w, backend="ref")
+    want = get_aggregator("cwmed", backend="ref").tree(mixed)
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    for o, l, wv in zip(jax.tree.leaves(out), jax.tree.leaves(tree),
+                        jax.tree.leaves(want)):
+        assert o.shape == l.shape[1:]
+        np.testing.assert_allclose(np.asarray(o), np.asarray(wv),
+                                   rtol=1e-5, atol=1e-5)

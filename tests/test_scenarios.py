@@ -196,6 +196,99 @@ def test_agg_lane_sweep_matches_per_cell_scan_exactly():
                                    err_msg=f"lane {attack} {gname}{gkw}")
 
 
+def test_grouped_sweep_shuffled_lanes_caller_order_and_dispatch(monkeypatch):
+    """Branch-homogeneous grouping contract (DESIGN.md §7): a SHUFFLED
+    16-lane mixed-rule grid (4 rules interleaved across attacks and
+    switching periods) returns rows in the CALLER's lane order — grouping
+    permutes lanes into per-rule sub-sweeps and must un-permute — while
+    building exactly one single-rule scan_fn per distinct rule, in
+    first-appearance order of the shuffled grid. Results still match
+    per-cell ``run_dynabro_scan`` exactly (extends the agg-lane parity
+    test above to permuted mixed grids)."""
+    import dataclasses
+
+    import repro.core.robust_train as rt
+    from repro.optim.optimizers import sgd
+
+    aggs = [("cwmed", {}), ("cwtm", {"delta": 0.45}), ("mfm", {}),
+            ("nnm+cwmed", {"delta": 0.3})]
+    lanes = [(a, g, K) for a in ["sign_flip", ("ipm", {"eps": 0.3})]
+             for g in aggs for K in (5, 9)]
+    order = np.random.default_rng(7).permutation(len(lanes))
+    lanes = [lanes[i] for i in order]  # interleaves the rules across lanes
+    first_seen = tuple(dict.fromkeys(g[0] for _, g, _ in lanes))
+    assert first_seen != tuple(g[0] for g in aggs)  # shuffle did something
+
+    built = []
+    orig = rt.make_dynabro_scan_fn
+
+    def recording(*args, **kw):
+        if kw.get("lane_aggregators") is not None:
+            built.append(kw["lane_aggregators"])
+        return orig(*args, **kw)
+
+    monkeypatch.setattr(rt, "make_dynabro_scan_fn", recording)
+    sampler = TASK.make_sampler(M)
+    outs = run_dynabro_scan_sweep(
+        TASK.grad_fn, TASK.params0, sgd(2e-2), _cfg_for("sign_flip", T=16),
+        [get_switcher("periodic", M, n_byz=3, K=K, seed=1)
+         for _, _, K in lanes],
+        sampler, 16, seed=1, attacks=[a for a, _, _ in lanes],
+        aggregators=[g for _, g, _ in lanes])
+    monkeypatch.setattr(rt, "make_dynabro_scan_fn", orig)
+    # one branch-homogeneous dispatch per distinct rule, caller's order
+    assert built == [(name,) for name in first_seen]
+    assert len(outs) == 16
+    for (attack, (gname, gkw), K), (p, logs) in zip(lanes, outs):
+        cfg = _cfg_for(attack, T=16, agg=gname)
+        cfg = dataclasses.replace(
+            cfg, delta=gkw.get("delta", cfg.delta),
+            aggregator_kwargs=dict(gkw) or None)
+        ref_p, ref_logs, _ = run_dynabro_scan(
+            TASK.grad_fn, TASK.params0, sgd(2e-2), cfg,
+            get_switcher("periodic", M, n_byz=3, K=K, seed=1), sampler, 16,
+            seed=1)
+        assert logs == ref_logs, f"lane {attack} {gname}{gkw} K={K}"
+        np.testing.assert_allclose(np.asarray(p["x"]), np.asarray(ref_p["x"]),
+                                   rtol=1e-6, atol=1e-7,
+                                   err_msg=f"lane {attack} {gname}{gkw} K={K}")
+
+
+def test_grouped_sweep_scan_fn_mapping_validation():
+    """The {rule_name: scan_fn} steady-state form: keys must equal the
+    grid's distinct rules, and a mapping without aggregators is an error."""
+    from repro.core.robust_train import make_dynabro_scan_fn
+    from repro.optim.optimizers import sgd
+
+    cfg = _cfg_for("sign_flip", T=8, j_cap=1)
+    sws = [get_switcher("static", M, n_byz=2) for _ in range(2)]
+    fns = {name: make_dynabro_scan_fn(TASK.grad_fn, cfg, sgd(2e-2),
+                                      lane_aggregators=(name,))
+           for name in ("cwmed", "cwtm")}
+    with pytest.raises(ValueError, match="do not match"):
+        run_dynabro_scan_sweep(
+            TASK.grad_fn, TASK.params0, sgd(2e-2), cfg, sws,
+            TASK.make_sampler(M), 8, scan_fn={"cwmed": fns["cwmed"]},
+            aggregators=["cwmed", "cwtm"])
+    with pytest.raises(ValueError, match="no aggregators"):
+        run_dynabro_scan_sweep(
+            TASK.grad_fn, TASK.params0, sgd(2e-2), cfg, sws,
+            TASK.make_sampler(M), 8, scan_fn=fns)
+    # a well-formed mapping runs grouped and matches scan_fn=None lane-wise
+    outs = run_dynabro_scan_sweep(
+        TASK.grad_fn, TASK.params0, sgd(2e-2), cfg, sws,
+        TASK.make_sampler(M), 8, scan_fn=fns,
+        aggregators=["cwmed", ("cwtm", {"delta": 0.45})])
+    ref = run_dynabro_scan_sweep(
+        TASK.grad_fn, TASK.params0, sgd(2e-2), cfg, sws,
+        TASK.make_sampler(M), 8,
+        aggregators=["cwmed", ("cwtm", {"delta": 0.45})])
+    for (p, logs), (rp, rlogs) in zip(outs, ref):
+        assert logs == rlogs
+        np.testing.assert_allclose(np.asarray(p["x"]), np.asarray(rp["x"]),
+                                   rtol=1e-6, atol=1e-7)
+
+
 def test_agg_hyperparameter_axis_free_lanes():
     """Grids varying ONLY an aggregator hyperparameter (CWTM at three δ) are
     lanes of one dispatch, produce distinct results, and keep their own
