@@ -1,0 +1,114 @@
+"""Model-zoo driver wall-clock + peak-memory (DESIGN.md §9).
+
+Times the unified zoo path — a reduced real transformer through
+``run_dynabro_scan`` — stacked vs microbatched, and lowers both segment fns
+to compare XLA's ``memory_analysis().temp_size_in_bytes``. The gated claim
+(benchmarks/check_regression.py) is the microbatch streaming contract: the
+per-round grad-accumulation scan must never materialize the full
+(m, n_max, d) per-worker gradient stack, so its peak temp bytes stay under
+one f32 copy of that stack (the stacked path's floor). Rows:
+
+* ``model_zoo/scan_T{T}`` / ``model_zoo/microbatch_T{T}`` — steady-state
+  wall-clock per driver call, ``rounds_per_s`` derived.
+* ``model_zoo/stacked_mem`` / ``model_zoo/microbatch_mem`` — compiled temp
+  bytes (the us field carries MB), ``vs_stack`` = temp bytes / one full
+  (m, n_max, d) f32 stack. The microbatch row is gated ``<= 1.0x`` and
+  additionally asserted here — a benchmark that measures a path which
+  silently materializes the stack would gate nothing.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mlmc import MLMCConfig
+from repro.core.robust_train import (
+    DynaBROConfig, make_dynabro_scan_fn, run_dynabro_scan,
+)
+from repro.core.switching import get_switcher
+from repro.models.zoo import make_zoo_task
+from repro.optim.optimizers import sgd
+
+M, UB, SEQ, D_MODEL, J_CAP = 8, 1, 16, 64, 3
+
+
+def _time(fn, iters: int):
+    fn()  # warmup: compiles + populates the jit cache
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(jax.tree.leaves(out[0]))
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def _temp_bytes(scan_fn, carry, xs) -> int:
+    return scan_fn.lower(carry, xs).compile().memory_analysis() \
+        .temp_size_in_bytes
+
+
+def run(T: int, iters: int):
+    task, cfg = make_zoo_task("smollm-360m", seq_len=SEQ, d_model=D_MODEL,
+                              unit_batch=UB)
+    dcfg = DynaBROConfig(
+        mlmc=MLMCConfig(T=T, m=M, V=3.0, kappa=1.0, j_cap=J_CAP),
+        aggregator="cwtm", delta=0.3, attack="sign_flip")
+    opt = sgd(0.05)
+    sampler = task.make_sampler(M)
+    fn_stacked = make_dynabro_scan_fn(task.grad_fn, dcfg, opt)
+    fn_mb = make_dynabro_scan_fn(task.grad_fn, dcfg, opt, microbatch=True)
+
+    def drive(fn, microbatch):
+        sw = get_switcher("periodic", M, n_byz=2, K=4)
+        return run_dynabro_scan(task.grad_fn, task.params0, opt, dcfg, sw,
+                                sampler, T, seed=3, scan_fn=fn,
+                                microbatch=microbatch)
+
+    # both paths must agree (fp tolerance: summation order differs) before
+    # either is timed or measured
+    p_st = drive(fn_stacked, False)[0]
+    p_mb = drive(fn_mb, True)[0]
+    for a, b in zip(jax.tree.leaves(p_st), jax.tree.leaves(p_mb)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+    us_st = _time(lambda: drive(fn_stacked, False), iters)
+    us_mb = _time(lambda: drive(fn_mb, True), iters)
+
+    # lower the T-round segment exactly as the driver shapes it
+    n_max = 2 ** J_CAP
+    carry = (task.params0, opt.init(task.params0))
+    xs = (jnp.ones((T,), jnp.int32),
+          {"tokens": jnp.zeros((T, M, n_max, UB, SEQ), jnp.int32),
+           "labels": jnp.zeros((T, M, n_max, UB, SEQ), jnp.int32)},
+          jnp.zeros((T, n_max, M), bool),
+          jnp.zeros((T, 2), jnp.uint32))
+    mem_st = _temp_bytes(fn_stacked, carry, xs)
+    mem_mb = _temp_bytes(fn_mb, carry, xs)
+    d = sum(l.size for l in jax.tree.leaves(task.params0))
+    stack_bytes = M * n_max * d * 4  # one full (m, n_max, d) f32 grad stack
+    assert mem_mb < stack_bytes, (
+        f"microbatched segment temp bytes {mem_mb} >= one (m, n_max, d) "
+        f"stack {stack_bytes} — the streaming path materialized the stack")
+    return us_st, us_mb, mem_st, mem_mb, stack_bytes
+
+
+def main(fast: bool = False):
+    T = 8 if fast else 16
+    iters = 2 if fast else 3
+    us_st, us_mb, mem_st, mem_mb, stack = run(T, iters)
+    return [
+        f"model_zoo/scan_T{T},{us_st:.0f},rounds_per_s={T / us_st * 1e6:.1f}",
+        f"model_zoo/microbatch_T{T},{us_mb:.0f},"
+        f"rounds_per_s={T / us_mb * 1e6:.1f}",
+        f"model_zoo/stacked_mem,{mem_st / 1e6:.1f},"
+        f"vs_stack={mem_st / stack:.2f}x",
+        f"model_zoo/microbatch_mem,{mem_mb / 1e6:.1f},"
+        f"vs_stack={mem_mb / stack:.2f}x",
+    ]
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -53,6 +53,11 @@ GATES = [
     # combine + trimmed reduce + pairwise in ONE dispatch, gradient stack
     # streamed once, vs the same outputs as three kernel calls (~2.5x dev)
     ("aggregators/fused_onepass_kernel", "vs_split", 1.5, ">="),
+    # unified model-zoo driver, microbatched streaming (DESIGN.md §9): the
+    # compiled segment's temp bytes must stay under ONE full (m, n_max, d)
+    # f32 per-worker gradient stack — the no-materialization contract
+    # (~0.55x dev; the stacked path sits at ~1.6x)
+    ("model_zoo/microbatch_mem", "vs_stack", 1.0, "<="),
 ]
 
 

@@ -22,6 +22,7 @@ MODULES = [
     "benchmarks.bench_mlmc",           # Lemma 3.1
     "benchmarks.bench_aggregators",    # kernels micro
     "benchmarks.bench_scan_driver",    # compiled vs Python-loop driver
+    "benchmarks.bench_model_zoo",      # unified zoo driver + memory gate
     "benchmarks.bench_momentum_fails",  # Fig 3/4 (App. E)
     "benchmarks.bench_periodic",       # Fig 1/5
     "benchmarks.bench_bernoulli",      # Fig 2/8

@@ -30,4 +30,11 @@ def get_config(arch_id: str) -> ModelConfig:
     return importlib.import_module(_ARCH_MODULES[arch_id]).CONFIG
 
 
-__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "ARCH_IDS", "get_config", "reduced"]
+def get_reduced_config(arch_id: str, **kw) -> ModelConfig:
+    """``reduced(get_config(arch_id), **kw)`` — the model-zoo entry point
+    (``models.zoo.make_zoo_task``) and the one-stop smoke-test config."""
+    return reduced(get_config(arch_id), **kw)
+
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "ARCH_IDS", "get_config",
+           "get_reduced_config", "reduced"]

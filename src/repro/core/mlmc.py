@@ -103,19 +103,23 @@ def tree_norm(tree) -> jax.Array:
                         for l in jax.tree.leaves(tree)))
 
 
-def mlmc_combine(g0, gjm1, gj, j: int, cfg: MLMCConfig, threshold=None):
+def mlmc_combine(g0, gjm1, gj, j: int, cfg: MLMCConfig, threshold=None,
+                 norm_fn=None):
     """Combine aggregated level gradients into the MLMC estimate.
 
     g0/gjm1/gj: pytrees (aggregated gradients at batch sizes 1, 2^{j-1}, 2^j).
     ``j`` is static (host-sampled). Returns (g, info dict). ``threshold``
     overrides ``cfg.threshold(j)`` — the lane-batched sweep passes a traced
     per-lane bound there, because lanes mixing MFM with (δ,κ)-robust rules
-    differ in the fail-safe constant c_E (DESIGN.md §7)."""
+    differ in the fail-safe constant c_E (DESIGN.md §7). ``norm_fn``
+    overrides ``tree_norm`` on the correction — Mode B passes a psum-based
+    global norm there, because inside its partial-manual region each device
+    only holds a worker-sharded slice of the diff tree."""
     if j > cfg.j_max or gj is None:
         info = {"level": j, "failsafe_ok": jnp.array(True), "corr_norm": jnp.zeros(())}
         return g0, info
     diff = jax.tree.map(lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32), gj, gjm1)
-    dn = tree_norm(diff)
+    dn = (norm_fn or tree_norm)(diff)
     if threshold is None:
         threshold = cfg.threshold(j)
     ok = dn <= threshold if cfg.use_failsafe else jnp.array(True)

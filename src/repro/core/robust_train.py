@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 import warnings
 from typing import Any, Callable, Dict, Mapping, Optional, Sequence
 
@@ -104,20 +105,18 @@ def _aggregate(cfg: DynaBROConfig, stacked, n: int, lane_agg=None):
     return agg.tree(stacked)
 
 
-def _combine_levels(cfg: DynaBROConfig, grads, j: int, lane_agg=None,
-                    lane_thr=None):
-    """Aggregate the attacked (m, n, ...) stack at levels 0 / J-1 / J and
-    apply the MLMC combine — the one round body shared by the per-level
-    jitted step and every ``lax.switch`` branch of the scan driver, so the
-    two cannot diverge. ``j`` and the leaf batch size n are static.
+def _combine_from_levels(cfg: DynaBROConfig, g0_stack, gh, gbar_all, n: int,
+                         j: int, lane_agg=None, lane_thr=None):
+    """Aggregate the per-worker level means and apply the MLMC combine — the
+    shared tail of ``_combine_levels`` (which feeds it slices of the stacked
+    (m, n, ...) grads) and the microbatched scan branches (which feed it
+    streamed accumulator means, DESIGN.md §9). g0_stack / gh / gbar_all are
+    (m, ...) trees: each worker's level-0 unit, first-half mean and full
+    mean; ``gh`` may be None whenever the MLMC branch below is dead.
     ``lane_thr`` is the per-lane fail-safe coefficient (1+√2)·c_E·C·V of the
     aggregator-lane sweep — c_E depends on the lane's rule (MFM is Option
     2), so it travels as data next to the lane's (agg_id, theta)."""
-    n = jax.tree.leaves(grads)[0].shape[1]
-    gbar_all = jax.tree.map(lambda l: l.mean(1), grads)  # level j: mean of n
-    g0_stack = jax.tree.map(lambda l: l[:, 0], grads)  # level 0: first sample
     if cfg.use_mlmc and j >= 1 and j <= cfg.mlmc.j_max:
-        gh = jax.tree.map(lambda l: l[:, : n // 2].mean(1), grads)
         if lane_agg is not None:
             # all three levels through ONE rule dispatch: under vmap the
             # agg_switch select executes every branch per lane, so paying it
@@ -141,6 +140,22 @@ def _combine_levels(cfg: DynaBROConfig, grads, j: int, lane_agg=None,
     if not cfg.use_mlmc:  # plain robust SGD on the full mini-batch
         g = _aggregate(cfg, gbar_all, n, lane_agg)
     return g, info
+
+
+def _combine_levels(cfg: DynaBROConfig, grads, j: int, lane_agg=None,
+                    lane_thr=None):
+    """Slice the attacked (m, n, ...) stack into the three level means and
+    combine — the one round body shared by the per-level jitted step and
+    every non-microbatched ``lax.switch`` branch of the scan driver, so the
+    two cannot diverge. ``j`` and the leaf batch size n are static."""
+    n = jax.tree.leaves(grads)[0].shape[1]
+    gbar_all = jax.tree.map(lambda l: l.mean(1), grads)  # level j: mean of n
+    g0_stack = jax.tree.map(lambda l: l[:, 0], grads)  # level 0: first sample
+    gh = None
+    if cfg.use_mlmc and j >= 1 and j <= cfg.mlmc.j_max:
+        gh = jax.tree.map(lambda l: l[:, : n // 2].mean(1), grads)
+    return _combine_from_levels(cfg, g0_stack, gh, gbar_all, n, j,
+                                lane_agg=lane_agg, lane_thr=lane_thr)
 
 
 def make_dynabro_step(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer):
@@ -428,11 +443,17 @@ def _check_scan_fn_mesh(scan_fn, mesh) -> None:
             f"mesh={mesh}; rebuild the scan_fn with the same mesh")
 
 
-def _check_worker_mesh(mesh, worker_axis: str, m: int) -> None:
-    if tuple(mesh.axis_names) != (worker_axis,):
+def _check_worker_mesh(mesh, worker_axis: str, m: int,
+                       allow_model: bool = True) -> None:
+    axes = tuple(mesh.axis_names)
+    allowed = ((worker_axis,), (worker_axis, "model")) if allow_model \
+        else ((worker_axis,),)
+    if axes not in allowed:
+        want = f"1-axis ({worker_axis!r},)" + (
+            f" or 2-axis ({worker_axis!r}, 'model')" if allow_model else "")
         raise ValueError(
-            f"sharded driver needs a 1-axis ({worker_axis!r},) mesh, got "
-            f"axes {tuple(mesh.axis_names)} (see launch.mesh.make_worker_mesh)")
+            f"sharded driver needs a {want} mesh, got "
+            f"axes {axes} (see launch.mesh.make_worker_mesh)")
     n_dev = mesh.shape[worker_axis]
     if m % n_dev:
         raise ValueError(
@@ -452,7 +473,8 @@ def _segment_bounds(T: int, eval_every: int, chunk: int):
 def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer,
                          *, mesh=None, worker_axis: str = "workers",
                          lane_attacks: Optional[Sequence[str]] = None,
-                         lane_aggregators: Optional[Sequence[str]] = None):
+                         lane_aggregators: Optional[Sequence[str]] = None,
+                         param_specs=None, microbatch: bool = False):
     """Build the compiled DynaBRO round loop (DESIGN.md §5, §7).
 
     Returns a jitted ``seg((params, opt_state), xs)`` running ``lax.scan``
@@ -488,12 +510,44 @@ def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer,
     absent one). The MLMC level switch is untouched (its index stays scalar
     and shared across lanes). Both are mutually exclusive with ``mesh`` —
     sweeps run unsharded (DESIGN.md §7).
+
+    A **2-axis** ``(workers, 'model')`` mesh selects the model-zoo GSPMD path
+    instead (DESIGN.md §9): no shard_map — the segment jits as-is and
+    ``with_sharding_constraint`` pins params / batches / the per-worker grad
+    stacks, letting GSPMD compose the worker axis with FSDP+model parameter
+    sharding (``param_specs``, a PartitionSpec tree over the param structure
+    from ``launch.sharding.plan_params``; None = replicated params, worker
+    sharding on the stacks only). On a mesh whose axes are all size 1 the
+    constraints are skipped entirely, so the traced graph — and hence the
+    result — is bitwise-identical to ``mesh=None`` by construction, exactly
+    like the 1-axis path's skipped gather.
+
+    ``microbatch`` streams each level-j round's 2^j units through a
+    ``lax.scan`` grad-accumulation loop instead of materializing the
+    (m, 2^j, ...) per-worker gradient stack: per unit k the (m, ...) worker
+    grads are computed, attacked (same ``fold_in(key, k)`` keying) and summed
+    into three f32 accumulators (level-0 snapshot, first-half sum, full sum)
+    whose means feed the identical combine tail (``_combine_from_levels``).
+    Summation order differs from the stacked path, so microbatched runs are
+    *not* bitwise against non-microbatched ones — the parity contract is
+    microbatched-sharded == microbatched-unsharded. Incompatible with the
+    lane axes (sweeps materialize by design).
     """
     if (lane_attacks is not None or lane_aggregators is not None) \
             and mesh is not None:
         raise ValueError(
             "lane_attacks/lane_aggregators are for the vmapped sweep, which "
             "runs unsharded; drop mesh= (DESIGN.md §7)")
+    if microbatch and (lane_attacks is not None
+                       or lane_aggregators is not None):
+        raise ValueError(
+            "microbatch streaming is not supported on the lane-batched sweep "
+            "variant (DESIGN.md §9); drop lane_attacks/lane_aggregators")
+    gspmd = mesh is not None and "model" in mesh.axis_names
+    if param_specs is not None and not gspmd:
+        raise ValueError(
+            "param_specs only applies to the 2-axis (workers, 'model') GSPMD "
+            "path; the 1-axis shard_map path replicates params (DESIGN.md §9)")
     if mesh is not None:
         # inside the manual shard_map region the size dispatch must never
         # pick an interpret-mode pallas kernel (the legacy lowering cannot
@@ -503,12 +557,60 @@ def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer,
             cfg, agg_backend=agg_engine.resolve_backend(cfg.agg_backend))
     j_max = cfg.mlmc.j_max
     n_max = 2 ** j_max if cfg.use_mlmc else 1
-    gather = _worker_gather(mesh, worker_axis)
+    gather = None if gspmd else _worker_gather(mesh, worker_axis)
+    constrain = _gspmd_constraints(mesh, worker_axis, param_specs) \
+        if gspmd else None
+    atk_one = (attacks_lib.get_attack(cfg.attack, **(cfg.attack_kwargs or {}))
+               if microbatch else None)
     atk_apply = (attacks_lib.attack_switch(tuple(lane_attacks))
                  if lane_attacks is not None else None)
     agg_apply = (agg_engine.agg_switch(tuple(lane_aggregators),
                                        backend=cfg.agg_backend, mlmc=cfg.mlmc)
                  if lane_aggregators is not None else None)
+
+    def _stream_levels(b, params, masks, key, n: int, j: int):
+        """Microbatched round body (DESIGN.md §9): stream the n units through
+        a grad-accumulation scan instead of materializing the (m, n, ...)
+        stack. Three f32 accumulators — the level-0 snapshot (unit k=0), the
+        first-half sum and the full sum — replace the three prefix slices of
+        ``_combine_levels``; their means (cast back to the grad dtype, so the
+        scan carry dtype is stable) feed the identical combine tail."""
+        m = masks.shape[1]
+        mlmc_live = cfg.use_mlmc and 1 <= j <= j_max
+        bs = jax.tree.map(lambda l: jnp.swapaxes(l, 0, 1), b)  # (n, m[_l], ..)
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros((m,) + p.shape, jnp.float32), params)
+        if constrain is not None:
+            zeros = constrain.stack(zeros, lead=1)
+
+        def unit(accs, x):
+            bk, mk, k = x
+            g = jax.vmap(grad_fn, in_axes=(None, 0))(params, bk)  # (m[_l], ..)
+            if gather is not None:
+                g = gather(g)
+            if constrain is not None:
+                g = constrain.stack(g, lead=1)
+            g = atk_one(g, mk, key=jax.random.fold_in(key, k))
+            g32 = jax.tree.map(lambda l: l.astype(jnp.float32), g)
+            a0, ah, aa = accs
+            a0 = jax.tree.map(lambda a, v: jnp.where(k == 0, v, a), a0, g32)
+            if ah is not None:
+                ah = jax.tree.map(
+                    lambda a, v: jnp.where(k < n // 2, a + v, a), ah, g32)
+            aa = jax.tree.map(lambda a, v: a + v, aa, g32)
+            return (a0, ah, aa), ()
+
+        accs0 = (zeros, zeros if mlmc_live else None, zeros)
+        (a0, ah, aa), _ = jax.lax.scan(
+            unit, accs0, (bs, masks[:n], jnp.arange(n)))
+
+        def mean(t, c):
+            return jax.tree.map(lambda l, p: (l / c).astype(p.dtype),
+                                t, params)
+
+        g0_stack = jax.tree.map(lambda l, p: l.astype(p.dtype), a0, params)
+        gh = mean(ah, n // 2) if mlmc_live else None
+        return _combine_from_levels(cfg, g0_stack, gh, mean(aa, n), n, j)
 
     def level_branch(j: int):
         n = 2 ** j if (cfg.use_mlmc and 1 <= j <= j_max) else 1
@@ -519,9 +621,16 @@ def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer,
             lane_agg = None if agg_apply is None else (agg_apply, *agg[:2])
             lane_thr = None if agg_apply is None else agg[2]
             b = level_prefix(batches, n, n_max, axis=1)
+            if constrain is not None:
+                b = constrain.batch(b)
+            if microbatch:
+                g, info = _stream_levels(b, params, masks, key, n, j)
+                return g, info["failsafe_ok"], info["corr_norm"]
             grads = _per_worker_grads(grad_fn, params, b)  # (m[_local], n, ...)
             if gather is not None:
                 grads = gather(grads)  # (m, n, ...) in worker order
+            if constrain is not None:
+                grads = constrain.stack(grads, lead=2)
             grads = _attack_stack(cfg, grads, masks[:n], key, lane_attack=lane)
             g, info = _combine_levels(cfg, grads, j, lane_agg=lane_agg,
                                       lane_thr=lane_thr)
@@ -534,6 +643,8 @@ def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer,
 
     def body(carry, xs, atk=None, agg=None):
         params, opt_state = carry
+        if constrain is not None:
+            params = constrain.params(params)
         level, batches, masks, key = xs
         operand = (params, batches, masks, key, atk, agg)
         if cfg.use_mlmc:
@@ -561,7 +672,9 @@ def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer,
     def seg(carry, xs):
         return jax.lax.scan(body, carry, xs)
 
-    if mesh is None:
+    if mesh is None or gspmd:
+        # GSPMD path: no shard_map — the in-graph with_sharding_constraint
+        # pins (or, on an all-size-1 mesh, their absence) are the whole story
         jitted = jax.jit(seg)
     else:
         jitted = jax.jit(_shard_seg(
@@ -570,6 +683,7 @@ def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer,
     # tag the build mode so the drivers can reject a mismatched prebuilt fn
     # (an unsharded scan_fn passed with mesh= would silently run unsharded)
     jitted.worker_mesh = mesh
+    jitted.microbatch = microbatch
     return jitted
 
 
@@ -612,6 +726,88 @@ def _shard_seg(seg, mesh, worker_axis: str, xs_batch_axes):
         axis_names={worker_axis}, check_vma=False)
 
 
+class _GspmdConstraints:
+    """``with_sharding_constraint`` pins for the 2-axis GSPMD zoo path
+    (DESIGN.md §9). Unlike the 1-axis path's manual shard_map, nothing here
+    rewrites the computation — the segment jits as-is and these pins only
+    tell GSPMD where the parallelism lives: params per their per-leaf
+    ``launch.sharding.plan_params`` specs, batches and per-worker grad
+    stacks split over the worker axis. Everything else (optimizer state,
+    aggregates, the update) is left to GSPMD propagation."""
+
+    def __init__(self, mesh, worker_axis: str, param_specs):
+        self.mesh = mesh
+        self.worker_axis = worker_axis
+        self.param_specs = param_specs
+
+    def _pin(self, leaf, spec):
+        from jax.sharding import NamedSharding
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(self.mesh, spec))
+
+    def _specs_for(self, tree):
+        """param_specs leaves aligned to ``tree``'s leaves (PartitionSpec is
+        a registered pytree *leaf*, so flatten_up_to stops at each spec)."""
+        return jax.tree.structure(tree).flatten_up_to(self.param_specs)
+
+    def params(self, tree):
+        """Pin params to their full FSDP/model specs; no-op when replicated."""
+        if self.param_specs is None:
+            return tree
+        td = jax.tree.structure(tree)
+        return jax.tree.unflatten(
+            td, [self._pin(l, s)
+                 for l, s in zip(jax.tree.leaves(tree), self._specs_for(tree))])
+
+    def stack(self, tree, lead: int):
+        """Pin a worker-stacked tree — leading (m,) (lead=1) or (m, n)
+        (lead=2) axes, m split over the worker axis. Of the param dims only
+        'model' entries survive: the FSDP entry IS the worker axis, already
+        spent on the leading m dim, and a mesh axis cannot appear twice in
+        one PartitionSpec."""
+        from jax.sharding import PartitionSpec as P
+        if self.param_specs is None:
+            spec = P(self.worker_axis)
+            return jax.tree.map(lambda l: self._pin(l, spec), tree)
+        td = jax.tree.structure(tree)
+        out = []
+        for l, s in zip(jax.tree.leaves(tree), self._specs_for(tree)):
+            tail = tuple(e if e == "model" else None for e in tuple(s))
+            out.append(self._pin(
+                l, P(self.worker_axis, *((None,) * (lead - 1)), *tail)))
+        return jax.tree.unflatten(td, out)
+
+    def batch(self, tree):
+        """Pin per-round batches: the leading (m,) worker dim split."""
+        from jax.sharding import PartitionSpec as P
+        spec = P(self.worker_axis)
+        return jax.tree.map(lambda l: self._pin(l, spec), tree)
+
+    def put_params(self, tree):
+        """Host-side companion to ``params``: place the initial params per
+        their specs before the first segment call, so entry into the jitted
+        segment starts from the sharded layout instead of committing a fully
+        replicated copy first."""
+        from jax.sharding import NamedSharding
+        if self.param_specs is None:
+            return tree
+        td = jax.tree.structure(tree)
+        return jax.tree.unflatten(
+            td, [jax.device_put(l, NamedSharding(self.mesh, s))
+                 for l, s in zip(jax.tree.leaves(tree), self._specs_for(tree))])
+
+
+def _gspmd_constraints(mesh, worker_axis: str, param_specs):
+    """The GSPMD pin hook, or None on an all-size-1 mesh: with every
+    constraint skipped the traced graph is *identical* to ``mesh=None``,
+    which is what makes the (1, 1)-mesh parity contract bitwise by
+    construction (DESIGN.md §9) — the GSPMD analog of ``_worker_gather``
+    returning None for a 1-device mesh."""
+    if math.prod(list(mesh.shape.values())) == 1:
+        return None
+    return _GspmdConstraints(mesh, worker_axis, param_specs)
+
+
 def run_dynabro_scan(
     grad_fn: GradFn,
     params,
@@ -628,6 +824,8 @@ def run_dynabro_scan(
     vectorize_batches: bool = True,
     mesh=None,
     worker_axis: str = "workers",
+    param_specs=None,
+    microbatch: bool = False,
 ):
     """Compiled drop-in for ``run_dynabro``: same signature, same returns,
     round-for-round equivalent schedules (level RNG stream, switching masks,
@@ -645,6 +843,15 @@ def run_dynabro_scan(
     the rest of the round body replicated after a worker all_gather — bitwise
     identical on a 1-device mesh, and the schedule precompute is unchanged
     (DESIGN.md §7). Requires ``switcher.m`` divisible by the mesh axis size.
+
+    A 2-axis ``(workers, 'model')`` mesh takes the model-zoo GSPMD path
+    instead, with ``param_specs`` (the PartitionSpec tree from
+    ``launch.sharding.plan_params``) sharding the parameters FSDP-style over
+    the worker axis and tensor-style over 'model'; ``microbatch`` streams
+    each round's MLMC units through a grad-accumulation scan so no full
+    (m, 2^j, ...) gradient stack is ever materialized (DESIGN.md §9). Both
+    forward to ``make_dynabro_scan_fn`` — see its docstring for the parity
+    contracts.
     """
     if mesh is not None:
         _check_worker_mesh(mesh, worker_axis, switcher.m)
@@ -656,13 +863,24 @@ def run_dynabro_scan(
                     f"{getattr(scan_fn, lane_kind)!r}; that variant is for "
                     f"run_dynabro_scan_sweep(...), not run_dynabro_scan")
         _check_scan_fn_mesh(scan_fn, mesh)
+        have_mb = getattr(scan_fn, "microbatch", microbatch)
+        if have_mb != microbatch:
+            raise ValueError(
+                f"scan_fn was built with microbatch={have_mb}, but this run "
+                f"passes microbatch={microbatch}; rebuild the scan_fn to "
+                "match (the two paths are not bitwise-equivalent)")
     if T <= 0:
         return params, [], []
     levels, ns, n_max = _level_plan(cfg, np.random.default_rng(seed), T)
     masks = _mask_schedule(switcher, T, n_max, ns)
     keys = _np_prng_keys(seed * 100_003 + np.arange(T, dtype=np.int64))
-    scan_fn = scan_fn or make_dynabro_scan_fn(grad_fn, cfg, opt, mesh=mesh,
-                                              worker_axis=worker_axis)
+    scan_fn = scan_fn or make_dynabro_scan_fn(
+        grad_fn, cfg, opt, mesh=mesh, worker_axis=worker_axis,
+        param_specs=param_specs, microbatch=microbatch)
+    if mesh is not None and "model" in mesh.axis_names:
+        pin = _gspmd_constraints(mesh, worker_axis, param_specs)
+        if pin is not None:
+            params = pin.put_params(params)
     carry = (params, opt.init(params))
     masks_dev, keys_dev = jnp.asarray(masks), jnp.asarray(keys)
     levels_dev = jnp.asarray(levels)
@@ -688,8 +906,14 @@ def make_momentum_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, lr: float,
                           worker_axis: str = "workers"):
     """Compiled worker-momentum baseline loop: the shared round body of
     ``make_momentum_step``, scanned over (batches, masks, keys) schedules.
-    ``mesh`` shards the per-worker gradient vmap across devices exactly as in
-    ``make_dynabro_scan_fn`` (worker momenta stay replicated)."""
+    ``mesh`` (1-axis only — the 2-axis GSPMD zoo path is DynaBRO-only,
+    DESIGN.md §9) shards the per-worker gradient vmap across devices exactly
+    as in ``make_dynabro_scan_fn`` (worker momenta stay replicated)."""
+    if mesh is not None and "model" in mesh.axis_names:
+        raise ValueError(
+            "momentum scan driver supports only 1-axis worker meshes; the "
+            "2-axis (workers, 'model') GSPMD path is DynaBRO-only "
+            "(DESIGN.md §9)")
     if mesh is not None:
         # same backend freeze as make_dynabro_scan_fn: no interpret-mode
         # pallas inside the manual shard_map region
@@ -733,9 +957,10 @@ def run_momentum_scan(
     worker_axis: str = "workers",
 ):
     """Compiled drop-in for ``run_momentum`` (same signature + chunking).
-    ``mesh`` runs it sharded over the worker axis (DESIGN.md §7)."""
+    ``mesh`` runs it sharded over the worker axis (1-axis meshes only,
+    DESIGN.md §7)."""
     if mesh is not None:
-        _check_worker_mesh(mesh, worker_axis, switcher.m)
+        _check_worker_mesh(mesh, worker_axis, switcher.m, allow_model=False)
     if scan_fn is not None:
         _check_scan_fn_mesh(scan_fn, mesh)
     if T <= 0:

@@ -288,3 +288,19 @@ def tree_sq_norm(grads, plans_full: dict, axis_names) -> jax.Array:
         else:
             sq_repl = sq_repl + s
     return lax.psum(sq_sharded, axis_names) + sq_repl
+
+
+def make_global_norm(plans: dict, axis_names):
+    """``norm_fn`` for ``mlmc.mlmc_combine`` inside the Mode-B manual region:
+    the global ℓ2 norm of a worker-sharded gradient tree, assembled with one
+    scalar psum over the worker axes (``tree_sq_norm``). ``plans`` is the
+    plan tree from ``launch.sharding.plan_params`` ({'top': ..., 'blocks':
+    ...}); the flattened full-tree plan is rebuilt here so every caller
+    shares one layout convention."""
+    plans_full = {k: v for k, v in plans["top"].items()}
+    plans_full["blocks"] = plans["blocks"]
+
+    def norm(diff):
+        return jnp.sqrt(tree_sq_norm(diff, plans_full, axis_names))
+
+    return norm

@@ -34,7 +34,11 @@ class SyntheticLMData:
         return jnp.where(copy, rolled, base) % self.vocab_size
 
     def batch(self, step: int, batch: int | None = None) -> dict:
-        batch = batch or self.global_batch
+        # `batch or global_batch` would silently promote an explicit 0
+        if batch is None:
+            batch = self.global_batch
+        if batch <= 0:
+            raise ValueError(f"batch must be positive, got {batch}")
         key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
         toks = self._tokens(key, batch)
         labels = jnp.roll(toks, -1, axis=1)
@@ -45,6 +49,30 @@ class SyntheticLMData:
             jax.random.fold_in(jax.random.PRNGKey(self.seed), step), worker)
         toks = self._tokens(key, batch)
         return {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+
+    def mlmc_batches(self, step, m: int, n: int, unit_batch: int) -> dict:
+        """(m, n, unit_batch, S) token/label trees for one DynaBRO round.
+
+        Unit (w, k) is keyed on ``fold_in(fold_in(fold_in(seed, step), w), k)``
+        — a pure function of (step, worker, within-round index), so the
+        level-(j−1) mini-batch is the prefix of the level-j one (the MLMC
+        nesting, DESIGN.md §3) and the sampler is traceable in ``step``, which
+        lets ``run_dynabro_scan`` vectorize the whole batch schedule."""
+        if unit_batch <= 0:
+            raise ValueError(f"unit_batch must be positive, got {unit_batch}")
+        base = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+
+        def unit(w, k):
+            kk = jax.random.fold_in(jax.random.fold_in(base, w), k)
+            return self._tokens(kk, unit_batch)
+
+        toks = jax.vmap(lambda w: jax.vmap(lambda k: unit(w, k))(
+            jnp.arange(n)))(jnp.arange(m))
+        return {"tokens": toks, "labels": jnp.roll(toks, -1, axis=3)}
+
+    def mlmc_sampler(self, m: int, unit_batch: int = 1):
+        """``sample_batches(t, n)`` closure for the DynaBRO drivers."""
+        return lambda t, n: self.mlmc_batches(t, m, n, unit_batch)
 
 
 def gaussian_mixture_dataset(n_classes: int, dim: int, n: int, seed: int = 0,

@@ -69,12 +69,29 @@ def worker_iota(m: int):
     return jnp.arange(m, dtype=jnp.float32)
 
 
-def make_worker_mesh(n_devices: int = 0, axis: str = "workers"):
-    """1-D mesh laying DynaBRO workers across devices — the substrate of the
-    sharded compiled driver (DESIGN.md §7). ``n_devices=0`` uses every device;
+def make_worker_mesh(n_devices: int = 0, axis: str = "workers",
+                     model: int = 0):
+    """Worker mesh for the sharded compiled driver (DESIGN.md §7, §9).
+
+    ``model=0`` (default) builds the 1-D ``(workers,)`` mesh of the
+    fully-manual shard_map path; ``n_devices=0`` uses every device and
     ``n_devices=1`` gives the parity-contract mesh (bitwise-identical to the
-    unsharded driver)."""
+    unsharded driver).
+
+    ``model>=1`` builds the 2-axis ``(workers, model)`` mesh of the model-zoo
+    GSPMD path: ``n_devices`` (0 = whatever the model axis leaves over)
+    counts the *worker*-axis size, and the per-leaf FSDP/model partition
+    rules of ``launch.sharding.plan_params`` apply unchanged (the worker
+    axis doubles as the FSDP axis, exactly like Mode B's 'data'). A
+    ``(1, 1)`` mesh is the parity-contract mesh of this path."""
     devs = jax.devices()
+    if model:
+        n = n_devices or max(1, len(devs) // model)
+        if n * model > len(devs):
+            raise ValueError(
+                f"requested {n}x{model} devices, have {len(devs)}")
+        return jax.make_mesh((n, model), (axis, "model"),
+                             devices=devs[: n * model])
     n = n_devices or len(devs)
     if n > len(devs):
         raise ValueError(f"requested {n} devices, have {len(devs)}")

@@ -126,6 +126,71 @@ def named(mesh: Mesh, spec_tree):
                         is_leaf=lambda x: isinstance(x, P))
 
 
+def strip_model(spec_tree):
+    """Drop the 'model' entries of a spec tree — shard_map regions manual
+    over the worker axes only may not mention the auto 'model' axis in their
+    in/out_specs (the Mode-B partial-manual lowering, DESIGN.md §3)."""
+    def strip(s):
+        return P(*[None if e == "model" else e for e in s])
+    return jax.tree.map(strip, spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_specs(opt_state_shapes, param_specs):
+    """Optimizer-state specs: mirror the param specs for param-shaped state
+    (momentum/adam), replicate scalars, empty for stateless SGD."""
+    state = opt_state_shapes
+    if isinstance(state, tuple) and not state:  # sgd
+        return ()
+    if isinstance(state, dict) and set(state) == {"m", "v", "t"}:  # adam
+        return {"m": param_specs, "v": param_specs, "t": P()}
+    pstruct = jax.tree_util.tree_structure(param_specs,
+                                           is_leaf=lambda x: isinstance(x, P))
+    try:
+        if jax.tree_util.tree_structure(state) == pstruct:  # momentum
+            return param_specs
+    except Exception:
+        pass
+    return jax.tree.map(lambda _: P(), state)  # adagrad-norm scalar etc.
+
+
+def sds(shape, dtype, mesh: Mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def sds_tree(shapes, specs, mesh: Mesh):
+    """ShapeDtypeStructs with NamedShardings for an abstract tree + specs."""
+    flat_sh, treedef = jax.tree_util.tree_flatten(shapes)
+    flat_sp = treedef.flatten_up_to(specs)
+    return jax.tree_util.tree_unflatten(
+        treedef, [sds(a.shape, a.dtype, mesh, s)
+                  for a, s in zip(flat_sh, flat_sp)])
+
+
+def batch_sds(cfg: ModelConfig, mesh: Mesh, global_batch: int, seq_len: int,
+              *, kind: str = "train", dtype=jnp.bfloat16):
+    """(specs, example) for the input batch — the ONE builder both Mode-B
+    step builders draw their batch specs and example ShapeDtypeStructs from,
+    so the family-dependent ``extra`` leaves (audio frames / vlm patches)
+    cannot drift between them again (the PR-7 bug: ``build_mlmc_train_step``
+    dropped them and could not run the whisper/vision configs)."""
+    spec = batch_specs(cfg, mesh, global_batch, kind)
+    B = global_batch
+    ex = {"tokens": sds((B, seq_len), jnp.int32, mesh, spec["tokens"])}
+    if kind == "train":
+        ex["labels"] = sds((B, seq_len), jnp.int32, mesh, spec["labels"])
+    if "extra" in spec:
+        extra = {}
+        if cfg.family == "audio":
+            extra["frames"] = sds((B, cfg.encoder_seq, cfg.d_model), dtype,
+                                  mesh, spec["extra"]["frames"])
+        if cfg.family == "vlm":
+            extra["patches"] = sds((B, cfg.n_image_tokens, cfg.d_model), dtype,
+                                   mesh, spec["extra"]["patches"])
+        ex["extra"] = extra
+    return spec, ex
+
+
 # --------------------------------------------------------- data & cache
 
 

@@ -38,15 +38,8 @@ from repro.compat import LEGACY_PARTIAL_MANUAL as _LEGACY_PARTIAL_MANUAL
 from repro.optim.optimizers import Optimizer, apply_updates, sgd
 
 
-def _sds(shape, dtype, mesh, spec):
-    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
-
-
-def _strip_model(spec_tree):
-    """shard_map in_specs may only mention manual (worker) axes."""
-    def strip(s):
-        return P(*[None if e == "model" else e for e in s])
-    return jax.tree.map(strip, spec_tree, is_leaf=lambda x: isinstance(x, P))
+# spec/SDS helpers live in launch.sharding now (shared with the scan driver)
+_sds = shl.sds
 
 
 @dataclasses.dataclass
@@ -76,107 +69,106 @@ def _perf_cfg(cfg: ModelConfig, mesh: Mesh) -> ModelConfig:
 # ================================================================ train
 
 
+@dataclasses.dataclass
+class _TrainPlumbing:
+    """Everything the two Mode-B train-step builders share — ONE spec / jit /
+    ShapeDtypeStruct pipeline (DESIGN.md §9), so the plain-DynaBRO and MLMC
+    steps cannot drift again (the old duplicated ~60 lines dropped the
+    audio/vlm ``extra`` batch leaves from the MLMC path)."""
+    cfg: ModelConfig
+    byz: ShardedByzConfig
+    specs: Any
+    plans: dict
+    opt: Optimizer
+    ospecs: Any
+    opt_state_shapes: Any
+    batch_spec: Any
+    batch_ex: Any
+    waxes: Tuple[str, ...]
+    m: int
+    dtype: Any
+
+
+def _train_plumbing(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, *,
+                    level_units: int, aggregator: str, attack: str,
+                    delta: float, opt: Optional[Optimizer], lr: float,
+                    agg_backend: str, dtype) -> _TrainPlumbing:
+    cfg = _perf_cfg(cfg, mesh)
+    waxes = worker_axes(mesh)
+    m = n_workers(mesh)
+    B = shape.global_batch * level_units
+    if B % m:
+        raise ValueError(
+            f"global batch {B} not divisible by m={m} workers — Mode B "
+            f"shards the batch over the worker axes")
+    byz = ShardedByzConfig(axis_names=waxes, m=m, aggregator=aggregator,
+                           delta=delta, attack=attack, backend=agg_backend)
+    specs, plans = shl.plan_params(cfg, mesh, fsdp=True, dtype=dtype)
+    opt = opt or sgd(lr)
+    batch_spec, batch_ex = shl.batch_sds(cfg, mesh, B, shape.seq_len,
+                                         kind="train", dtype=dtype)
+    opt_state_shapes = jax.eval_shape(
+        lambda: opt.init(shl.abstract_params(cfg, dtype)))
+    ospecs = shl.opt_specs(opt_state_shapes, specs)
+    return _TrainPlumbing(cfg, byz, specs, plans, opt, ospecs,
+                          opt_state_shapes, batch_spec, batch_ex, waxes, m,
+                          dtype)
+
+
+def _wrap_train_step(pl: _TrainPlumbing, step_local, mesh: Mesh, aux_spec,
+                     name: str) -> BuiltStep:
+    """shard_map + jit + example-input assembly shared by both builders."""
+    pspecs_manual = shl.strip_model(pl.specs)
+    ospecs_manual = shl.strip_model(pl.ospecs)
+    smapped = shard_map(
+        step_local, mesh=mesh,
+        in_specs=(pspecs_manual, ospecs_manual, pl.batch_spec, P(None),
+                  P(worker_spec(pl.waxes))),
+        out_specs=(pspecs_manual, ospecs_manual, aux_spec),
+        axis_names=set(pl.waxes), check_vma=False)
+
+    def stepped(params, opt_state, batch, maskf):
+        # worker-index iota: sharding over the worker axes hands each device
+        # its own flattened index as data (see core.sharded.make_param_hook)
+        return smapped(params, opt_state, batch, maskf, worker_iota(pl.m))
+
+    jitted = jax.jit(
+        stepped,
+        in_shardings=(shl.named(mesh, pl.specs), shl.named(mesh, pl.ospecs),
+                      shl.named(mesh, pl.batch_spec),
+                      NamedSharding(mesh, P(None))),
+        out_shardings=(shl.named(mesh, pl.specs), shl.named(mesh, pl.ospecs),
+                       None),
+        donate_argnums=(0, 1))
+    params_in = shl.sds_tree(shl.abstract_params(pl.cfg, pl.dtype), pl.specs,
+                             mesh)
+    opt_in = shl.sds_tree(pl.opt_state_shapes, pl.ospecs, mesh)
+    maskf = shl.sds((pl.m,), jnp.float32, mesh, P(None))
+    return BuiltStep(jitted, (params_in, opt_in, pl.batch_ex, maskf), name)
+
+
 def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
                      *, aggregator: str = "cwmed", attack: str = "none",
                      level: int = 0, lr: float = 1e-3, delta: float = 0.25,
                      opt: Optional[Optimizer] = None, agg_backend: str = "auto",
                      dtype=jnp.bfloat16) -> BuiltStep:
-    cfg = _perf_cfg(cfg, mesh)
-    waxes = worker_axes(mesh)
-    m = n_workers(mesh)
-    byz = ShardedByzConfig(axis_names=waxes, m=m, aggregator=aggregator,
-                           delta=delta, attack=attack, backend=agg_backend)
-    specs, plans = shl.plan_params(cfg, mesh, fsdp=True, dtype=dtype)
-    opt = opt or sgd(lr)
-
-    B = shape.global_batch * (2 ** level)
-    S = shape.seq_len
-    wspec = worker_spec(waxes)
+    pl = _train_plumbing(cfg, mesh, shape, level_units=2 ** level,
+                         aggregator=aggregator, attack=attack, delta=delta,
+                         opt=opt, lr=lr, agg_backend=agg_backend, dtype=dtype)
+    cfg = pl.cfg
 
     def step_local(params, opt_state, batch, maskf, widx):
         with scan_compat.unrolled_scans(_LEGACY_PARTIAL_MANUAL):
-            hook = make_param_hook(byz, plans, maskf, widx)
+            hook = make_param_hook(pl.byz, pl.plans, maskf, widx)
             loss, g = jax.value_and_grad(
                 lambda p: loss_fn(p, batch, cfg, param_hook=hook))(params)
-        updates, opt_state = opt.update(g, opt_state, params)
+        updates, opt_state = pl.opt.update(g, opt_state, params)
         params = apply_updates(params, updates)
-        loss = jax.lax.pmean(loss, waxes)
+        loss = jax.lax.pmean(loss, pl.waxes)
         return params, opt_state, loss
 
-    pspecs_manual = _strip_model(specs)
-    batch_spec = {"tokens": P(wspec, None), "labels": P(wspec, None)}
-    extra_spec = {}
-    if cfg.family == "audio":
-        extra_spec["frames"] = P(wspec, None, None)
-    if cfg.family == "vlm":
-        extra_spec["patches"] = P(wspec, None, None)
-    if extra_spec:
-        batch_spec["extra"] = extra_spec
-
-    opt_state_shapes = jax.eval_shape(
-        lambda: opt.init(shl.abstract_params(cfg, dtype)))
-    opt_specs = _opt_specs(opt_state_shapes, specs)
-
-    smapped = shard_map(
-        step_local, mesh=mesh,
-        in_specs=(pspecs_manual, _strip_model(opt_specs), batch_spec, P(None),
-                  P(wspec)),
-        out_specs=(pspecs_manual, _strip_model(opt_specs), P()),
-        axis_names=set(waxes), check_vma=False)
-
-    def stepped(params, opt_state, batch, maskf):
-        # worker-index iota: sharding over the worker axes hands each device
-        # its own flattened index as data (see core.sharded.make_param_hook)
-        return smapped(params, opt_state, batch, maskf, worker_iota(m))
-
-    jitted = jax.jit(
-        stepped,
-        in_shardings=(shl.named(mesh, specs), shl.named(mesh, opt_specs),
-                      shl.named(mesh, batch_spec), NamedSharding(mesh, P(None))),
-        out_shardings=(shl.named(mesh, specs), shl.named(mesh, opt_specs), None),
-        donate_argnums=(0, 1))
-
-    params_in = _sds_tree(shl.abstract_params(cfg, dtype), specs, mesh)
-    opt_in = _sds_tree(opt_state_shapes, opt_specs, mesh)
-    batch = {"tokens": _sds((B, S), jnp.int32, mesh, batch_spec["tokens"]),
-             "labels": _sds((B, S), jnp.int32, mesh, batch_spec["labels"])}
-    if cfg.family == "audio":
-        batch["extra"] = {"frames": _sds((B, cfg.encoder_seq, cfg.d_model), dtype,
-                                         mesh, extra_spec["frames"])}
-    if cfg.family == "vlm":
-        batch["extra"] = {"patches": _sds((B, cfg.n_image_tokens, cfg.d_model), dtype,
-                                          mesh, extra_spec["patches"])}
-    maskf = _sds((m,), jnp.float32, mesh, P(None))
-    return BuiltStep(jitted, (params_in, opt_in, batch, maskf),
-                     f"train[{cfg.arch_id}/{shape.name}/l{level}]")
-
-
-def _opt_specs(opt_state_shapes, param_specs):
-    """Optimizer-state specs: mirror the param specs for param-shaped state
-    (momentum/adam), replicate scalars, empty for stateless SGD."""
-    state = opt_state_shapes
-    if isinstance(state, tuple) and not state:  # sgd
-        return ()
-    if isinstance(state, dict) and set(state) == {"m", "v", "t"}:  # adam
-        return {"m": param_specs, "v": param_specs, "t": P()}
-    pstruct = jax.tree_util.tree_structure(param_specs,
-                                           is_leaf=lambda x: isinstance(x, P))
-    if jax.tree_util.tree_structure(state) == jax.tree_util.tree_structure(
-            jax.tree.map(lambda _: 0, state)):
-        pass
-    try:
-        if jax.tree_util.tree_structure(state) == pstruct:  # momentum
-            return param_specs
-    except Exception:
-        pass
-    return jax.tree.map(lambda _: P(), state)  # adagrad-norm scalar etc.
-
-
-def _sds_tree(shapes, specs, mesh):
-    flat_sh, treedef = jax.tree_util.tree_flatten(shapes)
-    flat_sp = treedef.flatten_up_to(specs)
-    return jax.tree_util.tree_unflatten(
-        treedef, [_sds(a.shape, a.dtype, mesh, s) for a, s in zip(flat_sh, flat_sp)])
+    return _wrap_train_step(pl, step_local, mesh, P(),
+                            f"train[{cfg.arch_id}/{shape.name}/l{level}]")
 
 
 # ================================================================ inference
@@ -198,7 +190,7 @@ def build_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
                                        NamedSharding(mesh, bspec["tokens"]),
                                        shl.named(mesh, bspec.get("extra", {}))),
                      out_shardings=None)
-    params_in = _sds_tree(shl.abstract_params(cfg, dtype), specs, mesh)
+    params_in = shl.sds_tree(shl.abstract_params(cfg, dtype), specs, mesh)
     tokens = _sds((B, S), jnp.int32, mesh, bspec["tokens"])
     extra = {}
     if cfg.family == "audio":
@@ -228,8 +220,8 @@ def build_decode_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
                                        NamedSharding(mesh, P())),
                      out_shardings=None,
                      donate_argnums=(1,))
-    params_in = _sds_tree(shl.abstract_params(cfg, dtype), specs, mesh)
-    cache_in = _sds_tree(cache_shapes, cache_specs, mesh)
+    params_in = shl.sds_tree(shl.abstract_params(cfg, dtype), specs, mesh)
+    cache_in = shl.sds_tree(cache_shapes, cache_specs, mesh)
     token = _sds((B,), jnp.int32, mesh, tok_spec)
     pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
     return BuiltStep(jitted, (params_in, cache_in, token, pos),
@@ -263,80 +255,43 @@ def build_mlmc_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
     """Algorithm 2 at MLMC level J=`level` in Mode B.
 
     One round computes three robust-aggregated gradients from nested slices of
-    a (B·2^J)-sized per-worker batch — levels 0, J−1, J — then applies the
-    MLMC combine guarded by the fail-safe event E_t (Eq. 6). ‖ĝ^J − ĝ^{J−1}‖
-    is a global norm assembled with one scalar psum over the worker axes.
+    a (B·2^J)-sized per-worker batch — levels 0, J−1, J — then applies
+    ``mlmc.mlmc_combine`` guarded by the fail-safe event E_t (Eq. 6), with
+    ‖ĝ^J − ĝ^{J−1}‖ a global norm assembled via one scalar psum over the
+    worker axes (``core.sharded.make_global_norm``). Beyond-cap levels
+    (J > j_max) drop the correction, exactly like the Mode-A drivers.
     """
-    from repro.core.mlmc import level_prefix
-    from repro.core.sharded import tree_sq_norm
+    from repro.core.mlmc import level_prefix, mlmc_combine
+    from repro.core.sharded import make_global_norm
 
-    waxes = worker_axes(mesh)
-    m = n_workers(mesh)
-    byz = ShardedByzConfig(axis_names=waxes, m=m, aggregator=aggregator,
-                           delta=delta, attack=attack, backend=agg_backend)
-    specs, plans = shl.plan_params(cfg, mesh, fsdp=True, dtype=dtype)
-    plans_full = {k: v for k, v in plans["top"].items()}
-    plans_full["blocks"] = plans["blocks"]
-    opt = opt or sgd(lr)
     j = level
-    B = shape.global_batch
-    S = shape.seq_len
-    wspec = worker_spec(waxes)
-
-    def _slice_batch(batch, n_units):
-        # local (per-worker) batch holds (B/m)·2^j rows; level-n slice = prefix
-        return level_prefix(batch, n_units, 2 ** j, axis=0)
+    pl = _train_plumbing(cfg, mesh, shape, level_units=2 ** j,
+                         aggregator=aggregator, attack=attack, delta=delta,
+                         opt=opt, lr=lr, agg_backend=agg_backend, dtype=dtype)
+    cfg = pl.cfg
+    norm_fn = make_global_norm(pl.plans, pl.waxes)
 
     def step_local(params, opt_state, batch, maskf, widx):
         with scan_compat.unrolled_scans(_LEGACY_PARTIAL_MANUAL):
-            hook = make_param_hook(byz, plans, maskf, widx)
+            hook = make_param_hook(pl.byz, pl.plans, maskf, widx)
 
             def agg_grad(b):
-                return jax.grad(lambda p: loss_fn(p, b, cfg, param_hook=hook))(params)
+                # local (per-worker) batch holds (B/m)·2^j rows; the level-n
+                # slice is its nested prefix
+                return jax.grad(
+                    lambda p: loss_fn(p, b, cfg, param_hook=hook))(params)
 
-            g0 = agg_grad(_slice_batch(batch, 1))
-            if j >= 1:
-                gjm1 = agg_grad(_slice_batch(batch, 2 ** (j - 1)))
-                gj = agg_grad(_slice_batch(batch, 2 ** j))
-        if j >= 1:
-            diff = jax.tree.map(lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
-                                gj, gjm1)
-            dn = jnp.sqrt(tree_sq_norm(diff, plans_full, waxes))
-            ok = dn <= mlmc_cfg.threshold(j)
-            scale = jnp.where(ok, 2.0 ** j, 0.0)
-            g = jax.tree.map(lambda a, d: (a.astype(jnp.float32) + scale * d).astype(a.dtype),
-                             g0, diff)
-        else:
-            g, ok, dn = g0, jnp.array(True), jnp.zeros(())
-        updates, opt_state = opt.update(g, opt_state, params)
+            g0 = agg_grad(level_prefix(batch, 1, 2 ** j, axis=0))
+            gjm1 = gj = None
+            if 1 <= j <= mlmc_cfg.j_max:
+                gjm1 = agg_grad(level_prefix(batch, 2 ** (j - 1), 2 ** j,
+                                             axis=0))
+                gj = agg_grad(level_prefix(batch, 2 ** j, 2 ** j, axis=0))
+        g, info = mlmc_combine(g0, gjm1, gj, j, mlmc_cfg, norm_fn=norm_fn)
+        updates, opt_state = pl.opt.update(g, opt_state, params)
         params = apply_updates(params, updates)
-        return params, opt_state, (jax.lax.pmean(ok.astype(jnp.float32), waxes), dn)
+        ok = jax.lax.pmean(info["failsafe_ok"].astype(jnp.float32), pl.waxes)
+        return params, opt_state, (ok, info["corr_norm"])
 
-    pspecs_manual = _strip_model(specs)
-    batch_spec = {"tokens": P(wspec, None), "labels": P(wspec, None)}
-    opt_state_shapes = jax.eval_shape(lambda: opt.init(shl.abstract_params(cfg, dtype)))
-    opt_specs = _opt_specs(opt_state_shapes, specs)
-    smapped = shard_map(
-        step_local, mesh=mesh,
-        in_specs=(pspecs_manual, _strip_model(opt_specs), batch_spec, P(None),
-                  P(wspec)),
-        out_specs=(pspecs_manual, _strip_model(opt_specs), (P(), P())),
-        axis_names=set(waxes), check_vma=False)
-
-    def stepped(params, opt_state, batch, maskf):
-        return smapped(params, opt_state, batch, maskf, worker_iota(m))
-
-    jitted = jax.jit(
-        stepped,
-        in_shardings=(shl.named(mesh, specs), shl.named(mesh, opt_specs),
-                      shl.named(mesh, batch_spec), NamedSharding(mesh, P(None))),
-        out_shardings=(shl.named(mesh, specs), shl.named(mesh, opt_specs), None),
-        donate_argnums=(0, 1))
-    Bj = B * (2 ** j)
-    params_in = _sds_tree(shl.abstract_params(cfg, dtype), specs, mesh)
-    opt_in = _sds_tree(opt_state_shapes, opt_specs, mesh)
-    batch = {"tokens": _sds((Bj, S), jnp.int32, mesh, batch_spec["tokens"]),
-             "labels": _sds((Bj, S), jnp.int32, mesh, batch_spec["labels"])}
-    maskf = _sds((m,), jnp.float32, mesh, P(None))
-    return BuiltStep(jitted, (params_in, opt_in, batch, maskf),
-                     f"mlmc_train[{cfg.arch_id}/{shape.name}/J{j}]")
+    return _wrap_train_step(pl, step_local, mesh, (P(), P()),
+                            f"mlmc_train[{cfg.arch_id}/{shape.name}/J{j}]")

@@ -1,0 +1,85 @@
+"""Model-zoo DynaBRO tasks (DESIGN.md §9).
+
+Wraps a reduced real architecture (any ``configs`` arch id) as a
+``core.scenarios.Task``, so the compiled scan driver runs the zoo through
+the SAME path as the quadratic testbed: ``run_dynabro_scan(make_zoo_task(
+"smollm-360m", ...))`` — with ``mesh=(workers, 'model')``, ``param_specs``
+from ``launch.sharding.plan_params`` and ``microbatch=True`` — is the
+unified Mode-A/Mode-B driver. Unit batches follow the nested-prefix MLMC
+keying of ``SyntheticLMData.mlmc_batches`` (level j−1 is the prefix of
+level j), and audio/vlm families get their ``extra`` leaves from the same
+per-unit key stream, so the nesting property holds for every family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig, get_reduced_config
+from repro.core.scenarios import Task
+from repro.data.pipeline import SyntheticLMData
+from repro.models import init_params, loss_fn
+
+
+def _extra_units(cfg: ModelConfig, key, m: int, n: int, unit_batch: int,
+                 dtype):
+    """(m, n, unit_batch, E, D) encoder inputs for audio/vlm families, keyed
+    ``fold_in(fold_in(key, w), k)`` per unit — the same nested scheme as the
+    token stream, so the MLMC prefix property survives the extra leaves."""
+    if cfg.family == "audio":
+        name, E = "frames", cfg.encoder_seq
+    else:
+        name, E = "patches", cfg.n_image_tokens
+
+    def unit(w, k):
+        kk = jax.random.fold_in(jax.random.fold_in(key, w), k)
+        return jax.random.normal(kk, (unit_batch, E, cfg.d_model), dtype)
+
+    grid = jax.vmap(lambda w: jax.vmap(lambda k: unit(w, k))(jnp.arange(n)))(
+        jnp.arange(m))
+    return {name: grid}
+
+
+def make_zoo_task(arch_id: str, *, seq_len: int = 32, unit_batch: int = 1,
+                  d_model: int = 64, n_layers: int = 2,
+                  dtype=jnp.float32, seed: int = 0):
+    """Returns ``(Task, ModelConfig)`` for a reduced ``arch_id``.
+
+    The Task's ``grad_fn`` is the per-unit ``jax.grad`` of the model's own
+    ``loss_fn``; its ``make_sampler(m)`` draws (m, n, unit_batch, S)
+    token/label (+ family ``extra``) grids traceable in t, so the scan
+    driver vectorizes the batch schedule. The config rides along for
+    ``plan_params`` (the zoo driver's ``param_specs``) and eval plumbing.
+    """
+    cfg = get_reduced_config(arch_id, d_model=d_model, n_layers=n_layers)
+    params0 = init_params(cfg, jax.random.PRNGKey(seed), dtype)
+    data = SyntheticLMData(cfg.vocab_size, seq_len, global_batch=unit_batch,
+                           seed=seed)
+    has_extra = cfg.family in ("audio", "vlm")
+    ekey = jax.random.PRNGKey(seed ^ 0x5EED)
+
+    def grad_fn(params, b):
+        return jax.grad(lambda p: loss_fn(p, b, cfg))(params)
+
+    def make_sampler(m: int):
+        base = data.mlmc_sampler(m, unit_batch)
+
+        def sample(t, n):
+            b = base(t, n)
+            if has_extra:
+                b["extra"] = _extra_units(
+                    cfg, jax.random.fold_in(ekey, t), m, n, unit_batch, dtype)
+            return b
+
+        return sample
+
+    # fixed held-out batch (a step index no training round reaches)
+    eval_b = data.batch(999_983, 4)
+    if has_extra:
+        ex = _extra_units(cfg, jax.random.fold_in(ekey, -1), 1, 1, 4, dtype)
+        eval_b["extra"] = jax.tree.map(lambda l: l[0, 0], ex)
+
+    def objective(p) -> float:
+        return float(loss_fn(p, eval_b, cfg))
+
+    return Task(params0, grad_fn, make_sampler, objective), cfg

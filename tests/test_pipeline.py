@@ -1,0 +1,65 @@
+"""SyntheticLMData contracts: explicit-batch validation (the PR-7
+``batch or global_batch`` bugfix) and the nested-prefix MLMC unit grids the
+model-zoo driver samples from."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import SyntheticLMData
+
+
+def _ds():
+    return SyntheticLMData(vocab_size=64, seq_len=8, global_batch=4, seed=1)
+
+
+def test_batch_none_promotes_to_global():
+    ds = _ds()
+    assert ds.batch(0)["tokens"].shape == (4, 8)
+    assert ds.batch(0, None)["tokens"].shape == (4, 8)
+    assert ds.batch(0, 2)["tokens"].shape == (2, 8)
+
+
+def test_batch_zero_and_negative_raise():
+    # `batch or self.global_batch` silently promoted an explicit 0 to the
+    # global batch; only None may do that
+    ds = _ds()
+    with pytest.raises(ValueError, match="positive"):
+        ds.batch(0, 0)
+    with pytest.raises(ValueError, match="positive"):
+        ds.batch(0, -2)
+
+
+def test_mlmc_batches_nested_prefix():
+    ds = _ds()
+    m, ub = 3, 2
+    b4 = ds.mlmc_batches(5, m, 4, ub)
+    b2 = ds.mlmc_batches(5, m, 2, ub)
+    assert b4["tokens"].shape == (m, 4, ub, 8)
+    # level j-1 is the prefix of level j (the MLMC nesting, DESIGN.md §3)
+    np.testing.assert_array_equal(np.asarray(b4["tokens"][:, :2]),
+                                  np.asarray(b2["tokens"]))
+    np.testing.assert_array_equal(
+        np.asarray(b4["labels"]),
+        np.roll(np.asarray(b4["tokens"]), -1, axis=3))
+    with pytest.raises(ValueError, match="positive"):
+        ds.mlmc_batches(0, m, 2, 0)
+
+
+def test_mlmc_batches_traceable_in_step():
+    # the scan driver vectorizes the batch schedule by vmapping the sampler
+    # over t — the vmapped draw must equal the per-t draws
+    ds = _ds()
+    stacked = jax.vmap(lambda t: ds.mlmc_batches(t, 3, 2, 2))(jnp.arange(3))
+    for t in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(stacked["tokens"][t]),
+            np.asarray(ds.mlmc_batches(t, 3, 2, 2)["tokens"]))
+
+
+def test_mlmc_sampler_closure_matches_direct():
+    ds = _ds()
+    s = ds.mlmc_sampler(3, 2)
+    np.testing.assert_array_equal(
+        np.asarray(s(7, 2)["tokens"]),
+        np.asarray(ds.mlmc_batches(7, 3, 2, 2)["tokens"]))

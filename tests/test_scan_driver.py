@@ -98,6 +98,64 @@ def test_scan_chunking_is_invisible():
     _assert_logs_equal(l0, l16)
 
 
+def test_eval_cadence_nonaligned_chunk():
+    """Satellite-3 lock (PR 7): with chunk=7 no chunk boundary aligns with
+    eval_every=16, so every eval point sits on a mixed segment bound — the
+    scan driver must still evaluate at exactly the legacy rounds, with the
+    legacy values."""
+    (p1, l1, e1), (p2, l2, e2) = _run_both(_cfg(), eval_every=16, chunk=7)
+    np.testing.assert_allclose(np.asarray(p1["x"]), np.asarray(p2["x"]),
+                               rtol=1e-6, atol=1e-7)
+    _assert_logs_equal(l1, l2)
+    assert [t for t, _ in e1] == [t for t, _ in e2] == [16, 32, 48, 64]
+    for (_, a), (_, b) in zip(e1, e2):
+        np.testing.assert_allclose(a["f"], b["f"], rtol=1e-6, atol=1e-7)
+
+
+def test_momentum_eval_cadence_nonaligned_chunk():
+    m = 3
+    cfg = _cfg("cwmed", "shift", m=m, v=3.0)
+    sampler = TASK.make_sampler(m)
+
+    def ev(p, t):
+        return {"f": TASK.objective(p)}
+
+    def sw():
+        return get_switcher("periodic", m, n_byz=1, K=10)
+    p1, e1 = run_momentum(TASK.grad_fn, TASK.params0, cfg, sw(), sampler, T,
+                          lr=2e-2, beta=0.9, seed=1, eval_fn=ev,
+                          eval_every=16)
+    p2, e2 = run_momentum_scan(TASK.grad_fn, TASK.params0, cfg, sw(), sampler,
+                               T, lr=2e-2, beta=0.9, seed=1, eval_fn=ev,
+                               eval_every=16, chunk=7)
+    np.testing.assert_allclose(np.asarray(p1["x"]), np.asarray(p2["x"]),
+                               rtol=1e-6, atol=1e-7)
+    assert [t for t, _ in e1] == [t for t, _ in e2] == [16, 32, 48, 64]
+    for (_, a), (_, b) in zip(e1, e2):
+        np.testing.assert_allclose(a["f"], b["f"], rtol=1e-6, atol=1e-7)
+
+
+def test_scan_microbatch_parity():
+    """Microbatched streaming (DESIGN.md §9) vs the legacy driver: identical
+    schedules and logs; params within fp tolerance (the three-accumulator
+    summation order differs from the stacked slices by design, so bitwise
+    equality is not the contract here)."""
+    (p1, l1, _), (p2, l2, _) = _run_both(_cfg("cwtm"), microbatch=True)
+    np.testing.assert_allclose(np.asarray(p1["x"]), np.asarray(p2["x"]),
+                               rtol=1e-5, atol=1e-6)
+    _assert_logs_equal(l1, l2)
+
+
+def test_scan_microbatch_prebuilt_tag_mismatch():
+    from repro.core.robust_train import make_dynabro_scan_fn
+
+    cfg = _cfg()
+    fn = make_dynabro_scan_fn(TASK.grad_fn, cfg, sgd(2e-2), microbatch=True)
+    with pytest.raises(ValueError, match="microbatch"):
+        run_dynabro_scan(TASK.grad_fn, TASK.params0, sgd(2e-2), cfg, _sw(),
+                         TASK.make_sampler(M), T, scan_fn=fn)
+
+
 def test_beyond_cap_cost_parity_all_drivers():
     """Beyond-cap rounds (J > j_max: correction dropped, one unit batch per
     worker) must be sampled and logged with cost 1 — the ``mlmc.round_cost``

@@ -1,0 +1,125 @@
+"""Unified Mode-A/Mode-B model-zoo driver (PR 7 tentpole, DESIGN.md §9):
+real reduced architectures through ``run_dynabro_scan`` with a 2-axis
+``(workers, 'model')`` mesh, FSDP ``param_specs`` and microbatch streaming."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mlmc import MLMCConfig
+from repro.core.robust_train import DynaBROConfig, run_dynabro_scan
+from repro.core.switching import get_switcher
+from repro.launch.mesh import make_worker_mesh
+from repro.launch.sharding import plan_params
+from repro.models.zoo import make_zoo_task
+from repro.optim.optimizers import sgd
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _dcfg(T, m, j_cap=2):
+    return DynaBROConfig(
+        mlmc=MLMCConfig(T=T, m=m, V=3.0, kappa=1.0, j_cap=j_cap),
+        aggregator="cwtm", delta=0.3, attack="sign_flip")
+
+
+def _run_zoo(task, T, m, j_cap, **kw):
+    return run_dynabro_scan(task.grad_fn, task.params0, sgd(0.05),
+                            _dcfg(T, m, j_cap), get_switcher(
+                                "periodic", m, n_byz=1, K=max(2, T // 4)),
+                            task.make_sampler(m), T, seed=3, **kw)
+
+
+def _assert_trees_equal(p1, p2, bitwise=True):
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        a, b = np.asarray(a), np.asarray(b)
+        if bitwise:
+            np.testing.assert_array_equal(a, b)
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_zoo_transformer_microbatch_parity_mesh11():
+    """Small transformer: the (1, 1) GSPMD mesh must be bitwise-identical to
+    mesh=None (all constraints skipped -> identical traced graph)."""
+    task, cfg = make_zoo_task("smollm-360m", seq_len=8, d_model=32)
+    T, m = 8, 4
+    mesh = make_worker_mesh(1, model=1)
+    specs, _ = plan_params(cfg, mesh, fsdp=True, dtype=jnp.float32)
+    p_u, l_u, _ = _run_zoo(task, T, m, 1, microbatch=True)
+    p_s, l_s, _ = _run_zoo(task, T, m, 1, microbatch=True, mesh=mesh,
+                           param_specs=specs)
+    _assert_trees_equal(p_u, p_s, bitwise=True)
+    assert [l.level for l in l_u] == [l.level for l in l_s]
+    assert [l.failsafe_ok for l in l_u] == [l.failsafe_ok for l in l_s]
+
+
+@pytest.mark.slow
+def test_zoo_transformer_and_moe_T32():
+    """The tentpole acceptance run: reduced transformer AND MoE train T=32
+    rounds through run_dynabro_scan(mesh=...) with microbatching, bitwise
+    against the unsharded driver on the parity-contract mesh."""
+    T, m = 32, 4
+    for arch in ("smollm-360m", "qwen2-moe-a2.7b"):
+        task, cfg = make_zoo_task(arch, seq_len=16, d_model=64)
+        mesh = make_worker_mesh(1, model=1)
+        specs, _ = plan_params(cfg, mesh, fsdp=True, dtype=jnp.float32)
+        p_u, l_u, _ = _run_zoo(task, T, m, 2, microbatch=True)
+        p_s, l_s, _ = _run_zoo(task, T, m, 2, microbatch=True, mesh=mesh,
+                               param_specs=specs)
+        _assert_trees_equal(p_u, p_s, bitwise=True)
+        assert len(l_s) == T
+        assert np.isfinite(task.objective(p_s))
+
+
+@pytest.mark.slow
+def test_zoo_sharded_multidevice_parity():
+    """4-device (2 workers x 2 model) subprocess: the sharded microbatched
+    transformer run must match the unsharded microbatched run (the §9 parity
+    contract — allclose, not bitwise: GSPMD partitions the reductions)."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, %r)
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.mlmc import MLMCConfig
+        from repro.core.robust_train import DynaBROConfig, run_dynabro_scan
+        from repro.core.switching import get_switcher
+        from repro.launch.mesh import make_worker_mesh
+        from repro.launch.sharding import plan_params
+        from repro.models.zoo import make_zoo_task
+        from repro.optim.optimizers import sgd
+
+        T, m = 8, 4
+        task, cfg = make_zoo_task("smollm-360m", seq_len=16, d_model=64)
+        dcfg = DynaBROConfig(
+            mlmc=MLMCConfig(T=T, m=m, V=3.0, kappa=1.0, j_cap=2),
+            aggregator="cwtm", delta=0.3, attack="sign_flip")
+        mesh = make_worker_mesh(2, model=2)
+        assert tuple(mesh.axis_names) == ("workers", "model")
+        specs, _ = plan_params(cfg, mesh, fsdp=True, dtype=jnp.float32)
+
+        def run(**kw):
+            return run_dynabro_scan(
+                task.grad_fn, task.params0, sgd(0.05), dcfg,
+                get_switcher("periodic", m, n_byz=1, K=4),
+                task.make_sampler(m), T, seed=3, microbatch=True, **kw)
+
+        p_u, l_u, _ = run()
+        p_s, l_s, _ = run(mesh=mesh, param_specs=specs)
+        for a, b in zip(jax.tree.leaves(p_u), jax.tree.leaves(p_s)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+        assert [l.level for l in l_u] == [l.level for l in l_s]
+        assert [l.failsafe_ok for l in l_u] == [l.failsafe_ok for l in l_s]
+        print("OK zoo multidevice parity")
+    """ % SRC)
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=900)
+    assert r.returncode == 0, r.stdout[-4000:] + "\n" + r.stderr[-4000:]
+    assert "OK zoo multidevice parity" in r.stdout
