@@ -1,0 +1,96 @@
+"""Aggregation-service throughput (DESIGN.md §10).
+
+Streams a full T-round, 16-worker update stream through the serve stack —
+ring buffer ingress, pending-table assembly, jitted session step — with
+prebuilt payloads and hot jit caches, against the offline compiled scan
+driver on the same schedule as the no-service ceiling. Asserts the streamed
+result is bitwise-identical to the offline driver before timing (a
+throughput number for a wrong stream is meaningless).
+
+``serve/sustained_m16`` feeds the CI floor gate in check_regression.py:
+its ``updates_per_sec`` must not collapse — the serve loop's per-round
+overhead (thread handoff, re-stack, mask copy) has to stay bounded relative
+to the compiled step it drives.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.api import build_session
+from repro.core.mlmc import MLMCConfig
+from repro.core.robust_train import DynaBROConfig
+from repro.core.scenarios import make_quadratic_task
+from repro.core.switching import get_switcher
+from repro.optim.optimizers import adagrad_norm
+from repro.serve import AggregationServer, ServeConfig, SimulatedWorkers
+from repro.serve.client import worker_payloads
+
+M, SEED = 16, 3
+
+
+def _session(T):
+    task = make_quadratic_task()
+    cfg = DynaBROConfig(mlmc=MLMCConfig(T=T, m=M, V=3.0, kappa=1.0, j_cap=2),
+                        aggregator="cwmed", delta=0.4, attack="sign_flip")
+    return build_session(
+        cfg, task, switcher=get_switcher("periodic", M, n_byz=4, K=5,
+                                         seed=SEED),
+        opt=adagrad_norm(2e-2), seed=SEED)
+
+
+def _stream(sess, T, payloads):
+    server = AggregationServer(sess, T, ServeConfig(capacity=512,
+                                                    lookahead_rounds=8))
+    server.start()
+    t0 = time.perf_counter()
+    workers = SimulatedWorkers(server, payloads).start()
+    assert workers.join(timeout=600.0) and not workers.failures
+    assert server.join(timeout=600.0), server.snapshot()
+    wall = time.perf_counter() - t0
+    server.close()
+    assert server.error is None
+    return server.params, wall
+
+
+def main(fast: bool = False):
+    T = 64 if fast else 256
+    sess = _session(T)
+    payloads = worker_payloads(sess, T)
+
+    # warm every jit cache: the length-1 step segment via a one-round
+    # stream (then drain — the server still expects T rounds), the whole-T
+    # segment via one offline run
+    warm = AggregationServer(sess, T)
+    warm.start()
+    SimulatedWorkers(warm, [payloads[0]]).start().join(timeout=600.0)
+    deadline = time.monotonic() + 600.0
+    while warm.round < 1 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert warm.round >= 1, warm.snapshot()
+    warm.close()
+    params_ref, _, _ = sess.run(T)
+    t0 = time.perf_counter()
+    params_ref, _, _ = sess.run(T)
+    jax.block_until_ready(params_ref["x"])
+    offline_wall = time.perf_counter() - t0
+
+    params, wall = _stream(sess, T, payloads)
+    for a, b in zip(np.asarray(params["x"]), np.asarray(params_ref["x"])):
+        assert a == b, "served stream diverged from the offline driver"
+
+    ups = M * T / wall
+    return [
+        f"serve/sustained_m16,{wall / T * 1e6:.0f},"
+        f"updates_per_sec={ups:.0f};rounds={T};"
+        f"overhead={wall / offline_wall:.2f}x",
+        f"serve/offline_scan_m16,{offline_wall / T * 1e6:.0f},"
+        f"rounds_per_sec={T / offline_wall:.0f}",
+    ]
+
+
+if __name__ == "__main__":
+    for row in main(fast=True):
+        print(row)

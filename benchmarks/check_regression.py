@@ -58,6 +58,11 @@ GATES = [
     # f32 per-worker gradient stack — the no-materialization contract
     # (~0.55x dev; the stacked path sits at ~1.6x)
     ("model_zoo/microbatch_mem", "vs_stack", 1.0, "<="),
+    # aggregation service: sustained 16-worker streamed updates/sec through
+    # ring -> pending table -> jitted step (DESIGN.md §10). ~6300/s dev; the
+    # floor only catches a collapse of the serve loop's per-round overhead
+    # on the 2-core CI runners, not hardware variance.
+    ("serve/sustained_m16", "updates_per_sec", 250.0, ">="),
 ]
 
 

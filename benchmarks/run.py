@@ -27,6 +27,7 @@ MODULES = [
     "benchmarks.bench_periodic",       # Fig 1/5
     "benchmarks.bench_bernoulli",      # Fig 2/8
     "benchmarks.bench_failsafe",       # Eq. 6 / Thm 4.1 ablation
+    "benchmarks.bench_serve",          # aggregation service throughput
 ]
 
 

@@ -13,10 +13,6 @@ kwarg-qualified columns and lines.
 
   PYTHONPATH=src python examples/attack_gallery.py
 """
-import os
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core.scenarios import (
     format_table, make_quadratic_task, run_matrix, scenario_grid,

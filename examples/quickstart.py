@@ -2,21 +2,14 @@
 
 Runs DynaBRO (Algorithm 2) on a small classifier with m=17 workers of which 8
 are Byzantine (sign-flip), under the Periodic(10) identity-switching strategy
-— the paper's Figure 1 setting, shrunk to run in ~a minute on CPU.
+— the paper's Figure 1 setting, shrunk to run in ~a minute on CPU. Uses the
+``repro.api`` session facade (DESIGN.md §10).
 
-  PYTHONPATH=src python examples/quickstart.py
+  pip install -e .  &&  python examples/quickstart.py
+  (or, without installing:  PYTHONPATH=src python examples/quickstart.py)
 """
-import os
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
-
-from benchmarks._clf import make_task
-from repro.core.mlmc import MLMCConfig
-from repro.core.robust_train import DynaBROConfig, run_dynabro
-from repro.core.switching import get_switcher
-from repro.optim.optimizers import sgd
+from repro.api import DynaBROConfig, MLMCConfig, build_session, get_switcher, sgd
+from repro.data.classification import make_task
 
 
 def main():
@@ -29,11 +22,11 @@ def main():
         delta=n_byz / m + 1e-3,
         attack="sign_flip")          # Byzantine workers negate their gradients
 
-    switcher = get_switcher("periodic", m, n_byz=n_byz, K=10)
-
-    params, logs, evals = run_dynabro(
-        grad_fn, params0, sgd(0.1), cfg, switcher, sampler, T,
-        eval_fn=eval_fn, eval_every=30)
+    session = build_session(
+        cfg, switcher=get_switcher("periodic", m, n_byz=n_byz, K=10),
+        grad_fn=grad_fn, params0=params0, sample_batches=sampler,
+        opt=sgd(0.1))
+    params, logs, evals = session.run(T, eval_fn=eval_fn, eval_every=30)
 
     for t, ev in evals:
         print(f"round {t:4d}  test_acc={ev['test_acc']:.3f}")

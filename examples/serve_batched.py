@@ -2,14 +2,11 @@
 with the KV/state cache (works for every family — attention ring-buffers,
 mamba conv+ssm state, rwkv wkv state).
 
-  PYTHONPATH=src python examples/serve_batched.py [--arch rwkv6-1.6b] [--tokens 16]
+  pip install -e . && python examples/serve_batched.py [--arch rwkv6-1.6b]
+  (or, without installing:  PYTHONPATH=src python examples/serve_batched.py)
 """
 import argparse
-import os
-import sys
 import time
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp

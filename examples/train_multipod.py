@@ -59,7 +59,10 @@ def main():
     ap.add_argument("--mode", default="both", choices=["a", "b", "both"])
     args = ap.parse_args()
     env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    # prepend (don't clobber): a pip-installed repro works without this, and
+    # an existing PYTHONPATH keeps working with it
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(ROOT, "src"), env.get("PYTHONPATH")) if p)
     rc = 0
     if args.mode in ("a", "both"):
         print("== Mode A: sharded compiled driver (4-device workers mesh) ==")

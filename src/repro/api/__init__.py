@@ -1,0 +1,49 @@
+"""``repro.api`` — the one facade over the reproduction (DESIGN.md §10).
+
+Quickstart::
+
+    from repro.api import (MLMCConfig, DynaBROConfig, build_session,
+                           make_quadratic_task, get_switcher, sgd)
+
+    task = make_quadratic_task()
+    cfg = DynaBROConfig(mlmc=MLMCConfig(T=200, m=16, V=3.0))
+    sess = build_session(cfg, task, m=16, opt=sgd(2e-2),
+                         switcher=get_switcher("periodic", 16, n_byz=3, K=10))
+    params, logs, evals = sess.run(200)        # compiled batch driver
+    carry = sess.init_carry()                  # ... or round by round:
+    sched = sess.schedule(200)
+    carry, info = sess.step(carry, sess.round_inputs(sched, 0))
+
+Everything here re-exports from the implementation modules; the historical
+``run_*`` entrypoints are thin wrappers over ``Session`` and remain
+importable from their original homes.
+"""
+from repro.api.session import (
+    RoundInputs, RoundSchedule, Session, StepInfo, build_session,
+)
+from repro.api.specs import AggSpec, AttackSpec, SweepSpec
+from repro.core.mlmc import MLMCConfig
+from repro.core.robust_train import (
+    DynaBROConfig, RoundLog, make_dynabro_scan_fn, make_momentum_scan_fn,
+    run_dynabro, run_dynabro_scan, run_dynabro_scan_sweep, run_momentum,
+    run_momentum_scan,
+)
+from repro.core.scenarios import (
+    Scenario, Task, format_table, make_quadratic_task, run_matrix,
+    run_scenario, scenario_grid,
+)
+from repro.core.switching import Switcher, get_switcher
+from repro.optim.optimizers import Optimizer, adagrad_norm, adam, momentum, sgd
+
+__all__ = [
+    "AggSpec", "AttackSpec", "SweepSpec",
+    "RoundInputs", "RoundSchedule", "Session", "StepInfo", "build_session",
+    "MLMCConfig", "DynaBROConfig", "RoundLog",
+    "make_dynabro_scan_fn", "make_momentum_scan_fn",
+    "run_dynabro", "run_dynabro_scan", "run_dynabro_scan_sweep",
+    "run_momentum", "run_momentum_scan",
+    "Scenario", "Task", "format_table", "make_quadratic_task", "run_matrix",
+    "run_scenario", "scenario_grid",
+    "Switcher", "get_switcher",
+    "Optimizer", "adagrad_norm", "adam", "momentum", "sgd",
+]

@@ -1,0 +1,514 @@
+"""The session driver API (DESIGN.md §10): one entrypoint under every driver.
+
+A ``Session`` binds what all the historical ``run_*`` drivers took as
+positional sprawl — grad_fn, initial params, optimizer, config, switcher,
+batch sampler, seed, sharding options — and exposes the round loop at every
+granularity:
+
+- ``init_carry()`` / ``step(carry, round_inputs)``: ONE round at a time
+  through the same jitted compiled segment the batch drivers scan with.
+  Segment chunking is bitwise-invariant (locked by tests/test_checkpoint.py
+  and the chunk parity tests), so driving length-1 segments is
+  bitwise-identical to a whole-``T`` ``run()`` — this is what lets the
+  aggregation server (``repro.serve``) consume rounds at network cadence and
+  still match the offline driver bit for bit.
+- ``run(T)``: the batch drivers (compiled scan or the legacy per-round jit
+  reference), exactly as ``run_dynabro`` / ``run_dynabro_scan`` /
+  ``run_momentum`` / ``run_momentum_scan`` always behaved — those functions
+  are now thin wrappers over a Session (exact-parity locked by the existing
+  driver parity suite).
+- ``sweep(spec, T)``: the lane-batched vmapped sweep over a validated
+  ``SweepSpec`` (``run_dynabro_scan_sweep`` wraps this).
+
+All compiled-loop machinery (``make_*_scan_fn``, schedule precomputes, lane
+plans, the vmapped-wrapper cache) stays in ``core.robust_train`` — the
+Session is the *driver*, not the kernel — and is always called through the
+module (``rt.``) so tests and tools that monkeypatch those attributes keep
+working.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.specs import SweepSpec
+from repro.core import robust_train as rt
+from repro.core.mlmc import round_cost, sample_level
+from repro.core.switching import Switcher
+from repro.optim.optimizers import Optimizer
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundSchedule:
+    """The host-precomputed round schedule for ``T`` rounds — the same
+    levels/masks/keys the compiled drivers scan over (DESIGN.md §5), exposed
+    so per-round callers (the serve loop, replay tests) can draw from the
+    identical stream. Momentum-mode schedules have ``n_max == 1`` and masks
+    of shape (T, m); DynaBRO masks are (T, n_max, m) within-round masks."""
+
+    T: int
+    levels: np.ndarray  # (T,) MLMC level plan (zeros in momentum mode)
+    ns: np.ndarray      # (T,) per-round unit counts
+    n_max: int
+    masks: np.ndarray   # (T, n_max, m) bool — or (T, m) in momentum mode
+    keys: np.ndarray    # (T, 2) uint32 raw PRNG keys
+
+
+@dataclasses.dataclass
+class RoundInputs:
+    """Everything one round consumes. ``batches`` is the n_max-padded
+    per-worker batch tree (leading (m, n_max) axes; momentum mode: (m,) unit
+    batches); ``masks`` the round's Byzantine-identity mask — mutable by
+    design, the serve loop ORs straggler bits into it (a timed-out worker is
+    just a dynamically-Byzantine one, DESIGN.md §10)."""
+
+    t: int
+    level: int
+    batches: Any
+    masks: Any  # (n_max, m) bool — or (m,) in momentum mode
+    key: Any    # (2,) uint32
+
+
+@dataclasses.dataclass
+class StepInfo:
+    """Per-round diagnostics from ``step``: the MLMC fail-safe verdict and
+    correction norm (None in momentum mode, which has neither)."""
+
+    failsafe_ok: Optional[bool] = None
+    corr_norm: Optional[float] = None
+
+
+class Session:
+    """One bound training session; see the module docstring. Use
+    ``build_session`` (or the ``run_*`` wrappers) rather than spelling out
+    every field.
+
+    ``mode`` is ``"dynabro"`` (Algorithm 2; needs ``opt``) or ``"momentum"``
+    (the worker-momentum baseline; needs ``lr``/``beta``). Prebuilt
+    ``scan_fn``s are validated against the session's mesh/microbatch/lane
+    configuration up front, with the same errors the batch drivers raise.
+    """
+
+    def __init__(self, cfg, *, grad_fn, params0, opt: Optional[Optimizer] = None,
+                 switcher: Optional[Switcher] = None,
+                 sample_batches: Optional[Callable[[int, int], Any]] = None,
+                 seed: int = 0, mode: str = "dynabro",
+                 lr: Optional[float] = None, beta: Optional[float] = None,
+                 scan_fn=None, vectorize_batches: bool = True,
+                 mesh=None, worker_axis: str = "workers", param_specs=None,
+                 microbatch: bool = False, m: Optional[int] = None):
+        if mode not in ("dynabro", "momentum"):
+            raise ValueError(
+                f"unknown session mode {mode!r}; expected 'dynabro' or "
+                f"'momentum'")
+        if mode == "dynabro" and opt is None:
+            raise ValueError("dynabro sessions need opt= (an Optimizer)")
+        if mode == "momentum" and (lr is None or beta is None):
+            raise ValueError("momentum sessions need lr= and beta=")
+        self.cfg = cfg
+        self.grad_fn = grad_fn
+        self.params0 = params0
+        self.opt = opt
+        self.switcher = switcher
+        self.sample_batches = sample_batches
+        self.seed = seed
+        self.mode = mode
+        self.lr, self.beta = lr, beta
+        self.vectorize_batches = vectorize_batches
+        self.mesh = mesh
+        self.worker_axis = worker_axis
+        self.param_specs = param_specs
+        self.microbatch = microbatch
+        self.m = m if m is not None else (switcher.m if switcher else None)
+        # preflight validation, identical to the batch drivers' (and at the
+        # same point: before any T<=0 early return a run() might take)
+        if mesh is not None:
+            if self.m is None:
+                raise ValueError("mesh= needs a worker count: pass switcher= "
+                                 "or m=")
+            rt._check_worker_mesh(mesh, worker_axis, self.m,
+                                  allow_model=(mode == "dynabro"))
+        if scan_fn is not None:
+            if mode == "dynabro":
+                for lane_kind in ("lane_attacks", "lane_aggregators"):
+                    if getattr(scan_fn, lane_kind, None) is not None:
+                        raise ValueError(
+                            f"scan_fn was built with {lane_kind}="
+                            f"{getattr(scan_fn, lane_kind)!r}; that variant "
+                            f"is for run_dynabro_scan_sweep(...), not "
+                            f"run_dynabro_scan")
+            rt._check_scan_fn_mesh(scan_fn, mesh)
+            if mode == "dynabro":
+                have_mb = getattr(scan_fn, "microbatch", microbatch)
+                if have_mb != microbatch:
+                    raise ValueError(
+                        f"scan_fn was built with microbatch={have_mb}, but "
+                        f"this run passes microbatch={microbatch}; rebuild "
+                        f"the scan_fn to match (the two paths are not "
+                        "bitwise-equivalent)")
+        self._scan_fn = scan_fn
+        self._schedules: Dict[int, RoundSchedule] = {}
+
+    # ------------------------------------------------------------ pieces
+
+    @property
+    def scan_fn(self):
+        """The session's compiled segment fn, built on first use (via the
+        ``rt`` module attribute, so monkeypatched builders are honored)."""
+        if self._scan_fn is None:
+            if self.mode == "dynabro":
+                self._scan_fn = rt.make_dynabro_scan_fn(
+                    self.grad_fn, self.cfg, self.opt, mesh=self.mesh,
+                    worker_axis=self.worker_axis,
+                    param_specs=self.param_specs, microbatch=self.microbatch)
+            else:
+                self._scan_fn = rt.make_momentum_scan_fn(
+                    self.grad_fn, self.cfg, self.lr, self.beta,
+                    mesh=self.mesh, worker_axis=self.worker_axis)
+        return self._scan_fn
+
+    def schedule(self, T: int) -> RoundSchedule:
+        """The full host-side round schedule (cached per T) — exactly the
+        precompute of the compiled batch drivers, so per-round stepping and
+        ``run(T)`` draw from one stream."""
+        sched = self._schedules.get(T)
+        if sched is not None:
+            return sched
+        if self.switcher is None:
+            raise ValueError("schedules need a switcher; build the session "
+                             "with switcher=")
+        if self.mode == "dynabro":
+            levels, ns, n_max = rt._level_plan(
+                self.cfg, np.random.default_rng(self.seed), T)
+            masks = rt._mask_schedule(self.switcher, T, n_max, ns)
+            keys = rt._np_prng_keys(
+                self.seed * 100_003 + np.arange(T, dtype=np.int64))
+        else:
+            levels = np.zeros(T, np.int32)
+            ns = np.ones(T, np.int64)
+            n_max = 1
+            masks = np.stack([self.switcher.mask(t) for t in range(T)])
+            keys = rt._np_prng_keys(
+                self.seed * 77_003 + np.arange(T, dtype=np.int64))
+        sched = RoundSchedule(T, levels, ns, n_max, masks, keys)
+        self._schedules[T] = sched
+        return sched
+
+    def init_carry(self):
+        """The scan carry at round 0: ``(params, opt_state)`` (dynabro) or
+        ``(params, worker_momenta)`` (momentum), device-placed per the
+        session's sharding config."""
+        params = self.params0
+        if self.mode == "dynabro":
+            if self.mesh is not None and "model" in self.mesh.axis_names:
+                pin = rt._gspmd_constraints(self.mesh, self.worker_axis,
+                                            self.param_specs)
+                if pin is not None:
+                    params = pin.put_params(params)
+            return (params, self.opt.init(params))
+        worker_m = jax.tree.map(
+            lambda p: jnp.zeros((self.m,) + p.shape, jnp.float32), params)
+        return (params, worker_m)
+
+    def round_inputs(self, sched: RoundSchedule, t: int) -> RoundInputs:
+        """Materialize round ``t``'s inputs from the schedule. Sampling is
+        the direct per-round call — the reference the batch drivers'
+        vectorized ``_batch_schedule`` is probe-checked against — so the
+        padded batch tree is the one the offline scan consumes."""
+        n = int(sched.ns[t])
+        if self.mode == "dynabro":
+            batches = rt._pad_units(self.sample_batches(t, n), sched.n_max,
+                                    axis=1)
+            return RoundInputs(t, int(sched.levels[t]), batches,
+                               sched.masks[t], sched.keys[t])
+        batches = jax.tree.map(lambda l: l[:, 0], self.sample_batches(t, 1))
+        return RoundInputs(t, 0, batches, sched.masks[t], sched.keys[t])
+
+    def step(self, carry, inputs: RoundInputs):
+        """Advance one round: drive the compiled segment on a length-1
+        schedule slice. Bitwise-identical to the same round inside a
+        whole-``T`` ``run()`` (chunking invariance, DESIGN.md §5/§10).
+        Returns ``(carry, StepInfo)``."""
+        sched = self._schedules.get(inputs.t + 1) or next(
+            iter(self._schedules.values()), None)
+        lvl_dtype = (sched.levels.dtype if sched is not None else np.int64)
+        one = lambda x: jnp.asarray(np.asarray(x)[None])  # noqa: E731
+        if self.mode == "dynabro":
+            xs = (jnp.asarray(np.asarray([inputs.level], dtype=lvl_dtype)),
+                  jax.tree.map(lambda l: jnp.asarray(l)[None], inputs.batches),
+                  one(inputs.masks), one(inputs.key))
+            carry, (ok, dn) = self.scan_fn(carry, xs)
+            return carry, StepInfo(failsafe_ok=bool(np.asarray(ok)[0]),
+                                   corr_norm=float(np.asarray(dn)[0]))
+        xs = (jax.tree.map(lambda l: jnp.asarray(l)[None], inputs.batches),
+              one(inputs.masks), one(inputs.key))
+        carry, _ = self.scan_fn(carry, xs)
+        return carry, StepInfo()
+
+    # ------------------------------------------------------------ drivers
+
+    def run(self, T: int, *, eval_fn=None, eval_every: int = 0,
+            chunk: int = 0, driver: str = "scan", step=None):
+        """The whole-``T`` batch drivers. ``driver="scan"`` is the compiled
+        chunked-``lax.scan`` loop; ``"legacy"`` the per-round jitted-step
+        reference loop (the parity baseline — kept as a genuinely separate
+        implementation). Returns ``(params, logs, evals)`` in dynabro mode
+        and ``(params, evals)`` in momentum mode, exactly as the ``run_*``
+        wrappers always did."""
+        if driver not in ("scan", "legacy"):
+            raise ValueError(
+                f"unknown driver {driver!r}; expected 'scan' or 'legacy'")
+        if driver == "legacy":
+            if self.mesh is not None:
+                raise ValueError("the legacy per-round driver runs unsharded;"
+                                 " drop mesh= or use driver='scan'")
+            if self.mode == "dynabro":
+                return self._run_legacy_dynabro(T, eval_fn, eval_every, step)
+            return self._run_legacy_momentum(T, eval_fn, eval_every, step)
+        if self.mode == "dynabro":
+            return self._run_scan_dynabro(T, eval_fn, eval_every, chunk)
+        return self._run_scan_momentum(T, eval_fn, eval_every, chunk)
+
+    def _run_scan_dynabro(self, T, eval_fn, eval_every, chunk):
+        if T <= 0:
+            return self.params0, [], []
+        sched = self.schedule(T)
+        scan_fn = self.scan_fn
+        carry = self.init_carry()
+        masks_dev = jnp.asarray(sched.masks)
+        keys_dev = jnp.asarray(sched.keys)
+        levels_dev = jnp.asarray(sched.levels)
+        oks, evals = [], []
+        a = 0
+        for b in rt._segment_bounds(T, eval_every if eval_fn else 0, chunk):
+            batches = rt._batch_schedule(
+                self.sample_batches, list(zip(range(a, b), sched.ns[a:b])),
+                sched.n_max, vectorize=self.vectorize_batches)
+            xs = (levels_dev[a:b], batches, masks_dev[a:b], keys_dev[a:b])
+            carry, (ok, _dn) = scan_fn(carry, xs)
+            oks.append(np.asarray(ok))
+            if eval_fn and eval_every and b % eval_every == 0:
+                evals.append((b, eval_fn(carry[0], b - 1)))
+            a = b
+        ok_all = np.concatenate(oks) if oks else np.zeros(0, bool)
+        return (carry[0],
+                rt._round_logs(sched.levels, ok_all, sched.masks,
+                               self.cfg.mlmc.j_max),
+                evals)
+
+    def _run_scan_momentum(self, T, eval_fn, eval_every, chunk):
+        if T <= 0:
+            return self.params0, []
+        sched = self.schedule(T)
+        masks = jnp.asarray(sched.masks)  # (T, m)
+        keys = jnp.asarray(sched.keys)
+        scan_fn = self.scan_fn
+        carry = self.init_carry()
+        evals = []
+        a = 0
+        for b in rt._segment_bounds(T, eval_every if eval_fn else 0, chunk):
+            bsched = rt._batch_schedule(self.sample_batches,
+                                        [(t, 1) for t in range(a, b)], 1,
+                                        vectorize=self.vectorize_batches)
+            batches = jax.tree.map(lambda l: l[:, :, 0], bsched)  # (L, m, ...)
+            carry, _ = scan_fn(carry, (batches, masks[a:b], keys[a:b]))
+            if eval_fn and eval_every and b % eval_every == 0:
+                evals.append((b, eval_fn(carry[0], b - 1)))
+            a = b
+        return carry[0], evals
+
+    def _run_legacy_dynabro(self, T, eval_fn, eval_every, step):
+        cfg, opt = self.cfg, self.opt
+        rng = np.random.default_rng(self.seed)
+        step = step or rt.make_dynabro_step(self.grad_fn, cfg, opt)
+        params = self.params0
+        opt_state = opt.init(params)
+        logs, evals = [], []
+        for t in range(T):
+            j = sample_level(rng, cfg.mlmc.j_max) if cfg.use_mlmc else 0
+            n = 2 ** j if (cfg.use_mlmc and j <= cfg.mlmc.j_max) else 1
+            masks = np.stack([self.switcher.within_round(t, k)
+                              for k in range(n)])
+            batches = self.sample_batches(t, n)
+            key = jax.random.PRNGKey(self.seed * 100_003 + t)
+            params, opt_state, info = step(params, opt_state, batches,
+                                           jnp.asarray(masks), key, j)
+            logs.append(rt.RoundLog(j, bool(info["failsafe_ok"]),
+                                    int(masks[0].sum()),
+                                    round_cost(j, cfg.mlmc.j_max)))
+            if eval_fn and eval_every and (t + 1) % eval_every == 0:
+                evals.append((t + 1, eval_fn(params, t)))
+        return params, logs, evals
+
+    def _run_legacy_momentum(self, T, eval_fn, eval_every, step):
+        step = step or rt.make_momentum_step(self.grad_fn, self.cfg, self.lr,
+                                             self.beta)
+        params = self.params0
+        worker_m = jax.tree.map(
+            lambda p: jnp.zeros((self.switcher.m,) + p.shape, jnp.float32),
+            params)
+        evals = []
+        for t in range(T):
+            mask = self.switcher.mask(t)
+            batches = jax.tree.map(lambda l: l[:, 0],
+                                   self.sample_batches(t, 1))
+            key = jax.random.PRNGKey(self.seed * 77_003 + t)
+            params, worker_m = step(params, worker_m, batches,
+                                    jnp.asarray(mask), key)
+            if eval_fn and eval_every and (t + 1) % eval_every == 0:
+                evals.append((t + 1, eval_fn(params, t)))
+        return params, evals
+
+    # ------------------------------------------------------------- sweep
+
+    def sweep(self, spec: SweepSpec, T: int, *,
+              chunk: int = 0) -> List[Tuple[Any, list]]:
+        """Run ``spec.lanes`` cells as lanes of ONE vmapped compiled loop —
+        the body behind ``run_dynabro_scan_sweep`` (see its docstring for
+        the full lane/grouping/parity contracts, DESIGN.md §7). Mixed-rule
+        grids recurse into branch-homogeneous sub-sweeps; results come back
+        in the caller's lane order."""
+        if self.mode != "dynabro":
+            raise ValueError("sweeps are dynabro-mode only")
+        spec = spec if isinstance(spec, SweepSpec) else SweepSpec(**spec)
+        cfg, opt, params = self.cfg, self.opt, self.params0
+        switchers = spec.resolve_switchers(self.m, self.seed)
+        C = len(switchers)
+        if C == 0:
+            return []
+        if T <= 0:
+            return [(params, []) for _ in switchers]
+        attacks = spec.attack_lanes()
+        aggregators = spec.agg_lanes()
+        scan_fn = spec.scan_fn
+
+        # ---- branch-homogeneous lane grouping (DESIGN.md §7): split a
+        # mixed-rule grid into one sub-sweep per distinct aggregator name, in
+        # first-appearance order, and scatter results back to caller lane
+        # order. Every schedule a sub-sweep derives (levels, keys, batches)
+        # is a pure function of (cfg, seed, T), so the groups share them by
+        # construction.
+        group_fns = None
+        if isinstance(scan_fn, Mapping):
+            if aggregators is None:
+                raise ValueError(
+                    "scan_fn given as a {rule_name: scan_fn} mapping but "
+                    "this sweep passes no aggregators to group by")
+            group_fns = scan_fn
+        if aggregators is not None:
+            distinct = tuple(dict.fromkeys(name for name, _ in aggregators))
+            if group_fns is not None and set(group_fns) != set(distinct):
+                raise ValueError(
+                    f"scan_fn mapping keys {sorted(group_fns)} do not match "
+                    f"the grid's distinct aggregator names "
+                    f"{sorted(distinct)}")
+            if len(distinct) > 1 and (scan_fn is None
+                                      or group_fns is not None):
+                outs = [None] * C
+                for name in distinct:
+                    idx = [c for c in range(C)
+                           if aggregators[c][0] == name]
+                    sub = self.sweep(
+                        spec.lane_subset(
+                            idx, scan_fn=(None if group_fns is None
+                                          else group_fns[name])),
+                        T, chunk=chunk)
+                    for j, c in enumerate(idx):
+                        outs[c] = sub[j]
+                return outs
+            if group_fns is not None:  # single distinct rule: unwrap and run
+                scan_fn = group_fns[distinct[0]]
+
+        levels, ns, n_max = rt._level_plan(
+            cfg, np.random.default_rng(self.seed), T)
+        masks = np.stack([rt._mask_schedule(sw, T, n_max, ns)
+                          for sw in switchers])
+        keys = rt._np_prng_keys(
+            self.seed * 100_003 + np.arange(T, dtype=np.int64))
+        atk = agg = atk_names = agg_names = None
+        if attacks is not None:
+            atk_names, ids, thetas = rt._lane_attack_plan(attacks)
+            atk = (jnp.asarray(ids), jnp.asarray(thetas))
+        if aggregators is not None:
+            agg_names, gids, gthetas, coeffs = rt._lane_agg_plan(aggregators,
+                                                                 cfg)
+            agg = (jnp.asarray(gids), jnp.asarray(gthetas),
+                   jnp.asarray(coeffs))
+        lane_mode = atk is not None or agg is not None
+        if scan_fn is None:
+            scan_fn = rt.make_dynabro_scan_fn(self.grad_fn, cfg, opt,
+                                              lane_attacks=atk_names,
+                                              lane_aggregators=agg_names)
+        else:
+            if getattr(scan_fn, "worker_mesh", None) is not None:
+                raise ValueError(
+                    "scan_fn was built with mesh=; vmapped sweeps run "
+                    "unsharded (DESIGN.md §7) — rebuild it without mesh")
+            # the lane ids index the derived name tuples; a scan_fn whose
+            # lax.switch branch order differs — or that lacks/adds a lane
+            # axis — would silently apply the wrong attack or rule per lane
+            for kind, want, arg in (
+                    ("lane_attacks", atk_names, "attacks"),
+                    ("lane_aggregators", agg_names, "aggregators")):
+                have = getattr(scan_fn, kind, None)
+                if have == want:
+                    continue
+                if want is None:
+                    raise ValueError(
+                        f"scan_fn was built with {kind}={have!r} but this "
+                        f"sweep passes no {arg}; rebuild it without {kind} "
+                        f"(or pass the per-lane {arg})")
+                raise ValueError(
+                    f"scan_fn was built with {kind}={have!r} but this "
+                    f"sweep's {arg} derive {want!r}; rebuild it with "
+                    f"make_dynabro_scan_fn(..., {kind}={want!r})")
+        vseg = rt._vmapped_scan_fn(scan_fn, lane=lane_mode)
+
+        def lanes(tree):  # identical initial state in every lane
+            return jax.tree.map(
+                lambda l: jnp.broadcast_to(l, (C,) + l.shape), tree)
+
+        carry = (lanes(params), lanes(opt.init(params)))
+        masks_dev, keys_dev = jnp.asarray(masks), jnp.asarray(keys)
+        levels_dev = jnp.asarray(levels)
+
+        oks = []
+        a = 0
+        for b in rt._segment_bounds(T, 0, chunk):
+            batches = rt._batch_schedule(
+                self.sample_batches, list(zip(range(a, b), ns[a:b])), n_max,
+                vectorize=self.vectorize_batches)
+            xs = (levels_dev[a:b], batches, masks_dev[:, a:b], keys_dev[a:b])
+            if lane_mode:
+                carry, (ok, _dn) = vseg(carry, xs, atk, agg)
+            else:
+                carry, (ok, _dn) = vseg(carry, xs)
+            oks.append(np.asarray(ok))  # (C, b - a)
+            a = b
+        ok_all = np.concatenate(oks, axis=1)
+        return [(jax.tree.map(lambda l, c=c: l[c], carry[0]),
+                 rt._round_logs(levels, ok_all[c], masks[c],
+                                cfg.mlmc.j_max))
+                for c in range(C)]
+
+
+def build_session(cfg, task=None, *, m: Optional[int] = None,
+                  switcher: Optional[Switcher] = None, **kw) -> Session:
+    """The facade constructor: ``build_session(cfg, task) -> Session``.
+
+    ``task`` (a ``scenarios.Task``) supplies ``grad_fn`` / ``params0`` and —
+    given a worker count via ``m=`` or ``switcher=`` — the batch sampler;
+    any Session kwarg can override or extend it. Without a task, pass
+    ``grad_fn=`` / ``params0=`` / ``sample_batches=`` directly."""
+    if m is None and switcher is not None:
+        m = switcher.m
+    if task is not None:
+        kw.setdefault("grad_fn", task.grad_fn)
+        kw.setdefault("params0", task.params0)
+        if m is not None:
+            kw.setdefault("sample_batches", task.make_sampler(m))
+    return Session(cfg, switcher=switcher, m=m, **kw)

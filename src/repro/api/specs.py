@@ -1,0 +1,258 @@
+"""Validated scenario/sweep specs — the config side of the ``repro.api``
+facade (DESIGN.md §10).
+
+The sweep machinery historically grew three parallel encodings of "which
+attack / rule does this lane run": per-cell config fields
+(``DynaBROConfig.aggregator`` + ``delta`` + ``aggregator_kwargs``), per-lane
+traced vectors (``agg_theta`` + ``thr_coeff``), and the prebuilt-scan_fn
+forms (``lane_attacks``/``lane_aggregators`` tuples, ``scan_fn`` either a
+function or a ``{rule: scan_fn}`` mapping). ``AttackSpec`` / ``AggSpec`` /
+``SweepSpec`` collapse that sprawl into one validated source of truth: a
+spec validates its rule name and hyperparameters at construction (with
+errors that name the valid choices) and can emit *every* downstream form —
+``AggSpec.theta()`` for the lane path, ``AggSpec.apply_to(cfg)`` for the
+per-cell path, ``SweepSpec.scan_fn`` for the steady-state prebuilt form —
+so the encodings cannot drift.
+
+The raw kwarg forms on ``run_dynabro_scan_sweep`` remain as a thin
+compatibility layer for one release (everything is coerced through this
+module, so they gain the same validation); the ``{rule: scan_fn}`` mapping
+kwarg emits a ``DeprecationWarning`` pointing here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Mapping, Optional, Tuple, Union
+
+from repro.core import agg_engine
+from repro.core import attacks as attacks_lib
+from repro.core.mlmc import MLMCConfig
+from repro.core.switching import Switcher, get_switcher
+
+
+def _freeze_kwargs(kw: Optional[Mapping[str, Any]]) -> Tuple[Tuple[str, Any], ...]:
+    return tuple(sorted((dict(kw or {})).items()))
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackSpec:
+    """One validated attack choice: name + parameter overrides.
+
+    Construction validates eagerly: an unknown attack or parameter raises
+    with the valid choices named, instead of failing deep inside a traced
+    sweep. ``theta()`` is the per-lane traced vector
+    (``attacks.attack_theta``); ``legacy`` the ``(name, kwargs)`` tuple the
+    pre-spec call sites pass around.
+    """
+
+    name: str
+    params: Tuple[Tuple[str, Any], ...] = ()
+
+    def __post_init__(self):
+        if self.name not in attacks_lib.ATTACKS:
+            raise ValueError(
+                f"unknown attack {self.name!r}; known: "
+                f"{tuple(sorted(attacks_lib.ATTACKS))}")
+        object.__setattr__(self, "params", _freeze_kwargs(dict(self.params)))
+        self.theta()  # validates parameter names/values (raises on unknown)
+
+    @classmethod
+    def make(cls, name: str, **params) -> "AttackSpec":
+        return cls(name, _freeze_kwargs(params))
+
+    @classmethod
+    def coerce(cls, spec: "AttackLike") -> "AttackSpec":
+        """Accept a name, a ``(name, kwargs)`` pair, or an AttackSpec."""
+        if isinstance(spec, cls):
+            return spec
+        if isinstance(spec, str):
+            return cls(spec)
+        try:
+            name, kw = spec
+        except (TypeError, ValueError):
+            raise ValueError(
+                f"cannot interpret {spec!r} as an attack spec; pass a name, "
+                f"a (name, kwargs) pair, or an AttackSpec") from None
+        return cls(name, _freeze_kwargs(kw))
+
+    @property
+    def kwargs(self) -> Dict[str, Any]:
+        return dict(self.params)
+
+    @property
+    def legacy(self) -> Union[str, Tuple[str, Dict[str, Any]]]:
+        return (self.name, self.kwargs) if self.params else self.name
+
+    def theta(self):
+        """(N_PARAMS,) traced parameter row — the lane-path encoding."""
+        return attacks_lib.attack_theta(self.name, self.kwargs)
+
+    @property
+    def label(self) -> str:
+        kw = ",".join(f"{k}={v}" for k, v in self.params)
+        return f"{self.name}({kw})" if kw else self.name
+
+
+@dataclasses.dataclass(frozen=True)
+class AggSpec:
+    """One validated aggregation-rule choice: rule + hyperparameters.
+
+    The single source both rule encodings derive from:
+
+    - per-lane (traced) form: ``theta()`` (= ``agg_engine.agg_theta``) and
+      ``thr_coeff(mlmc)`` — the lane's fail-safe coefficient, Option-2
+      (δ-oblivious) for MFM and Option-1 for every other rule, exactly as
+      ``scenarios._cell_cfg`` configures cells;
+    - per-cell (config) form: ``apply_to(cfg)`` returns the cfg a per-cell
+      ``run_dynabro_scan`` reference run must use for this rule — the
+      ``aggregator`` / ``delta`` / ``aggregator_kwargs`` / MLMC-option
+      fields set consistently with the lane encoding above.
+    """
+
+    rule: str
+    params: Tuple[Tuple[str, Any], ...] = ()
+
+    def __post_init__(self):
+        agg_engine.agg_param_spec(self.rule)  # unknown rule -> ValueError
+        object.__setattr__(self, "params", _freeze_kwargs(dict(self.params)))
+        self.theta()  # validates hyperparameter names/values
+
+    @classmethod
+    def make(cls, rule: str, **params) -> "AggSpec":
+        return cls(rule, _freeze_kwargs(params))
+
+    @classmethod
+    def coerce(cls, spec: "AggLike") -> "AggSpec":
+        if isinstance(spec, cls):
+            return spec
+        if isinstance(spec, str):
+            return cls(spec)
+        try:
+            rule, kw = spec
+        except (TypeError, ValueError):
+            raise ValueError(
+                f"cannot interpret {spec!r} as an aggregator spec; pass a "
+                f"rule name, a (rule, kwargs) pair, or an AggSpec") from None
+        return cls(rule, _freeze_kwargs(kw))
+
+    @property
+    def kwargs(self) -> Dict[str, Any]:
+        return dict(self.params)
+
+    @property
+    def legacy(self) -> Union[str, Tuple[str, Dict[str, Any]]]:
+        return (self.rule, self.kwargs) if self.params else self.rule
+
+    def theta(self):
+        """(N_AGG_PARAMS,) traced hyperparameter row — the lane encoding."""
+        return agg_engine.agg_theta(self.rule, self.kwargs)
+
+    def thr_coeff(self, mlmc: MLMCConfig) -> float:
+        """The lane's fail-safe coefficient (1+√2)·c_E·C·V: MFM lanes run
+        the paper's δ-oblivious Option 2, every other rule Option 1."""
+        option = 2 if self.rule == "mfm" else 1
+        return float(dataclasses.replace(mlmc, option=option).threshold_coeff)
+
+    def apply_to(self, cfg) -> Any:
+        """The per-cell ``DynaBROConfig`` equivalent of this lane — what a
+        per-cell reference run of the same rule must be configured with."""
+        kw = self.kwargs
+        return dataclasses.replace(
+            cfg,
+            mlmc=dataclasses.replace(
+                cfg.mlmc, option=2 if self.rule == "mfm" else 1),
+            aggregator=self.rule,
+            delta=kw.get("delta", cfg.delta),
+            aggregator_kwargs=kw or None)
+
+    @property
+    def label(self) -> str:
+        kw = ",".join(f"{k}={v}" for k, v in self.params)
+        return f"{self.rule}({kw})" if kw else self.rule
+
+
+AttackLike = Union[str, Tuple[str, Mapping[str, Any]], AttackSpec]
+AggLike = Union[str, Tuple[str, Mapping[str, Any]], AggSpec]
+SwitcherLike = Union[str, Tuple[str, Mapping[str, Any]], Switcher]
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """One validated description of a lane-batched sweep (DESIGN.md §7/§10).
+
+    ``switchers`` is the lane axis (one entry per lane: a ``Switcher``
+    instance, a name, or ``(name, kwargs)`` resolved against the session's
+    ``m``/``seed``); ``attacks`` / ``aggregators`` optionally give each lane
+    its own attack / rule (AttackSpec / AggSpec or their legacy encodings —
+    everything is coerced and validated here, with lane-count mismatches
+    reported up front). ``scan_fn`` carries the steady-state prebuilt form:
+    either one lane-built scan_fn for a branch-homogeneous grid, or a
+    ``{rule_name: scan_fn}`` mapping with one single-rule scan_fn per
+    distinct rule of a mixed grid.
+    """
+
+    switchers: Tuple[SwitcherLike, ...]
+    attacks: Optional[Tuple[AttackSpec, ...]] = None
+    aggregators: Optional[Tuple[AggSpec, ...]] = None
+    scan_fn: Any = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "switchers", tuple(self.switchers))
+        C = len(self.switchers)
+        for axis_name, specs, coerce in (
+                ("attacks", self.attacks, AttackSpec.coerce),
+                ("aggregators", self.aggregators, AggSpec.coerce)):
+            if specs is None:
+                continue
+            specs = tuple(specs)
+            # lane-count check first (the legacy drivers' error), THEN
+            # per-spec validation — a wrong-length axis should say so even
+            # when its entries are also malformed
+            if len(specs) != C:
+                raise ValueError(
+                    f"{axis_name}: expected one per-lane spec per switcher "
+                    f"({C}), got {len(specs)}")
+            object.__setattr__(self, axis_name,
+                               tuple(coerce(s) for s in specs))
+
+    @property
+    def lanes(self) -> int:
+        return len(self.switchers)
+
+    def resolve_switchers(self, m: Optional[int], seed: int):
+        """Lane ``Switcher`` instances; name/(name, kwargs) entries need the
+        session's worker count ``m`` (instances pass through untouched)."""
+        out = []
+        for sw in self.switchers:
+            if isinstance(sw, Switcher):
+                out.append(sw)
+                continue
+            name, kw = (sw, {}) if isinstance(sw, str) else (sw[0], dict(sw[1]))
+            if m is None:
+                raise ValueError(
+                    f"switcher spec {sw!r} needs a worker count to resolve; "
+                    f"build the session with m= (or pass Switcher instances)")
+            out.append(get_switcher(name, m, seed=seed, **kw))
+        return out
+
+    def attack_lanes(self):
+        """Per-lane ``(name, kwargs)`` pairs (the lane-plan input), or None."""
+        if self.attacks is None:
+            return None
+        return [(a.name, a.kwargs) for a in self.attacks]
+
+    def agg_lanes(self):
+        if self.aggregators is None:
+            return None
+        return [(g.rule, g.kwargs) for g in self.aggregators]
+
+    def lane_subset(self, idx, scan_fn=None) -> "SweepSpec":
+        """The sub-spec of lanes ``idx`` — the branch-homogeneous grouping
+        recursion's unit of work."""
+        return SweepSpec(
+            switchers=tuple(self.switchers[c] for c in idx),
+            attacks=(None if self.attacks is None
+                     else tuple(self.attacks[c] for c in idx)),
+            aggregators=(None if self.aggregators is None
+                         else tuple(self.aggregators[c] for c in idx)),
+            scan_fn=scan_fn)

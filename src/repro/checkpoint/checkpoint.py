@@ -32,6 +32,38 @@ def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
         json.dump(meta, f)
 
 
+def checkpoint_step(path: str) -> int:
+    """The round recorded in a checkpoint's ``.json`` meta — what the serve
+    resume path uses to know where a saved carry left off."""
+    with open(path.removesuffix(".npz") + ".json") as f:
+        return int(json.load(f)["step"])
+
+
+def latest_checkpoint(directory: str, prefix: str = ""):
+    """``(path, step)`` of the highest-step checkpoint under ``directory``
+    (basename filtered by ``prefix``), or None if there is none. A checkpoint
+    is the ``.npz``/``.json`` pair ``save_checkpoint`` writes; a lone half of
+    a pair (a kill mid-write) is skipped rather than trusted."""
+    best = None
+    try:
+        names = os.listdir(directory)
+    except FileNotFoundError:
+        return None
+    for name in names:
+        if not name.endswith(".json") or not name.startswith(prefix):
+            continue
+        base = os.path.join(directory, name.removesuffix(".json"))
+        if not os.path.exists(base + ".npz"):
+            continue
+        try:
+            step = checkpoint_step(base)
+        except (OSError, ValueError, KeyError):
+            continue
+        if best is None or step > best[1]:
+            best = (base, step)
+    return best
+
+
 def load_checkpoint(path: str, like: Any) -> Any:
     """Restore into the structure of ``like`` (shape/dtype checked)."""
     data = np.load(path if path.endswith(".npz") else path + ".npz")

@@ -27,7 +27,6 @@ from repro.core import attacks as attacks_lib
 from repro.core.aggregators import MFM, get_aggregator
 from repro.core.mlmc import (
     MLMCConfig, level_prefix, level_schedule, mlmc_combine, round_cost,
-    sample_level,
 )
 from repro.core.switching import Switcher
 from repro.optim.optimizers import Optimizer, apply_updates
@@ -237,24 +236,15 @@ def run_dynabro(
     Reference Python-loop implementation — one compiled step dispatch per
     round; ``run_dynabro_scan`` is the compiled equivalent the parity suite
     checks against this. Pass a prebuilt ``step`` (from ``make_dynabro_step``)
-    to reuse its jit cache across runs."""
-    rng = np.random.default_rng(seed)
-    step = step or make_dynabro_step(grad_fn, cfg, opt)
-    opt_state = opt.init(params)
-    logs, evals = [], []
-    for t in range(T):
-        j = sample_level(rng, cfg.mlmc.j_max) if cfg.use_mlmc else 0
-        n = 2 ** j if (cfg.use_mlmc and j <= cfg.mlmc.j_max) else 1
-        masks = np.stack([switcher.within_round(t, k) for k in range(n)])
-        batches = sample_batches(t, n)
-        key = jax.random.PRNGKey(seed * 100_003 + t)
-        params, opt_state, info = step(params, opt_state, batches,
-                                       jnp.asarray(masks), key, j)
-        logs.append(RoundLog(j, bool(info["failsafe_ok"]), int(masks[0].sum()),
-                             round_cost(j, cfg.mlmc.j_max)))
-        if eval_fn and eval_every and (t + 1) % eval_every == 0:
-            evals.append((t + 1, eval_fn(params, t)))
-    return params, logs, evals
+    to reuse its jit cache across runs.
+
+    Thin wrapper over ``repro.api.Session`` (DESIGN.md §10)."""
+    from repro.api.session import Session
+    sess = Session(cfg, grad_fn=grad_fn, params0=params, opt=opt,
+                   switcher=switcher, sample_batches=sample_batches,
+                   seed=seed)
+    return sess.run(T, eval_fn=eval_fn, eval_every=eval_every,
+                    driver="legacy", step=step)
 
 
 def run_momentum(
@@ -272,19 +262,15 @@ def run_momentum(
     step=None,
 ):
     """Worker-momentum / vanilla-SGD baseline driver (same budget accounting
-    is done by the caller: one unit batch per worker per round)."""
-    step = step or make_momentum_step(grad_fn, cfg, lr, beta)
-    worker_m = jax.tree.map(
-        lambda p: jnp.zeros((switcher.m,) + p.shape, jnp.float32), params)
-    evals = []
-    for t in range(T):
-        mask = switcher.mask(t)
-        batches = jax.tree.map(lambda l: l[:, 0], sample_batches(t, 1))
-        key = jax.random.PRNGKey(seed * 77_003 + t)
-        params, worker_m = step(params, worker_m, batches, jnp.asarray(mask), key)
-        if eval_fn and eval_every and (t + 1) % eval_every == 0:
-            evals.append((t + 1, eval_fn(params, t)))
-    return params, evals
+    is done by the caller: one unit batch per worker per round).
+
+    Thin wrapper over ``repro.api.Session`` (DESIGN.md §10)."""
+    from repro.api.session import Session
+    sess = Session(cfg, grad_fn=grad_fn, params0=params, mode="momentum",
+                   lr=lr, beta=beta, switcher=switcher,
+                   sample_batches=sample_batches, seed=seed)
+    return sess.run(T, eval_fn=eval_fn, eval_every=eval_every,
+                    driver="legacy", step=step)
 
 
 # ----------------------------------------------- compiled (lax.scan) drivers
@@ -852,53 +838,18 @@ def run_dynabro_scan(
     (m, 2^j, ...) gradient stack is ever materialized (DESIGN.md §9). Both
     forward to ``make_dynabro_scan_fn`` — see its docstring for the parity
     contracts.
-    """
-    if mesh is not None:
-        _check_worker_mesh(mesh, worker_axis, switcher.m)
-    if scan_fn is not None:
-        for lane_kind in ("lane_attacks", "lane_aggregators"):
-            if getattr(scan_fn, lane_kind, None) is not None:
-                raise ValueError(
-                    f"scan_fn was built with {lane_kind}="
-                    f"{getattr(scan_fn, lane_kind)!r}; that variant is for "
-                    f"run_dynabro_scan_sweep(...), not run_dynabro_scan")
-        _check_scan_fn_mesh(scan_fn, mesh)
-        have_mb = getattr(scan_fn, "microbatch", microbatch)
-        if have_mb != microbatch:
-            raise ValueError(
-                f"scan_fn was built with microbatch={have_mb}, but this run "
-                f"passes microbatch={microbatch}; rebuild the scan_fn to "
-                "match (the two paths are not bitwise-equivalent)")
-    if T <= 0:
-        return params, [], []
-    levels, ns, n_max = _level_plan(cfg, np.random.default_rng(seed), T)
-    masks = _mask_schedule(switcher, T, n_max, ns)
-    keys = _np_prng_keys(seed * 100_003 + np.arange(T, dtype=np.int64))
-    scan_fn = scan_fn or make_dynabro_scan_fn(
-        grad_fn, cfg, opt, mesh=mesh, worker_axis=worker_axis,
-        param_specs=param_specs, microbatch=microbatch)
-    if mesh is not None and "model" in mesh.axis_names:
-        pin = _gspmd_constraints(mesh, worker_axis, param_specs)
-        if pin is not None:
-            params = pin.put_params(params)
-    carry = (params, opt.init(params))
-    masks_dev, keys_dev = jnp.asarray(masks), jnp.asarray(keys)
-    levels_dev = jnp.asarray(levels)
 
-    oks, evals = [], []
-    a = 0
-    for b in _segment_bounds(T, eval_every if eval_fn else 0, chunk):
-        batches = _batch_schedule(
-            sample_batches, list(zip(range(a, b), ns[a:b])), n_max,
-            vectorize=vectorize_batches)
-        xs = (levels_dev[a:b], batches, masks_dev[a:b], keys_dev[a:b])
-        carry, (ok, _dn) = scan_fn(carry, xs)
-        oks.append(np.asarray(ok))
-        if eval_fn and eval_every and b % eval_every == 0:
-            evals.append((b, eval_fn(carry[0], b - 1)))
-        a = b
-    ok_all = np.concatenate(oks) if oks else np.zeros(0, bool)
-    return carry[0], _round_logs(levels, ok_all, masks, cfg.mlmc.j_max), evals
+    Thin wrapper over ``repro.api.Session`` (DESIGN.md §10) — the Session
+    carries the identical preflight validation and segment loop.
+    """
+    from repro.api.session import Session
+    sess = Session(cfg, grad_fn=grad_fn, params0=params, opt=opt,
+                   switcher=switcher, sample_batches=sample_batches,
+                   seed=seed, scan_fn=scan_fn,
+                   vectorize_batches=vectorize_batches, mesh=mesh,
+                   worker_axis=worker_axis, param_specs=param_specs,
+                   microbatch=microbatch)
+    return sess.run(T, eval_fn=eval_fn, eval_every=eval_every, chunk=chunk)
 
 
 def make_momentum_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, lr: float,
@@ -958,35 +909,16 @@ def run_momentum_scan(
 ):
     """Compiled drop-in for ``run_momentum`` (same signature + chunking).
     ``mesh`` runs it sharded over the worker axis (1-axis meshes only,
-    DESIGN.md §7)."""
-    if mesh is not None:
-        _check_worker_mesh(mesh, worker_axis, switcher.m, allow_model=False)
-    if scan_fn is not None:
-        _check_scan_fn_mesh(scan_fn, mesh)
-    if T <= 0:
-        return params, []
-    masks = jnp.asarray(np.stack([switcher.mask(t) for t in range(T)]))  # (T, m)
-    keys = jnp.asarray(
-        _np_prng_keys(seed * 77_003 + np.arange(T, dtype=np.int64)))
-    scan_fn = scan_fn or make_momentum_scan_fn(grad_fn, cfg, lr, beta,
-                                               mesh=mesh,
-                                               worker_axis=worker_axis)
-    worker_m = jax.tree.map(
-        lambda p: jnp.zeros((switcher.m,) + p.shape, jnp.float32), params)
-    carry = (params, worker_m)
+    DESIGN.md §7).
 
-    evals = []
-    a = 0
-    for b in _segment_bounds(T, eval_every if eval_fn else 0, chunk):
-        sched = _batch_schedule(sample_batches,
-                                [(t, 1) for t in range(a, b)], 1,
-                                vectorize=vectorize_batches)
-        batches = jax.tree.map(lambda l: l[:, :, 0], sched)  # (L, m, ...)
-        carry, _ = scan_fn(carry, (batches, masks[a:b], keys[a:b]))
-        if eval_fn and eval_every and b % eval_every == 0:
-            evals.append((b, eval_fn(carry[0], b - 1)))
-        a = b
-    return carry[0], evals
+    Thin wrapper over ``repro.api.Session`` (DESIGN.md §10)."""
+    from repro.api.session import Session
+    sess = Session(cfg, grad_fn=grad_fn, params0=params, mode="momentum",
+                   lr=lr, beta=beta, switcher=switcher,
+                   sample_batches=sample_batches, seed=seed, scan_fn=scan_fn,
+                   vectorize_batches=vectorize_batches, mesh=mesh,
+                   worker_axis=worker_axis)
+    return sess.run(T, eval_fn=eval_fn, eval_every=eval_every, chunk=chunk)
 
 
 # ----------------------------------------------- vmapped scenario sweeps
@@ -1146,116 +1078,28 @@ def run_dynabro_scan_sweep(
     when the corresponding axis is absent. The jitted vmap wrapper is
     memoized per scan_fn (``_vmapped_scan_fn``), so repeated sweeps with
     shared scan_fns reuse one compile cache.
+
+    Thin wrapper over ``repro.api.Session.sweep`` driven by a validated
+    ``repro.api.SweepSpec`` (DESIGN.md §10). The raw kwarg forms here remain
+    a one-release compatibility layer; the ``{rule_name: scan_fn}`` mapping
+    kwarg additionally warns — carry prebuilt group fns in
+    ``SweepSpec.scan_fn`` instead.
     """
-    C = len(switchers)
-    for axis_name, specs in (("attacks", attacks), ("aggregators", aggregators)):
-        if specs is not None and len(specs) != C:
-            raise ValueError(
-                f"{axis_name}: expected one per-lane spec per switcher "
-                f"({C}), got {len(specs)}")
-    if C == 0:
-        return []
-    if T <= 0:
-        return [(params, []) for _ in switchers]
-
-    # ---- branch-homogeneous lane grouping (DESIGN.md §7): split a
-    # mixed-rule grid into one sub-sweep per distinct aggregator name, in
-    # first-appearance order, and scatter results back to caller lane order.
-    # Every schedule a sub-sweep derives (levels, keys, batches) is a pure
-    # function of (cfg, seed, T), so the groups share them by construction.
-    group_fns = None
+    from repro.api.session import Session
+    from repro.api.specs import SweepSpec
     if isinstance(scan_fn, Mapping):
-        if aggregators is None:
-            raise ValueError(
-                "scan_fn given as a {rule_name: scan_fn} mapping but this "
-                "sweep passes no aggregators to group by")
-        group_fns = scan_fn
-    if aggregators is not None:
-        agg_specs = _norm_lane_specs(aggregators)
-        distinct = tuple(dict.fromkeys(name for name, _ in agg_specs))
-        if group_fns is not None and set(group_fns) != set(distinct):
-            raise ValueError(
-                f"scan_fn mapping keys {sorted(group_fns)} do not match the "
-                f"grid's distinct aggregator names {sorted(distinct)}")
-        if len(distinct) > 1 and (scan_fn is None or group_fns is not None):
-            outs = [None] * C
-            for name in distinct:
-                idx = [c for c in range(C) if agg_specs[c][0] == name]
-                sub = run_dynabro_scan_sweep(
-                    grad_fn, params, opt, cfg, [switchers[c] for c in idx],
-                    sample_batches, T, seed=seed, chunk=chunk,
-                    scan_fn=None if group_fns is None else group_fns[name],
-                    vectorize_batches=vectorize_batches,
-                    attacks=(None if attacks is None
-                             else [attacks[c] for c in idx]),
-                    aggregators=[aggregators[c] for c in idx])
-                for j, c in enumerate(idx):
-                    outs[c] = sub[j]
-            return outs
-        if group_fns is not None:  # single distinct rule: unwrap and run
-            scan_fn = group_fns[distinct[0]]
-
-    levels, ns, n_max = _level_plan(cfg, np.random.default_rng(seed), T)
-    masks = np.stack([_mask_schedule(sw, T, n_max, ns) for sw in switchers])
-    keys = _np_prng_keys(seed * 100_003 + np.arange(T, dtype=np.int64))
-    atk = agg = atk_names = agg_names = None
-    if attacks is not None:
-        atk_names, ids, thetas = _lane_attack_plan(attacks)
-        atk = (jnp.asarray(ids), jnp.asarray(thetas))
-    if aggregators is not None:
-        agg_names, gids, gthetas, coeffs = _lane_agg_plan(aggregators, cfg)
-        agg = (jnp.asarray(gids), jnp.asarray(gthetas), jnp.asarray(coeffs))
-    lane_mode = atk is not None or agg is not None
-    if scan_fn is None:
-        scan_fn = make_dynabro_scan_fn(grad_fn, cfg, opt,
-                                       lane_attacks=atk_names,
-                                       lane_aggregators=agg_names)
-    else:
-        if getattr(scan_fn, "worker_mesh", None) is not None:
-            raise ValueError(
-                "scan_fn was built with mesh=; vmapped sweeps run unsharded "
-                "(DESIGN.md §7) — rebuild it without mesh")
-        # the lane ids index the derived name tuples; a scan_fn whose
-        # lax.switch branch order differs — or that lacks/adds a lane axis —
-        # would silently apply the wrong attack or rule per lane
-        for kind, want, arg in (("lane_attacks", atk_names, "attacks"),
-                                ("lane_aggregators", agg_names, "aggregators")):
-            have = getattr(scan_fn, kind, None)
-            if have == want:
-                continue
-            if want is None:
-                raise ValueError(
-                    f"scan_fn was built with {kind}={have!r} but this sweep "
-                    f"passes no {arg}; rebuild it without {kind} (or pass "
-                    f"the per-lane {arg})")
-            raise ValueError(
-                f"scan_fn was built with {kind}={have!r} but this sweep's "
-                f"{arg} derive {want!r}; rebuild it with "
-                f"make_dynabro_scan_fn(..., {kind}={want!r})")
-    vseg = _vmapped_scan_fn(scan_fn, lane=lane_mode)
-
-    def lanes(tree):  # identical initial state in every lane
-        return jax.tree.map(
-            lambda l: jnp.broadcast_to(l, (C,) + l.shape), tree)
-
-    carry = (lanes(params), lanes(opt.init(params)))
-    masks_dev, keys_dev = jnp.asarray(masks), jnp.asarray(keys)
-    levels_dev = jnp.asarray(levels)
-
-    oks = []
-    a = 0
-    for b in _segment_bounds(T, 0, chunk):
-        batches = _batch_schedule(
-            sample_batches, list(zip(range(a, b), ns[a:b])), n_max,
-            vectorize=vectorize_batches)
-        xs = (levels_dev[a:b], batches, masks_dev[:, a:b], keys_dev[a:b])
-        if lane_mode:
-            carry, (ok, _dn) = vseg(carry, xs, atk, agg)
-        else:
-            carry, (ok, _dn) = vseg(carry, xs)
-        oks.append(np.asarray(ok))  # (C, b - a)
-        a = b
-    ok_all = np.concatenate(oks, axis=1)
-    return [(jax.tree.map(lambda l, c=c: l[c], carry[0]),
-             _round_logs(levels, ok_all[c], masks[c], cfg.mlmc.j_max))
-            for c in range(C)]
+        warnings.warn(
+            "passing scan_fn as a raw {rule_name: scan_fn} mapping kwarg is "
+            "deprecated and will be removed after one release; carry it in "
+            "repro.api.SweepSpec(..., scan_fn=...) and run "
+            "Session.sweep(spec, T) (DESIGN.md §10)",
+            DeprecationWarning, stacklevel=2)
+    spec = SweepSpec(
+        switchers=tuple(switchers),
+        attacks=None if attacks is None else tuple(attacks),
+        aggregators=None if aggregators is None else tuple(aggregators),
+        scan_fn=scan_fn)
+    sess = Session(cfg, grad_fn=grad_fn, params0=params, opt=opt,
+                   sample_batches=sample_batches, seed=seed,
+                   vectorize_batches=vectorize_batches)
+    return sess.sweep(spec, T, chunk=chunk)

@@ -1,3 +1,7 @@
+from repro.data.classification import (
+    clf_logits, clf_loss, init_clf, make_task,
+)
 from repro.data.pipeline import SyntheticLMData, gaussian_mixture_dataset
 
-__all__ = ["SyntheticLMData", "gaussian_mixture_dataset"]
+__all__ = ["SyntheticLMData", "gaussian_mixture_dataset",
+           "init_clf", "clf_logits", "clf_loss", "make_task"]

@@ -1,0 +1,67 @@
+"""The classification testbed of the Section-6 experiments: a small tanh
+MLP on the synthetic Gaussian-mixture dataset (no downloads offline), with a
+per-unit gradient fn and the deterministic index sampler the drivers expect.
+
+Lives in the package (not under ``benchmarks/``) so the examples and the
+quickstart run with a plain ``pip install -e .``; ``benchmarks._clf`` re-
+exports it for the benchmark modules.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import gaussian_mixture_dataset
+
+N_CLASSES = 10
+DIM = 64
+HIDDEN = 128
+
+
+def init_clf(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (DIM, HIDDEN)) * (1 / DIM ** 0.5),
+        "b1": jnp.zeros(HIDDEN),
+        "w2": jax.random.normal(k2, (HIDDEN, N_CLASSES)) * (1 / HIDDEN ** 0.5),
+        "b2": jnp.zeros(N_CLASSES),
+    }
+
+
+def clf_logits(params, x):
+    h = jnp.tanh(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def clf_loss(params, batch):
+    x, y = batch
+    logits = clf_logits(params, x)
+    return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(y.shape[0]), y])
+
+
+def make_task(m: int, unit_batch: int = 32, seed: int = 0, noise: float = 1.0):
+    """Returns (params0, grad_fn, sampler, eval_fn)."""
+    X, y = gaussian_mixture_dataset(N_CLASSES, DIM, 24000, seed=seed,
+                                    noise=noise)
+    Xtr, ytr = X[:20000], y[:20000]
+    Xte, yte = X[20000:], y[20000:]
+    Xtr, ytr = jnp.asarray(Xtr), jnp.asarray(ytr)
+    Xte, yte = jnp.asarray(Xte), jnp.asarray(yte)
+    n = Xtr.shape[0]
+
+    def grad_fn(params, idx):
+        return jax.grad(clf_loss)(params, (Xtr[idx], ytr[idx]))
+
+    def sampler(t, k):
+        # deterministic index tensor (m, k, unit_batch)
+        key = jax.random.fold_in(jax.random.PRNGKey(seed + 17), t)
+        return jax.random.randint(key, (m, k, unit_batch), 0, n)
+
+    @jax.jit
+    def test_acc(params):
+        return jnp.mean(jnp.argmax(clf_logits(params, Xte), -1) == yte)
+
+    def eval_fn(params, t):
+        return {"test_acc": float(test_acc(params))}
+
+    return init_clf(jax.random.PRNGKey(seed)), grad_fn, sampler, eval_fn

@@ -1,0 +1,24 @@
+"""``repro.serve`` — the continuously-running robust-aggregation service
+(DESIGN.md §10).
+
+Simulated worker clients push ``(worker_id, round, update)`` messages into a
+bounded ring buffer; the server drains them through the jitted per-round
+session step (MLMC estimation + fused aggregation + optimizer update),
+checkpoints the scan carry on an interval, and exposes health / throughput /
+staleness metrics over a lightweight HTTP endpoint plus a structured JSONL
+metrics log. Robustness is first-class: a worker that misses its round
+deadline is masked as dynamically Byzantine for that round (the switcher
+mask path), a full ring applies backpressure to submitters, and shutdown is
+a graceful drain with a bitwise-resumable final checkpoint.
+"""
+from repro.serve.client import SimulatedWorkers, worker_payloads
+from repro.serve.health import HealthEndpoint
+from repro.serve.metrics import MetricsLog, ServeMetrics
+from repro.serve.ring import RingBuffer
+from repro.serve.server import AggregationServer, ServeConfig, Update
+
+__all__ = [
+    "AggregationServer", "ServeConfig", "Update", "RingBuffer",
+    "ServeMetrics", "MetricsLog", "HealthEndpoint",
+    "SimulatedWorkers", "worker_payloads",
+]

@@ -1,0 +1,202 @@
+"""``repro.api`` — the session facade and the validated spec layer.
+
+The load-bearing contracts: ``Session.step`` replay over the schedule is
+*bitwise* ``Session.run`` (chunking invariance on length-1 slices — the
+mechanism the serve loop's offline parity rests on); ``Session.sweep`` with
+a ``SweepSpec`` matches the legacy kwarg form of ``run_dynabro_scan_sweep``
+exactly; specs validate eagerly with errors that name the valid choices; the
+deprecated ``{rule: scan_fn}`` mapping kwarg still works but warns.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import repro.core.robust_train as rt
+from repro.api import (
+    AggSpec, AttackSpec, Session, SweepSpec, build_session,
+    run_dynabro_scan_sweep,
+)
+from repro.core.mlmc import MLMCConfig
+from repro.core.robust_train import DynaBROConfig, make_dynabro_scan_fn
+from repro.core.scenarios import make_quadratic_task
+from repro.core.switching import get_switcher
+from repro.optim.optimizers import adagrad_norm, sgd
+
+TASK = make_quadratic_task()
+M, T, SEED = 6, 8, 5
+
+
+def _cfg(T_=T, m=M, **kw):
+    return DynaBROConfig(
+        mlmc=MLMCConfig(T=T_, m=m, V=3.0, kappa=1.0, j_cap=2),
+        aggregator=kw.pop("aggregator", "cwmed"),
+        delta=kw.pop("delta", 0.4), attack=kw.pop("attack", "sign_flip"), **kw)
+
+
+def _session(seed=SEED, **kw):
+    switcher = kw.pop("switcher",
+                      get_switcher("periodic", M, n_byz=2, K=3, seed=seed))
+    return build_session(_cfg(), TASK, switcher=switcher,
+                         opt=kw.pop("opt", adagrad_norm(2e-2)), seed=seed,
+                         **kw)
+
+
+def _tree_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------------------- session
+
+
+def test_step_replay_is_bitwise_run():
+    """Driving the compiled segment round-by-round through ``step`` (as the
+    serve loop does) reproduces the whole-T ``run`` bitwise — params, opt
+    state, and per-round fail-safe verdicts."""
+    params_ref, logs_ref, _ = _session().run(T)
+
+    sess = _session()
+    sched = sess.schedule(T)
+    carry = sess.init_carry()
+    infos = []
+    for t in range(T):
+        carry, info = sess.step(carry, sess.round_inputs(sched, t))
+        infos.append(info)
+    _tree_equal(carry[0], params_ref)
+    assert [i.failsafe_ok for i in infos] == [lg.failsafe_ok for lg in logs_ref]
+    assert [int(sched.levels[t]) for t in range(T)] == \
+           [lg.level for lg in logs_ref]
+
+
+def test_build_session_validation():
+    with pytest.raises(ValueError, match="unknown session mode"):
+        Session(_cfg(), grad_fn=TASK.grad_fn, params0=TASK.params0,
+                mode="nope")
+    with pytest.raises(ValueError, match="need opt="):
+        Session(_cfg(), grad_fn=TASK.grad_fn, params0=TASK.params0)
+    with pytest.raises(ValueError, match="need lr= and beta="):
+        Session(_cfg(), grad_fn=TASK.grad_fn, params0=TASK.params0,
+                mode="momentum", lr=0.1)
+    # a sweep-built (lane-tagged) scan_fn is rejected up front
+    lane_fn = make_dynabro_scan_fn(TASK.grad_fn, _cfg(), sgd(1e-2),
+                                   lane_aggregators=("cwmed",))
+    with pytest.raises(ValueError, match="not run_dynabro_scan"):
+        _session(scan_fn=lane_fn)
+    # schedules need a worker source
+    sess = Session(_cfg(), grad_fn=TASK.grad_fn, params0=TASK.params0,
+                   opt=sgd(1e-2))
+    with pytest.raises(ValueError, match="switcher"):
+        sess.schedule(T)
+
+
+# --------------------------------------------------------------- specs
+
+
+def test_attack_spec_validates_and_coerces():
+    assert AttackSpec.coerce("sign_flip") == AttackSpec("sign_flip")
+    spec = AttackSpec.coerce(("sign_flip", {"scale": 2.0}))
+    assert spec.kwargs == {"scale": 2.0}
+    assert spec.legacy == ("sign_flip", {"scale": 2.0})
+    assert spec.label == "sign_flip(scale=2.0)"
+    with pytest.raises(ValueError, match="unknown attack 'bogus'; known:"):
+        AttackSpec("bogus")
+    with pytest.raises(ValueError, match="cannot interpret"):
+        AttackSpec.coerce(42)
+    with pytest.raises(TypeError, match="unknown 'sign_flip' attack param"):
+        AttackSpec.make("sign_flip", not_a_param=1.0)
+
+
+def test_agg_spec_validates_and_emits_both_encodings():
+    spec = AggSpec.coerce(("cwtm", {"delta": 0.3}))
+    assert spec.kwargs == {"delta": 0.3}
+    with pytest.raises(ValueError, match="unknown aggregator"):
+        AggSpec("not_a_rule")
+    with pytest.raises(TypeError, match="unknown 'cwtm' aggregator param"):
+        AggSpec.make("cwtm", bogus_knob=1.0)
+
+    # per-cell form: MFM flips to the δ-oblivious Option 2; delta in the
+    # rule kwargs overrides the grid default — consistently with the lane
+    # thr_coeff encoding
+    cfg = _cfg()
+    mfm = AggSpec("mfm")
+    cell = mfm.apply_to(cfg)
+    assert cell.aggregator == "mfm" and cell.mlmc.option == 2
+    assert mfm.thr_coeff(cfg.mlmc) == pytest.approx(
+        float(dataclasses.replace(cfg.mlmc, option=2).threshold_coeff))
+    cell2 = AggSpec.make("krum", delta=0.3).apply_to(cfg)
+    assert cell2.delta == pytest.approx(0.3) and cell2.mlmc.option == 1
+    assert AggSpec("cwmed").apply_to(cfg).aggregator_kwargs is None
+
+
+def test_sweep_spec_lane_count_checked_before_entries():
+    """A wrong-length axis reports the count mismatch (the legacy drivers'
+    message) even when its entries are also malformed."""
+    switchers = ("periodic", "periodic")
+    with pytest.raises(ValueError, match=r"attacks: expected one per-lane "
+                                          r"spec per switcher \(2\), got 1"):
+        SweepSpec(switchers, attacks=("bogus",))
+    with pytest.raises(ValueError, match=r"aggregators: expected one "
+                                          r"per-lane spec per switcher"):
+        SweepSpec(switchers, aggregators=("cwmed", "cwtm", "krum"))
+    with pytest.raises(ValueError, match="unknown attack"):
+        SweepSpec(switchers, attacks=("bogus", "sign_flip"))
+    spec = SweepSpec(switchers, aggregators=("cwmed", ("cwtm", {})))
+    assert spec.lanes == 2
+    assert spec.agg_lanes() == [("cwmed", {}), ("cwtm", {})]
+    assert spec.attack_lanes() is None
+    sub = spec.lane_subset([1])
+    assert sub.switchers == ("periodic",)
+    assert sub.aggregators == (AggSpec("cwtm"),)
+    with pytest.raises(ValueError, match="needs a worker count"):
+        SweepSpec((("periodic", {"n_byz": 2, "K": 3}),)).resolve_switchers(
+            None, SEED)
+    resolved = SweepSpec((("periodic", {"n_byz": 2, "K": 3}),
+                          ("periodic", {"n_byz": 1, "K": 5}),
+                          )).resolve_switchers(M, SEED)
+    assert [sw.m for sw in resolved] == [M, M]
+    assert [sw.K for sw in resolved] == [3, 5]
+
+
+# --------------------------------------------------------------- sweep
+
+
+def test_session_sweep_matches_legacy_kwargs():
+    """One mixed-rule sweep, spelled three ways — legacy kwargs on the
+    ``run_dynabro_scan_sweep`` wrapper, an explicit ``SweepSpec`` through
+    ``Session.sweep``, and the deprecated ``{rule: scan_fn}`` mapping kwarg
+    (which must warn) — lands on bitwise-identical per-lane results."""
+    switchers = tuple(get_switcher("periodic", M, n_byz=1 + c, K=3, seed=SEED)
+                      for c in range(2))
+    aggs = ["cwmed", ("cwtm", {"delta": 0.3})]
+    cfg = _cfg()
+    opt = sgd(1e-2)
+    sampler = TASK.make_sampler(M)
+
+    legacy = run_dynabro_scan_sweep(
+        TASK.grad_fn, TASK.params0, opt, cfg, switchers, sampler, T,
+        seed=SEED, aggregators=aggs)
+
+    sess = Session(cfg, grad_fn=TASK.grad_fn, params0=TASK.params0, opt=opt,
+                   sample_batches=sampler, seed=SEED, m=M)
+    spec = SweepSpec(switchers, aggregators=aggs)
+    via_spec = sess.sweep(spec, T)
+
+    assert len(legacy) == len(via_spec) == 2
+    for (p_a, logs_a), (p_b, logs_b) in zip(legacy, via_spec):
+        _tree_equal(p_a, p_b)
+        assert logs_a == logs_b
+
+    mapping = {
+        rule: rt.make_dynabro_scan_fn(TASK.grad_fn, cfg, opt,
+                                      lane_aggregators=(rule,))
+        for rule in ("cwmed", "cwtm")
+    }
+    with pytest.warns(DeprecationWarning, match="SweepSpec"):
+        via_mapping = run_dynabro_scan_sweep(
+            TASK.grad_fn, TASK.params0, opt, cfg, switchers, sampler, T,
+            seed=SEED, aggregators=aggs, scan_fn=mapping)
+    for (p_a, logs_a), (p_b, logs_b) in zip(legacy, via_mapping):
+        _tree_equal(p_a, p_b)
+        assert logs_a == logs_b

@@ -1,0 +1,286 @@
+"""``repro.serve`` — the continuously-running aggregation service.
+
+The contracts that matter (DESIGN.md §10): a fully-delivered worker stream
+is *bitwise*-identical to the offline compiled driver (the serve loop drives
+the same compiled segment on length-1 slices); a timed-out worker is masked
+as dynamically Byzantine for exactly that round (server == an offline replay
+that ORs the same bits); a killed server resumes from its last periodic
+checkpoint bitwise; the bounded ring and the lookahead window apply
+backpressure instead of dropping.
+"""
+import json
+import threading
+import time
+import urllib.request
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import build_session
+from repro.checkpoint import latest_checkpoint
+from repro.core.mlmc import MLMCConfig
+from repro.core.robust_train import DynaBROConfig
+from repro.core.scenarios import make_quadratic_task
+from repro.core.switching import get_switcher
+from repro.optim.optimizers import adagrad_norm
+from repro.serve import (
+    AggregationServer, HealthEndpoint, MetricsLog, RingBuffer, ServeConfig,
+    ServeMetrics, SimulatedWorkers, worker_payloads,
+)
+
+TASK = make_quadratic_task()
+M, T, SEED = 16, 12, 11
+
+
+def _session(m=M, T_=T, seed=SEED):
+    cfg = DynaBROConfig(mlmc=MLMCConfig(T=T_, m=m, V=3.0, kappa=1.0, j_cap=2),
+                        aggregator="cwmed", delta=0.4, attack="sign_flip")
+    switcher = get_switcher("periodic", m, n_byz=m // 4, K=4, seed=seed)
+    return build_session(cfg, TASK, switcher=switcher,
+                         opt=adagrad_norm(2e-2), seed=seed)
+
+
+def _tree_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# --------------------------------------------------------------- ring
+
+
+def test_ring_fifo_and_high_water():
+    ring = RingBuffer(4)
+    for i in range(3):
+        assert ring.put(i)
+    assert [ring.get() for _ in range(3)] == [0, 1, 2]
+    st = ring.stats()
+    assert st["ring_pushed"] == 3 and st["ring_high_water"] == 3
+    assert st["ring_depth"] == 0 and st["ring_rejected"] == 0
+
+
+def test_ring_overflow_backpressure():
+    """A full ring blocks the producer; past the timeout the put is REJECTED
+    (False + counted), never silently dropped or overwritten."""
+    ring = RingBuffer(2)
+    assert ring.put("a") and ring.put("b")
+    t0 = time.monotonic()
+    assert ring.put("c", timeout=0.1) is False
+    assert time.monotonic() - t0 >= 0.09
+    assert ring.stats()["ring_rejected"] == 1
+    # draining one slot unblocks a waiting producer
+    unblocked = []
+    th = threading.Thread(
+        target=lambda: unblocked.append(ring.put("c", timeout=5.0)))
+    th.start()
+    assert ring.get() == "a"
+    th.join(5.0)
+    assert unblocked == [True]
+    assert ring.get() == "b" and ring.get() == "c"
+
+
+def test_ring_close_wakes_waiters_and_drains():
+    ring = RingBuffer(1)
+    assert ring.put("x")
+    results = []
+    producer = threading.Thread(
+        target=lambda: results.append(ring.put("y", timeout=10.0)))
+    producer.start()
+    time.sleep(0.05)
+    ring.close()
+    producer.join(5.0)
+    assert results == [False]          # blocked put rejected on close
+    assert ring.get() == "x"           # queued items stay drainable
+    assert ring.get(timeout=0.01) is None
+    assert ring.put("z") is False
+    with pytest.raises(ValueError, match="capacity"):
+        RingBuffer(0)
+
+
+# ----------------------------------------------------- metrics / health
+
+
+def test_metrics_counters_window_and_log(tmp_path):
+    m = ServeMetrics(window_s=60.0)
+    m.inc("updates_accepted", 3)
+    m.mark_updates(3)
+    m.observe_staleness(0.2)
+    m.observe_staleness(0.4)
+    snap = m.snapshot()
+    assert snap["updates_accepted"] == 3
+    assert snap["updates_per_sec"] > 0
+    assert snap["staleness_mean_s"] == pytest.approx(0.3)
+    assert snap["staleness_max_s"] == pytest.approx(0.4)
+
+    path = tmp_path / "metrics.jsonl"
+    log = MetricsLog(str(path))
+    log.write({"event": "round", "round": 0})
+    log.close()
+    [rec] = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert rec["event"] == "round" and "ts" in rec
+    MetricsLog(None).write({"noop": True})  # None path is a no-op
+
+
+def test_health_endpoint_routes():
+    ep = HealthEndpoint(lambda: {"status": "live", "round": 4,
+                                 "rounds_total": 8, "extra": 1.5})
+    ep.start()
+    try:
+        with urllib.request.urlopen(ep.url + "/health", timeout=5) as r:
+            health = json.load(r)
+        assert health == {"status": "live", "round": 4, "rounds_total": 8}
+        with urllib.request.urlopen(ep.url + "/metrics", timeout=5) as r:
+            assert json.load(r)["extra"] == 1.5
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(ep.url + "/nope", timeout=5)
+        assert ei.value.code == 404
+    finally:
+        ep.stop()
+
+
+# ------------------------------------------------------------- server
+
+
+def test_submit_validation_and_lookahead_backpressure():
+    """Far-future rounds block in admission (bounded memory) and time out as
+    backpressure; invalid ids are rejected outright. No loop is running, so
+    the current round stays 0 throughout."""
+    sess = _session()
+    server = AggregationServer(sess, T, ServeConfig(lookahead_rounds=2))
+    payload = worker_payloads(sess, T)[0][0]
+    assert server.submit(-1, 0, payload) is False
+    assert server.submit(0, T, payload) is False
+    assert server.submit(0, 0, payload, timeout=1.0) is True
+    t0 = time.monotonic()
+    assert server.submit(0, 2, payload, timeout=0.15) is False
+    assert time.monotonic() - t0 >= 0.1
+    snap = server.snapshot()
+    assert snap["updates_invalid"] == 2
+    assert snap["updates_backpressured"] == 1
+    assert snap["status"] == "live" and snap["round"] == 0
+    server.close()
+    assert server.submit(0, 0, payload) is False  # post-shutdown reject
+
+
+def test_stream_matches_offline_driver_bitwise(tmp_path):
+    """The acceptance contract: a 16-worker simulated client stream, with
+    submission jitter exercising cross-round reordering, yields final params
+    bitwise-identical to the offline compiled scan driver, plus matching
+    round logs, health progress and a structured metrics trail."""
+    params_ref, logs_ref, _ = _session().run(T)
+
+    sess = _session()
+    log_path = tmp_path / "serve.jsonl"
+    server = AggregationServer(sess, T, ServeConfig(
+        capacity=64, lookahead_rounds=4, health_port=0,
+        metrics_log=str(log_path)))
+    server.start()
+    workers = SimulatedWorkers(server, worker_payloads(sess, T),
+                               jitter_s=0.002).start()
+    assert workers.join(timeout=120.0) and not workers.failures
+    assert server.join(timeout=120.0), server.snapshot()
+
+    with urllib.request.urlopen(server.health.url + "/health",
+                                timeout=5) as r:
+        health = json.load(r)
+    server.close()
+    assert server.error is None
+    assert health["status"] == "completed"
+    assert health["round"] == T and health["rounds_completed"] == T
+    assert health["updates_accepted"] == M * T
+
+    _tree_equal(server.params, params_ref)
+    assert server.logs == logs_ref
+    events = [json.loads(ln) for ln in log_path.read_text().splitlines()]
+    rounds = [e for e in events if e["event"] == "round"]
+    assert [e["round"] for e in rounds] == list(range(T))
+    assert all(e["workers"] == M and e["stragglers"] == 0 for e in rounds)
+
+
+def test_straggler_timeout_masks_as_byzantine():
+    """Workers that miss the round deadline are ORed into that round's
+    Byzantine mask with an inert zero-filled batch slot — the server output
+    is bitwise-identical to an offline step replay applying the exact same
+    masking, and the metrics count each masked straggler."""
+    drop = {(2, 3), (9, 3), (5, 7)}
+    sess = _session()
+    sched = sess.schedule(T)
+
+    # offline reference replay: same zero-fill + mask-OR, no server involved
+    carry = sess.init_carry()
+    for t in range(T):
+        inp = sess.round_inputs(sched, t)
+        dropped = [w for w, r in drop if r == t]
+        if dropped:
+            masks = np.array(inp.masks)
+            masks[..., dropped] = True
+            inp.masks = masks
+            keep = jnp.asarray([w not in dropped for w in range(M)])
+            inp.batches = jax.tree.map(
+                lambda l: jnp.where(
+                    keep.reshape((-1,) + (1,) * (l.ndim - 1)), l,
+                    jnp.zeros_like(l)), inp.batches)
+        carry, _ = sess.step(carry, inp)
+
+    server = AggregationServer(_session(), T, ServeConfig(
+        round_timeout_s=0.25, min_workers=1))
+    server.start()
+    workers = SimulatedWorkers(server, worker_payloads(sess, T),
+                               drop=drop).start()
+    assert workers.join(timeout=120.0) and not workers.failures
+    assert server.join(timeout=120.0), server.snapshot()
+    snap = server.snapshot()
+    server.close()
+    assert server.error is None
+    assert snap["stragglers_masked"] == len(drop)
+    assert snap["updates_accepted"] == M * T - len(drop)
+    _tree_equal(server.params, carry[0])
+    # the straggler rounds count the ORed bits as Byzantine in the logs
+    for t, dropped in ((3, [2, 9]), (7, [5])):
+        expected = np.logical_or(sched.masks[t][0],
+                                 np.isin(np.arange(M), dropped))
+        assert server.logs[t].n_byz == int(expected.sum())
+
+
+def test_kill_resume_is_bitwise(tmp_path):
+    """Mid-stream kill/resume: periodic checkpoints every 4 rounds, a hard
+    stop (no final checkpoint) after round 6, resume from the newest
+    checkpoint (round 4), replay from there — final params bitwise-match an
+    uninterrupted offline run, and a graceful drain then leaves a final
+    checkpoint at the exact boundary T."""
+    params_ref, _, _ = _session().run(T)
+    ckpt_dir = str(tmp_path / "ckpts")
+    (tmp_path / "ckpts").mkdir()
+    cfg = ServeConfig(checkpoint_every=4, checkpoint_dir=ckpt_dir)
+
+    sess = _session()
+    payloads = worker_payloads(sess, T)
+    server = AggregationServer(sess, T, cfg)
+    server.start()
+    SimulatedWorkers(server, payloads[:6]).start().join(timeout=120.0)
+    deadline = time.monotonic() + 120.0
+    while server.round < 6 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert server.round == 6, server.snapshot()
+    server.stop(drain=False)  # kill: rounds 4-5 die with the process
+    server.close()
+    found = latest_checkpoint(ckpt_dir, prefix="carry_")
+    assert found is not None and found[1] == 4
+
+    sess2 = _session()
+    resumed = AggregationServer.resume(sess2, T, cfg)
+    assert resumed.start_round == 4
+    resumed.start()
+    workers = SimulatedWorkers(resumed, worker_payloads(sess2, T, start=4),
+                               start_round=4).start()
+    assert workers.join(timeout=120.0) and not workers.failures
+    assert resumed.join(timeout=120.0), resumed.snapshot()
+    resumed.stop(drain=True)
+    resumed.close()
+    assert resumed.error is None
+
+    _tree_equal(resumed.params, params_ref)
+    assert latest_checkpoint(ckpt_dir, prefix="carry_")[1] == T
+    # and a third resume starts at T with nothing left to do
+    assert AggregationServer.resume(_session(), T, cfg).start_round == T
