@@ -34,6 +34,7 @@ def run(T: int = 400, seeds=(0, 1), dmaxes=(0.72, 0.48)):
                                           sampler, T, seed=s)
                 accs["dynabro"].append(eval_fn(pp, T)["test_acc"])
                 byz_frac.append(np.mean([l.n_byz for l in logs]) / M)
+                # jaxlint: disable=JXL003 -- 2.5 = 5/2 is exact in binary, so T*2.5 is exact; intended grad-budget truncation
                 Tm = int(T * 2.5)
                 for beta, tag in ((0.9, "momentum0.9"), (0.0, "sgd")):
                     sw2 = get_switcher("bernoulli", M, p=p, D=D, delta_max=dmax,

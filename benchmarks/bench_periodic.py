@@ -33,6 +33,7 @@ def run(T: int = 400, Ks=(5, 20, 100, 10_000_000), seeds=(0, 1)):
                                   T, seed=s)
             accs["dynabro"].append(eval_fn(p, T)["test_acc"])
             # equal total gradient budget: MLMC uses ~2.5 grads/round in expectation
+            # jaxlint: disable=JXL003 -- 2.5 = 5/2 is exact in binary, so T*2.5 is exact; intended grad-budget truncation
             Tm = int(T * 2.5)
             for beta in (0.9, 0.99, 0.0):
                 sw2 = get_switcher("periodic", M, n_byz=NBYZ, K=K, seed=s)

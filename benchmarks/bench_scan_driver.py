@@ -54,6 +54,7 @@ from repro.core.robust_train import (
 from repro.core.scenarios import make_quadratic_task
 from repro.core.switching import get_switcher
 from repro.launch.mesh import make_worker_mesh
+from repro.lint.runtime import recompile_guard
 from repro.optim.optimizers import sgd
 
 SWEEP_KS = (5, 8, 10, 15, 20, 25, 40, 50)  # C=8 periodic switcher cells
@@ -71,13 +72,23 @@ AGG_MIX_SPECS = (("cwmed", {}), ("cwtm", {"delta": 0.3}),
                  ("krum", {"delta": 0.45}), ("nnm+cwmed", {"delta": 0.45}))
 
 
+# backend compiles observed inside any _time timed loop — after the warmup
+# call, every timed iteration must ride the jit cache; the total feeds the
+# scan_driver/recompiles_steady row and its 0-compile CI gate (DESIGN.md §11)
+_STEADY_RECOMPILES = 0
+
+
 def _time(fn, iters: int):
+    global _STEADY_RECOMPILES
     fn()  # warmup: compiles + populates per-level jit caches
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn()
-    jax.block_until_ready(jax.tree.leaves(out[0]))
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+    with recompile_guard("bench_scan_driver timed loop", action="count") as g:
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn()
+        jax.block_until_ready(jax.tree.leaves(out[0]))
+        us = (time.perf_counter() - t0) / iters * 1e6
+    _STEADY_RECOMPILES += g.count
+    return us
 
 
 def _setup(T: int, m: int):
@@ -384,6 +395,8 @@ def main(fast: bool = False):
     rows.append(f"scan_driver/sweep_agg_loop,{us_cells:.0f},")
     rows.append(f"scan_driver/sweep_vmap_mixed_aggs,{us_grouped:.0f},"
                 f"speedup={us_cells / us_grouped:.1f}x")
+    rows.append(f"scan_driver/recompiles_steady,0,"
+                f"recompiles={_STEADY_RECOMPILES}")
     return rows
 
 

@@ -24,6 +24,7 @@ from repro.core.mlmc import MLMCConfig
 from repro.core.robust_train import DynaBROConfig
 from repro.core.scenarios import make_quadratic_task
 from repro.core.switching import get_switcher
+from repro.lint.runtime import recompile_guard
 from repro.optim.optimizers import adagrad_norm
 from repro.serve import AggregationServer, ServeConfig, SimulatedWorkers
 from repro.serve.client import worker_payloads
@@ -77,7 +78,12 @@ def main(fast: bool = False):
     jax.block_until_ready(params_ref["x"])
     offline_wall = time.perf_counter() - t0
 
-    params, wall = _stream(sess, T, payloads)
+    # the timed stream is post-warmup steady state: the length-1 step segment
+    # and the whole-T offline segment are both hot, so ANY compile inside the
+    # window is churn — the count feeds the serve 0-recompile CI gate
+    # (DESIGN.md §11); compiles on the server's consumer thread count too
+    with recompile_guard("bench_serve timed stream", action="count") as g:
+        params, wall = _stream(sess, T, payloads)
     for a, b in zip(np.asarray(params["x"]), np.asarray(params_ref["x"])):
         assert a == b, "served stream diverged from the offline driver"
 
@@ -88,6 +94,7 @@ def main(fast: bool = False):
         f"overhead={wall / offline_wall:.2f}x",
         f"serve/offline_scan_m16,{offline_wall / T * 1e6:.0f},"
         f"rounds_per_sec={T / offline_wall:.0f}",
+        f"serve/recompiles_steady,0,recompiles={g.count}",
     ]
 
 

@@ -63,6 +63,12 @@ GATES = [
     # floor only catches a collapse of the serve loop's per-round overhead
     # on the 2-core CI runners, not hardware variance.
     ("serve/sustained_m16", "updates_per_sec", 250.0, ">="),
+    # steady-state recompile gates (DESIGN.md §11): after warmup, the timed
+    # bench loops and the serve consumer must ride the jit cache — ONE
+    # compile inside a timed window is a silent 10x, so the bound is zero
+    # (counted via jax.monitoring by repro.lint.runtime.recompile_guard)
+    ("scan_driver/recompiles_steady", "recompiles", 0.0, "<="),
+    ("serve/recompiles_steady", "recompiles", 0.0, "<="),
 ]
 
 

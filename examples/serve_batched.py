@@ -24,17 +24,19 @@ def main():
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
-    key = jax.random.PRNGKey(0)
-    params = init_params(cfg, key)
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+    # one subkey per consumer — reusing one key correlates the prompt draw
+    # with the weight init (jaxlint JXL001)
+    kp, kt, kx = jax.random.split(jax.random.PRNGKey(0), 3)
+    params = init_params(cfg, kp)
+    prompts = jax.random.randint(kt, (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
     extra = None
     if cfg.family == "audio":
         extra = {"frames": 0.1 * jax.random.normal(
-            key, (args.batch, cfg.encoder_seq, cfg.d_model))}
-    if cfg.family == "vlm":
+            kx, (args.batch, cfg.encoder_seq, cfg.d_model))}
+    elif cfg.family == "vlm":
         extra = {"patches": 0.1 * jax.random.normal(
-            key, (args.batch, cfg.n_image_tokens, cfg.d_model))}
+            kx, (args.batch, cfg.n_image_tokens, cfg.d_model))}
 
     total = args.prompt_len + args.tokens
     t0 = time.time()

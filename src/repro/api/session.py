@@ -28,8 +28,10 @@ working.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+import os
+from typing import Any, Callable, Dict, List, Mapping, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +41,10 @@ from repro.api.specs import SweepSpec
 from repro.core import robust_train as rt
 from repro.core.mlmc import round_cost, sample_level
 from repro.core.switching import Switcher
+from repro.lint import runtime as sanitizers
 from repro.optim.optimizers import Optimizer
+
+GUARD_ENV = "REPRO_RECOMPILE_GUARD"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,7 +105,9 @@ class Session:
                  lr: Optional[float] = None, beta: Optional[float] = None,
                  scan_fn=None, vectorize_batches: bool = True,
                  mesh=None, worker_axis: str = "workers", param_specs=None,
-                 microbatch: bool = False, m: Optional[int] = None):
+                 microbatch: bool = False, m: Optional[int] = None,
+                 guard_recompiles: Optional[bool] = None,
+                 nan_tripwire: Optional[bool] = None):
         if mode not in ("dynabro", "momentum"):
             raise ValueError(
                 f"unknown session mode {mode!r}; expected 'dynabro' or "
@@ -152,6 +159,17 @@ class Session:
                         "bitwise-equivalent)")
         self._scan_fn = scan_fn
         self._schedules: Dict[int, RoundSchedule] = {}
+        # runtime sanitizers (DESIGN.md §11): the recompile guard asserts a
+        # compiled-segment signature seen once before never compiles again
+        # (steady state — serve inherits this through step); the NaN tripwire
+        # host-checks aggregator-facing outputs. Both default to their env
+        # opt-ins (REPRO_RECOMPILE_GUARD / REPRO_NAN_TRIPWIRE).
+        if guard_recompiles is None:
+            guard_recompiles = os.environ.get(GUARD_ENV, "").lower() in (
+                "1", "true", "on")
+        self.guard_recompiles = guard_recompiles
+        self.nan_tripwire = nan_tripwire
+        self._steady_sigs: Set[Tuple] = set()
 
     # ------------------------------------------------------------ pieces
 
@@ -228,25 +246,50 @@ class Session:
         batches = jax.tree.map(lambda l: l[:, 0], self.sample_batches(t, 1))
         return RoundInputs(t, 0, batches, sched.masks[t], sched.keys[t])
 
+    def _steady_guard(self, tag: str, xs, label: str):
+        """A ``recompile_guard`` once this (tag, xs shapes/dtypes) signature
+        has been seen (the first call with a signature is warmup: it may
+        compile), else a null context that just records the signature."""
+        if not self.guard_recompiles:
+            return contextlib.nullcontext()
+        sig: Tuple = (tag, self.mode) + tuple(jax.tree.leaves(
+            jax.tree.map(lambda l: (tuple(l.shape), str(l.dtype)), xs)))
+        if sig in self._steady_sigs:
+            return sanitizers.recompile_guard(label)
+        self._steady_sigs.add(sig)
+        return contextlib.nullcontext()
+
     def step(self, carry, inputs: RoundInputs):
         """Advance one round: drive the compiled segment on a length-1
         schedule slice. Bitwise-identical to the same round inside a
         whole-``T`` ``run()`` (chunking invariance, DESIGN.md §5/§10).
         Returns ``(carry, StepInfo)``."""
-        sched = self._schedules.get(inputs.t + 1) or next(
-            iter(self._schedules.values()), None)
-        lvl_dtype = (sched.levels.dtype if sched is not None else np.int64)
+        # every schedule() path emits int32 level plans (level_schedule and
+        # the momentum zeros), so the step's trace signature is fixed a
+        # priori — the old fallback consulted whichever schedule happened to
+        # be cached first, tying the jit signature to cache insertion order
         one = lambda x: jnp.asarray(np.asarray(x)[None])  # noqa: E731
         if self.mode == "dynabro":
-            xs = (jnp.asarray(np.asarray([inputs.level], dtype=lvl_dtype)),
+            xs = (jnp.asarray(np.asarray([inputs.level], dtype=np.int32)),
                   jax.tree.map(lambda l: jnp.asarray(l)[None], inputs.batches),
                   one(inputs.masks), one(inputs.key))
-            carry, (ok, dn) = self.scan_fn(carry, xs)
-            return carry, StepInfo(failsafe_ok=bool(np.asarray(ok)[0]),
-                                   corr_norm=float(np.asarray(dn)[0]))
+            with self._steady_guard("step", xs,
+                                    f"Session.step (round {inputs.t})"):
+                carry, (ok, dn) = self.scan_fn(carry, xs)
+            info = StepInfo(failsafe_ok=bool(np.asarray(ok)[0]),
+                            corr_norm=float(np.asarray(dn)[0]))
+            sanitizers.maybe_assert_finite(
+                {"params": carry[0], "corr_norm": dn},
+                f"Session.step round {inputs.t}", enabled=self.nan_tripwire)
+            return carry, info
         xs = (jax.tree.map(lambda l: jnp.asarray(l)[None], inputs.batches),
               one(inputs.masks), one(inputs.key))
-        carry, _ = self.scan_fn(carry, xs)
+        with self._steady_guard("step", xs,
+                                f"Session.step (round {inputs.t})"):
+            carry, _ = self.scan_fn(carry, xs)
+        sanitizers.maybe_assert_finite(
+            carry[0], f"Session.step round {inputs.t}",
+            enabled=self.nan_tripwire)
         return carry, StepInfo()
 
     # ------------------------------------------------------------ drivers
@@ -289,8 +332,13 @@ class Session:
                 self.sample_batches, list(zip(range(a, b), sched.ns[a:b])),
                 sched.n_max, vectorize=self.vectorize_batches)
             xs = (levels_dev[a:b], batches, masks_dev[a:b], keys_dev[a:b])
-            carry, (ok, _dn) = scan_fn(carry, xs)
+            with self._steady_guard("run", xs,
+                                    f"Session.run segment [{a}:{b}]"):
+                carry, (ok, _dn) = scan_fn(carry, xs)
             oks.append(np.asarray(ok))
+            sanitizers.maybe_assert_finite(
+                carry[0], f"Session.run segment [{a}:{b}]",
+                enabled=self.nan_tripwire)
             if eval_fn and eval_every and b % eval_every == 0:
                 evals.append((b, eval_fn(carry[0], b - 1)))
             a = b
@@ -315,7 +363,13 @@ class Session:
                                         [(t, 1) for t in range(a, b)], 1,
                                         vectorize=self.vectorize_batches)
             batches = jax.tree.map(lambda l: l[:, :, 0], bsched)  # (L, m, ...)
-            carry, _ = scan_fn(carry, (batches, masks[a:b], keys[a:b]))
+            xs = (batches, masks[a:b], keys[a:b])
+            with self._steady_guard("run", xs,
+                                    f"Session.run segment [{a}:{b}]"):
+                carry, _ = scan_fn(carry, xs)
+            sanitizers.maybe_assert_finite(
+                carry[0], f"Session.run segment [{a}:{b}]",
+                enabled=self.nan_tripwire)
             if eval_fn and eval_every and b % eval_every == 0:
                 evals.append((b, eval_fn(carry[0], b - 1)))
             a = b

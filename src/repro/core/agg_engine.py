@@ -342,7 +342,17 @@ def count_ceil(v: float) -> int:
     nudge also corrects f64 artifacts: 0.28·25 is exactly 7, but f64 rounds
     the product to 7.000000000000001 — a bare math.ceil returns 8 there,
     diverging from both exact arithmetic and the f32 lane path."""
+    # jaxlint: disable=JXL003 -- this IS the sanctioned nudged helper JXL003 points at
     return math.ceil(v - 1e-5)
+
+
+def count_floor(v: float) -> int:
+    """⌊v⌋ for host-side δ·m counts — the floor twin of ``count_ceil``,
+    with the same 1e-5 nudge in the opposite direction: 0.3·10 is exactly 3,
+    but f64 rounds the product to 2.9999999999999996, so a bare ``int()``
+    truncation returns 2 (the ``Bernoulli`` cap bug this helper fixed)."""
+    # jaxlint: disable=JXL003 -- this IS the sanctioned nudged helper JXL003 points at
+    return math.floor(v + 1e-5)
 
 
 def trim_count(delta: float, m: int) -> int:

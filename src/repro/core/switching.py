@@ -10,6 +10,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.agg_engine import count_floor
+
 
 class Switcher:
     def __init__(self, m: int, seed: int = 0):
@@ -127,7 +129,9 @@ class Bernoulli(Switcher):
         super().__init__(m, seed)
         self.p = p
         self.D = D
-        self.cap = int(delta_max * m)
+        # nudged floor: a bare int() truncation of the f64 product caps one
+        # worker short at exact boundaries (int(0.3 * 10) == 2, exact is 3)
+        self.cap = count_floor(delta_max * m)
         self._until = np.zeros(m, np.int64)  # byz until round (exclusive)
         self._computed_to = 0
 

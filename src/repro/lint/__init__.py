@@ -1,0 +1,36 @@
+"""repro.lint — JAX-aware static analysis + runtime sanitizers (DESIGN.md §11).
+
+Two halves, one import surface:
+
+* the static pass (``engine`` / ``rules`` / ``python -m repro.lint``):
+  stdlib-only, importable without jax, so the CI lint job can gate it from
+  the ruff venv;
+* the runtime sanitizers (``runtime``): ``recompile_guard``, the compile
+  counter and the NaN/Inf tripwire — these need jax and are re-exported
+  lazily so importing ``repro.lint`` never pulls it in.
+"""
+
+from __future__ import annotations
+
+from repro.lint.engine import Violation, lint_paths, lint_source  # noqa: F401
+
+_RUNTIME = (
+    "GuardStats",
+    "RecompileError",
+    "assert_all_finite",
+    "compile_count",
+    "install_compile_counter",
+    "maybe_assert_finite",
+    "recompile_guard",
+    "tripwire_enabled",
+)
+
+__all__ = ["Violation", "lint_paths", "lint_source", *_RUNTIME]
+
+
+def __getattr__(name: str):
+    if name in _RUNTIME:
+        from repro.lint import runtime
+
+        return getattr(runtime, name)
+    raise AttributeError(f"module 'repro.lint' has no attribute {name!r}")

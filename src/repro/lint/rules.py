@@ -1,0 +1,643 @@
+"""The jaxlint rule registry: JAX hazards this codebase has actually hit.
+
+Each rule is an AST checker registered under a ``JXL00x`` code (DESIGN.md
+§11 has the rule table and each rule's motivating historical bug). Rules
+yield ``(node, message)`` pairs; the engine applies suppressions and
+formats. Everything here is stdlib-only — see the engine docstring.
+
+The traced-context analysis is deliberately heuristic: it looks for
+functions that are *known* to be traced (jit/vmap/grad-decorated, or passed
+by name into ``jax.lax`` control flow / ``jax.jit`` / ``shard_map`` /
+``pallas_call``) and taints their parameters. Names derived from
+``.shape`` / ``.ndim`` / ``.dtype`` / ``.size`` attributes, ``is None``
+pytree-structure checks, and ``static_argnames`` parameters are exempt —
+those are the host-static escape hatches tracing supports.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Callable, Dict, Iterator, List, Optional, Set, Tuple
+
+RuleHit = Tuple[ast.AST, str]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    code: str
+    summary: str
+    check: Callable[[ast.Module, str], Iterator[RuleHit]]
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def rule(code: str, summary: str):
+    def register(fn: Callable[[ast.Module, str], Iterator[RuleHit]]) -> Rule:
+        r = Rule(code, summary, fn)
+        RULES[code] = r
+        return r
+
+    return register
+
+
+# --------------------------------------------------------------- shared AST
+
+
+def _attr_chain(node: ast.AST) -> List[str]:
+    """``jax.lax.scan`` -> ["jax", "lax", "scan"]; [] for non-name chains."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        parts.reverse()
+        return parts
+    return []
+
+
+def _call_name(call: ast.Call) -> str:
+    chain = _attr_chain(call.func)
+    return chain[-1] if chain else ""
+
+
+# transforms whose function-valued arguments run under a tracer
+TRANSFORMS = {
+    "jit",
+    "vmap",
+    "pmap",
+    "grad",
+    "value_and_grad",
+    "shard_map",
+    "pallas_call",
+    "checkify",
+    "custom_vjp",
+    "custom_jvp",
+    "scan",
+    "cond",
+    "switch",
+    "while_loop",
+    "fori_loop",
+    "associative_scan",
+    "remat",
+    "checkpoint",
+}
+
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "aval", "sharding"}
+
+
+def _static_names(call: ast.Call) -> Set[str]:
+    """Extract ``static_argnames=`` parameter names from a jit-like call."""
+    out: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg != "static_argnames":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, str):
+            out.add(v.value)
+        elif isinstance(v, (ast.Tuple, ast.List)):
+            for el in v.elts:
+                if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                    out.add(el.value)
+    return out
+
+
+@dataclasses.dataclass
+class TracedFn:
+    node: ast.AST  # FunctionDef | AsyncFunctionDef
+    static_params: Set[str]
+    via: str  # how we know it's traced, for messages
+
+
+def _params(fn) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def _transform_target(call: ast.Call) -> Optional[str]:
+    """The transform name if this call IS a transform application (including
+    ``functools.partial(jax.jit, ...)``), else None."""
+    name = _call_name(call)
+    if name in TRANSFORMS:
+        return name
+    if name == "partial" and call.args:
+        inner = call.args[0]
+        chain = _attr_chain(inner)
+        if chain and chain[-1] in TRANSFORMS:
+            return chain[-1]
+    return None
+
+
+def find_traced_functions(tree: ast.Module) -> List[TracedFn]:
+    """Functions known to run under a tracer: transform-decorated, or passed
+    by (bare) name into a transform call; nested defs inherit tracedness."""
+    defs: Dict[str, List[ast.AST]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, []).append(node)
+
+    traced: Dict[int, TracedFn] = {}
+
+    def mark(fn: ast.AST, via: str, static: Set[str]) -> None:
+        if id(fn) in traced:
+            traced[id(fn)].static_params |= static
+        else:
+            traced[id(fn)] = TracedFn(fn, static, via)
+
+    # 1. decorator form: @jit / @partial(jax.jit, static_argnames=...)
+    for name, nodes in defs.items():
+        for node in nodes:
+            for dec in node.decorator_list:
+                chain = _attr_chain(dec)
+                if chain and chain[-1] in TRANSFORMS:
+                    mark(node, f"@{chain[-1]}", set())
+                elif isinstance(dec, ast.Call):
+                    target = _transform_target(dec)
+                    if target is not None:
+                        mark(node, f"@{target}", _static_names(dec))
+
+    # 2. call-site form: lax.scan(body, ...), jax.jit(step, ...),
+    #    lax.switch(i, [f, g], ...)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        target = _transform_target(node)
+        if target is None:
+            continue
+        static = _static_names(node)
+        cands: List[ast.AST] = list(node.args)
+        for arg in node.args:
+            if isinstance(arg, (ast.List, ast.Tuple)):  # lax.switch branches
+                cands.extend(arg.elts)
+        for arg in cands:
+            if isinstance(arg, ast.Name):
+                for fn in defs.get(arg.id, ()):
+                    mark(fn, f"passed to {target}", static)
+
+    # 3. defs nested inside traced functions trace with their parent
+    changed = True
+    while changed:
+        changed = False
+        for tf in list(traced.values()):
+            for inner in ast.walk(tf.node):
+                if (
+                    isinstance(inner, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and inner is not tf.node
+                    and id(inner) not in traced
+                ):
+                    traced[id(inner)] = TracedFn(
+                        inner, set(), f"nested in traced {tf.node.name}"
+                    )
+                    changed = True
+    return list(traced.values())
+
+
+# ----------------------------------------------------------- taint analysis
+
+
+def _is_none_check(node: ast.AST) -> bool:
+    """``x is None`` / ``x is not None`` — the pytree-structure branch form
+    jit supports (structure is static), never a tracer leak."""
+    return isinstance(node, ast.Compare) and all(
+        isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops
+    )
+
+
+_UNTAINT_CALLS = {"len", "isinstance", "type", "range", "enumerate", "zip"}
+
+
+class Taint:
+    """Which local names derive from traced parameters, by forward
+    propagation through the statement list (two passes, for loops)."""
+
+    def __init__(self, fn, static_params: Set[str]):
+        self.tainted: Set[str] = {
+            p for p in _params(fn) if p not in static_params and p != "self"
+        }
+
+    def expr(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in STATIC_ATTRS:
+                return False
+            return self.expr(node.value)
+        if isinstance(node, ast.Call):
+            if _call_name(node) in _UNTAINT_CALLS:
+                return False
+            recv = (  # method receiver: x.sum() taints through x
+                self.expr(node.func.value)
+                if isinstance(node.func, ast.Attribute)
+                else False
+            )
+            return (
+                recv
+                or any(self.expr(a) for a in node.args)
+                or any(self.expr(kw.value) for kw in node.keywords)
+            )
+        if _is_none_check(node):
+            return False
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.expr(e) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return self.expr(node.value)
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.expr, ast.Starred)) and self.expr(child):
+                return True
+        return False
+
+    def _assign_targets(self, target: ast.AST, value_tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            if value_tainted:
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._assign_targets(el, value_tainted)
+        elif isinstance(target, ast.Starred):
+            self._assign_targets(target.value, value_tainted)
+
+    def propagate(self, fn) -> None:
+        for _ in range(2):  # second pass fixes loop-carried taint
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign):
+                    t = self.expr(node.value)
+                    for target in node.targets:
+                        self._assign_targets(target, t)
+                elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                    self._assign_targets(node.target, self.expr(node.value))
+                elif isinstance(node, ast.AugAssign):
+                    if self.expr(node.value):
+                        self._assign_targets(node.target, True)
+                elif isinstance(node, ast.For):
+                    self._assign_targets(node.target, self.expr(node.iter))
+                elif isinstance(node, ast.withitem) and node.optional_vars:
+                    self._assign_targets(
+                        node.optional_vars, self.expr(node.context_expr)
+                    )
+
+
+def _traced_contexts(tree: ast.Module):
+    for tf in find_traced_functions(tree):
+        taint = Taint(tf.node, tf.static_params)
+        taint.propagate(tf.node)
+        yield tf, taint
+
+
+def _walk_own(fn) -> Iterator[ast.AST]:
+    """Walk a function body without descending into nested defs (those are
+    their own traced contexts, with their own parameters)."""
+    stack: List[ast.AST] = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+# ------------------------------------------------------------------- JXL001
+
+
+_KEY_MAKERS = {"PRNGKey", "key", "split", "fold_in", "clone"}
+_KEY_DERIVERS = {"split", "fold_in", "clone", "key_data", "wrap_key_data"}
+_RANDOM_CONSUMERS = {
+    "normal",
+    "uniform",
+    "bernoulli",
+    "randint",
+    "bits",
+    "permutation",
+    "choice",
+    "categorical",
+    "gumbel",
+    "laplace",
+    "exponential",
+    "truncated_normal",
+    "poisson",
+    "gamma",
+    "beta",
+    "dirichlet",
+    "rademacher",
+    "cauchy",
+    "orthogonal",
+    "ball",
+    "t",
+    "dropout",
+}
+
+
+def _is_key_name(name: str) -> bool:
+    low = name.lower()
+    return low == "rng" or low.endswith("key") or low.endswith("keys")
+
+
+@rule("JXL001", "PRNG key consumed more than once without split/fold_in")
+def jxl001(tree: ast.Module, path: str) -> Iterator[RuleHit]:
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        key_vars: Set[str] = {p for p in _params(fn) if _is_key_name(p)}
+        for node in _walk_own(fn):
+            if isinstance(node, ast.Assign):
+                if (
+                    isinstance(node.value, ast.Call)
+                    and _call_name(node.value) in _KEY_MAKERS
+                ):
+                    for target in node.targets:
+                        for el in (
+                            target.elts
+                            if isinstance(target, (ast.Tuple, ast.List))
+                            else [target]
+                        ):
+                            if isinstance(el, ast.Name):
+                                key_vars.add(el.id)
+        if not key_vars:
+            continue
+
+        uses: Dict[str, List[ast.AST]] = {}
+        loops: List[ast.AST] = []
+
+        def loop_guard(name: str, loop: ast.AST) -> bool:
+            """True when ``name`` is re-derived per iteration: it is a loop
+            target, or (re)assigned somewhere in the loop body."""
+            targets = loop.target if isinstance(loop, ast.For) else None
+            names: Set[str] = set()
+            if targets is not None:
+                for el in ast.walk(targets):
+                    if isinstance(el, ast.Name):
+                        names.add(el.id)
+            if name in names:
+                return True
+            for sub in ast.walk(loop):
+                if isinstance(sub, ast.Assign):
+                    for target in sub.targets:
+                        for el in ast.walk(target):
+                            if isinstance(el, ast.Name) and el.id == name:
+                                return True
+            return False
+
+        def record(name: str, site: ast.AST, weight: int) -> None:
+            uses.setdefault(name, []).extend([site] * weight)
+
+        def consume(call: ast.Call) -> None:
+            fname = _call_name(call)
+            if fname in _KEY_DERIVERS:
+                return  # split/fold_in derive, they do not consume
+            in_loop = [lp for lp in loops]
+            args = [(None, a) for a in call.args] + [
+                (kw.arg, kw.value) for kw in call.keywords
+            ]
+            for kwname, a in args:
+                if not (isinstance(a, ast.Name) and a.id in key_vars):
+                    continue
+                if fname not in _RANDOM_CONSUMERS and kwname != "key":
+                    continue
+                weight = 1
+                for lp in in_loop:
+                    if not loop_guard(a.id, lp):
+                        weight = 2  # same key every iteration
+                record(a.id, call, weight)
+
+        def visit(node: ast.AST) -> None:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return
+            if isinstance(node, ast.If):
+                # exclusive branches: only one side runs, so a key used once
+                # in each arm is consumed once, not twice — keep the heavier
+                # arm's uses
+                visit(node.test)
+                before = {k: list(v) for k, v in uses.items()}
+                for stmt in node.body:
+                    visit(stmt)
+                after_body = {k: list(v) for k, v in uses.items()}
+                uses.clear()
+                uses.update({k: list(v) for k, v in before.items()})
+                for stmt in node.orelse:
+                    visit(stmt)
+                for k in set(after_body) | set(uses):
+                    body_sites = after_body.get(k, [])
+                    if len(body_sites) > len(uses.get(k, [])):
+                        uses[k] = body_sites
+                return
+            entered = isinstance(node, (ast.For, ast.While))
+            if entered:
+                loops.append(node)
+            if isinstance(node, ast.Call):
+                consume(node)
+            if isinstance(node, ast.Assign):
+                # reassignment re-derives: close the previous use window
+                for target in node.targets:
+                    for el in ast.walk(target):
+                        if isinstance(el, ast.Name) and el.id in uses:
+                            uses.pop(el.id, None)
+            for child in ast.iter_child_nodes(node):
+                visit(child)
+            if entered:
+                loops.pop()
+
+        for stmt in fn.body:
+            visit(stmt)
+        for name, sites in uses.items():
+            if len(sites) >= 2:
+                yield (
+                    sites[1],
+                    f"PRNG key '{name}' is consumed {len(sites)}x in "
+                    f"'{fn.name}' without an intervening split/fold_in — "
+                    f"identical randomness at every use",
+                )
+
+
+# ------------------------------------------------------------------- JXL002
+
+
+@rule("JXL002", "host-side branching on traced values inside traced code")
+def jxl002(tree: ast.Module, path: str) -> Iterator[RuleHit]:
+    for tf, taint in _traced_contexts(tree):
+        for node in _walk_own(tf.node):
+            if isinstance(node, (ast.If, ast.While)):
+                test = node.test
+                if _is_none_check(test):
+                    continue
+                if taint.expr(test):
+                    kind = "while" if isinstance(node, ast.While) else "if"
+                    yield (
+                        test,
+                        f"host `{kind}` on a traced value inside "
+                        f"'{tf.node.name}' ({tf.via}) — this raises a "
+                        f"TracerBoolConversionError or bakes one branch in "
+                        f"at trace time; use lax.cond/jnp.where",
+                    )
+            elif isinstance(node, ast.Call):
+                name = _call_name(node)
+                if name in ("int", "float", "bool") and any(
+                    taint.expr(a) for a in node.args
+                ):
+                    yield (
+                        node,
+                        f"`{name}()` on a traced value inside "
+                        f"'{tf.node.name}' ({tf.via}) — forces a host "
+                        f"round-trip per call (or fails under jit)",
+                    )
+
+
+# ------------------------------------------------------------------- JXL003
+
+
+@rule("JXL003", "f64 host arithmetic feeding traced integer/count math")
+def jxl003(tree: ast.Module, path: str) -> Iterator[RuleHit]:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        if chain[:1] == ["math"] and chain[-1] in ("ceil", "floor", "trunc"):
+            yield (
+                node,
+                f"math.{chain[-1]} on a float product picks up f64 "
+                f"representation error at exact boundaries (the PR 4 "
+                f"ceil() artifact); use agg_engine.count_ceil/count_floor",
+            )
+        elif (
+            chain == ["int"]
+            and len(node.args) == 1
+            and isinstance(node.args[0], ast.BinOp)
+            and isinstance(node.args[0].op, (ast.Mult, ast.Div))
+        ):
+            yield (
+                node,
+                "int() truncation of a float product/quotient — "
+                "int(0.3 * 10) == 2; use agg_engine.count_floor (nudged) "
+                "or an exact integer formula",
+            )
+
+
+# ------------------------------------------------------------------- JXL004
+
+
+_DETERMINISTIC_PARTS = ("/core/", "/api/", "/data/", "/checkpoint", "/optim/")
+_WALL_CLOCK = {"time", "time_ns", "now", "utcnow", "today"}
+_SEEDLESS_NP_RANDOM = {
+    "rand",
+    "randn",
+    "random",
+    "randint",
+    "random_integers",
+    "random_sample",
+    "choice",
+    "permutation",
+    "shuffle",
+    "normal",
+    "uniform",
+    "standard_normal",
+    "seed",
+}
+
+
+def _in_deterministic_layer(path: str) -> bool:
+    p = path.replace("\\", "/")
+    return any(part in p for part in _DETERMINISTIC_PARTS)
+
+
+@rule("JXL004", "nondeterminism in schedule/replay paths")
+def jxl004(tree: ast.Module, path: str) -> Iterator[RuleHit]:
+    deterministic = _in_deterministic_layer(path)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            chain = _attr_chain(node.func)
+            name = chain[-1] if chain else ""
+            if chain == ["hash"] and node.args:
+                yield (
+                    node,
+                    "hash() is salted per process (PYTHONHASHSEED) — the "
+                    "PR 5 flaky-seed bug; derive seeds from explicit "
+                    "integers or fold_in",
+                )
+            elif (
+                deterministic
+                and len(chain) >= 2
+                and chain[-2] == "time"
+                and name in _WALL_CLOCK
+            ):
+                yield (
+                    node,
+                    f"time.{name}() in a deterministic layer — schedules "
+                    f"and replay streams must be pure functions of "
+                    f"(cfg, seed, T)",
+                )
+            elif (
+                len(chain) >= 2
+                and chain[-2] == "random"
+                and chain[0] in ("np", "numpy")
+                and name in _SEEDLESS_NP_RANDOM
+            ):
+                yield (
+                    node,
+                    f"seedless np.random.{name}() draws from global mutable "
+                    f"state — use np.random.default_rng(seed)",
+                )
+            elif (
+                name == "default_rng"
+                and len(chain) >= 2
+                and chain[-2] == "random"
+                and not node.args
+                and not node.keywords
+            ):
+                yield (
+                    node,
+                    "np.random.default_rng() without a seed is entropy-"
+                    "seeded — pass an explicit seed",
+                )
+        elif isinstance(node, ast.For):
+            it = node.iter
+            is_set_iter = isinstance(it, (ast.Set, ast.SetComp)) or (
+                isinstance(it, ast.Call) and _call_name(it) == "set"
+            )
+            if is_set_iter:
+                yield (
+                    it,
+                    "iteration over a set — element order depends on the "
+                    "per-process hash seed for str keys; sort it or use "
+                    "dict.fromkeys for ordered dedup",
+                )
+
+
+# ------------------------------------------------------------------- JXL005
+
+
+@rule("JXL005", "numpy/host ops on traced values inside scan/shard_map")
+def jxl005(tree: ast.Module, path: str) -> Iterator[RuleHit]:
+    for tf, taint in _traced_contexts(tree):
+        for node in _walk_own(tf.node):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            if chain and chain[0] in ("np", "numpy"):
+                if any(taint.expr(a) for a in node.args) or any(
+                    taint.expr(kw.value) for kw in node.keywords
+                ):
+                    yield (
+                        node,
+                        f"numpy call '{'.'.join(chain)}' on a traced value "
+                        f"inside '{tf.node.name}' ({tf.via}) — forces a "
+                        f"device sync per trace (or a TracerArrayConversion"
+                        f"Error); use jnp",
+                    )
+            elif (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("item", "tolist", "to_py")
+                and taint.expr(node.func.value)
+            ):
+                yield (
+                    node,
+                    f".{node.func.attr}() on a traced value inside "
+                    f"'{tf.node.name}' ({tf.via}) — host materialization "
+                    f"in traced code",
+                )

@@ -1,0 +1,145 @@
+"""Runtime sanitizers: the recompile guard and the NaN/Inf tripwire.
+
+Static analysis catches hazards visible in source; these catch the two
+that only manifest at run time — silent recompilation churn (a 10x
+steady-state slowdown that looks like "jax is slow") and non-finite
+aggregates propagating through a robust rule that is supposed to bound
+them.
+
+``recompile_guard`` counts XLA backend compiles via ``jax.monitoring``'s
+event-duration stream (one ``.../backend_compile_duration`` event per
+actual compile; cache hits emit nothing — verified on jax 0.4.37 and
+current). The listener is process-global and installed once; guards read
+before/after deltas, so nesting and threads both work (a compile on any
+thread inside the window counts — the serve consumer drives the jitted
+step from its worker thread).
+
+jax is imported lazily so ``repro.lint``'s static side stays importable
+from the jax-less CI lint venv.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import threading
+from typing import Iterator, Optional
+
+_LOCK = threading.Lock()
+_COMPILES = 0
+_INSTALLED = False
+
+
+class RecompileError(AssertionError):
+    """A guarded steady-state region recompiled."""
+
+
+def _on_event(event: str, duration: float, **kw) -> None:
+    global _COMPILES
+    if "backend_compile" in event:
+        with _LOCK:
+            _COMPILES += 1
+
+
+def install_compile_counter() -> None:
+    """Idempotently hook the process-global compile counter into
+    ``jax.monitoring``. Called by ``recompile_guard``; call it early (before
+    warmup) if you want ``compile_count()`` to cover warmup compiles too."""
+    global _INSTALLED
+    with _LOCK:
+        if _INSTALLED:
+            return
+        _INSTALLED = True
+    from jax import monitoring
+
+    monitoring.register_event_duration_secs_listener(_on_event)
+
+
+def compile_count() -> int:
+    """Backend compiles observed since ``install_compile_counter``."""
+    with _LOCK:
+        return _COMPILES
+
+
+@dataclasses.dataclass
+class GuardStats:
+    """Filled in when the guarded block exits: ``count`` is the number of
+    backend compiles that happened inside the window."""
+
+    label: str
+    count: int = 0
+
+
+@contextlib.contextmanager
+def recompile_guard(
+    label: str = "steady state",
+    max_recompiles: int = 0,
+    action: str = "raise",
+) -> Iterator[GuardStats]:
+    """Assert a warmed code region stays on the jit cache.
+
+    ``action="raise"`` raises ``RecompileError`` when more than
+    ``max_recompiles`` compiles land inside the block (the default, and the
+    contract ``Session`` enforces in guarded mode); ``action="count"`` only
+    records the delta in the yielded ``GuardStats`` — the benchmark mode,
+    where the count becomes a gated CSV row instead of an exception. The
+    count is recorded even when the block raises; the guard's own error is
+    suppressed then (never mask the original failure).
+    """
+    if action not in ("raise", "count"):
+        raise ValueError(f"unknown action {action!r}; expected raise|count")
+    install_compile_counter()
+    stats = GuardStats(label)
+    start = compile_count()
+    try:
+        yield stats
+    except BaseException:
+        stats.count = compile_count() - start
+        raise
+    stats.count = compile_count() - start
+    if action == "raise" and stats.count > max_recompiles:
+        raise RecompileError(
+            f"{label}: {stats.count} recompile(s) in a steady-state region "
+            f"(allowed {max_recompiles}) — a shape/dtype/static-arg is "
+            f"changing between calls"
+        )
+
+
+# ------------------------------------------------------------ NaN tripwire
+
+TRIPWIRE_ENV = "REPRO_NAN_TRIPWIRE"
+
+
+def assert_all_finite(tree, label: str = "aggregate") -> None:
+    """Host-side NaN/Inf tripwire over a pytree of arrays; raises
+    ``FloatingPointError`` naming the offending leaf path."""
+    import jax
+    import numpy as np
+
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in leaves:
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fc":
+            continue
+        if not np.isfinite(arr).all():
+            bad = int((~np.isfinite(arr)).sum())
+            raise FloatingPointError(
+                f"{label}: {bad} non-finite value(s) at leaf "
+                f"{jax.tree_util.keystr(path) or '<root>'}"
+            )
+
+
+def tripwire_enabled(explicit: Optional[bool] = None) -> bool:
+    """The tripwire's opt-in: an explicit flag wins, else the
+    ``REPRO_NAN_TRIPWIRE`` env var ('1'/'true'/'on')."""
+    if explicit is not None:
+        return explicit
+    return os.environ.get(TRIPWIRE_ENV, "").lower() in ("1", "true", "on")
+
+
+def maybe_assert_finite(
+    tree, label: str = "aggregate", enabled: Optional[bool] = None
+) -> None:
+    if tripwire_enabled(enabled):
+        assert_all_finite(tree, label)

@@ -6,8 +6,19 @@ TPU-friendly formulation: expert dim shards over the data axis
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
+
+
+def _capacity(tokens: int, top_k: int, factor: float, E: int) -> int:
+    """Per-expert token capacity ⌊tokens·k·factor/E⌋, nudged so f64
+    representation error cannot truncate an exact boundary one token short
+    (int(0.3 * 10) == 2) — the local twin of ``agg_engine.count_floor``
+    (models/ stays import-independent of core/)."""
+    # jaxlint: disable=JXL003 -- sanctioned nudged-floor helper, see docstring
+    return max(1, math.floor(tokens * top_k * factor / E + 1e-5))
 
 
 def _topk_dispatch(probs: jax.Array, top_k: int, capacity: int):
@@ -109,12 +120,12 @@ def moe_ffn(x: jax.Array, p: dict, *, top_k: int, capacity_factor: float,
         return out.reshape(B, S, D), aux
     if token_group and N > token_group and N % token_group == 0:
         g = N // token_group
-        capacity = max(1, int(token_group * top_k * capacity_factor / E))
+        capacity = _capacity(token_group, top_k, capacity_factor, E)
         xg = xf.reshape(g, token_group, D)
         # vmap (not scan): keeps the group axis a shardable tensor dim
         out, auxs = jax.vmap(
             lambda xc: _moe_group(xc, p, top_k, capacity, act, expert_shard))(xg)
         return out.reshape(B, S, D), auxs.mean()
-    capacity = max(1, int(N * top_k * capacity_factor / E))
+    capacity = _capacity(N, top_k, capacity_factor, E)
     out, aux = _moe_group(xf, p, top_k, capacity, act, expert_shard)
     return out.reshape(B, S, D), aux

@@ -428,6 +428,7 @@ def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
             x, a, c = _block_apply(x, gp[f"b{i}"], cfg, mixer, mk,
                                    kv_src=kv_src, mode=mode, pad_to=pad_to)
             aux = aux + a
+            # jaxlint: disable=JXL002 -- c is a host dict of cache leaves; its truthiness is static pytree structure, not a traced value
             if c:
                 caches[f"b{i}"] = c
         return x, (aux, caches)

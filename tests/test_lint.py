@@ -1,0 +1,514 @@
+"""repro.lint: rule fixtures (positive / negative / suppressed), engine
+suppression semantics, the runtime sanitizers, and the core fixes the pass
+motivated (the Bernoulli cap truncation, DESIGN.md §11)."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.lint.engine import lint_paths, lint_source
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def codes(src, path="fixture.py", select=None):
+    return [v.rule for v in lint_source(src, path=path, select=select)]
+
+
+# ------------------------------------------------------------------- JXL001
+
+
+def test_jxl001_fires_on_key_reuse():
+    src = (
+        "import jax\n"
+        "def f(key):\n"
+        "    a = jax.random.normal(key, (3,))\n"
+        "    b = jax.random.uniform(key, (3,))\n"
+        "    return a + b\n"
+    )
+    assert codes(src) == ["JXL001"]
+
+
+def test_jxl001_fires_on_loop_reuse():
+    src = (
+        "import jax\n"
+        "def f(key, xs):\n"
+        "    out = []\n"
+        "    for x in xs:\n"
+        "        out.append(jax.random.normal(key, (3,)))\n"
+        "    return out\n"
+    )
+    assert codes(src) == ["JXL001"]
+
+
+def test_jxl001_clean_on_split_and_fold_in():
+    src = (
+        "import jax\n"
+        "def f(key, xs):\n"
+        "    k1, k2 = jax.random.split(key)\n"
+        "    a = jax.random.normal(k1, (3,))\n"
+        "    b = jax.random.uniform(k2, (3,))\n"
+        "    out = []\n"
+        "    for i, x in enumerate(xs):\n"
+        "        ki = jax.random.fold_in(key, i)\n"
+        "        out.append(jax.random.normal(ki, (3,)))\n"
+        "    return a, b, out\n"
+    )
+    assert codes(src) == []
+
+
+def test_jxl001_clean_on_exclusive_branches():
+    src = (
+        "import jax\n"
+        "def f(key, kind):\n"
+        "    if kind == 'a':\n"
+        "        x = jax.random.normal(key, (3,))\n"
+        "    elif kind == 'b':\n"
+        "        x = jax.random.uniform(key, (3,))\n"
+        "    return x\n"
+    )
+    assert codes(src) == []
+
+
+def test_jxl001_counts_key_kwarg_handoff():
+    src = (
+        "def f(key, g):\n"
+        "    a = attack(g, key=key)\n"
+        "    b = attack(g, key=key)\n"
+        "    return a, b\n"
+    )
+    assert codes(src) == ["JXL001"]
+
+
+def test_jxl001_suppression_honored():
+    src = (
+        "import jax\n"
+        "def f(key):\n"
+        "    a = jax.random.normal(key, (3,))\n"
+        "    # jaxlint: disable=JXL001 -- antithetic pair wants shared draws\n"
+        "    b = jax.random.uniform(key, (3,))\n"
+        "    return a + b\n"
+    )
+    assert codes(src) == []
+
+
+# ------------------------------------------------------------------- JXL002
+
+
+def test_jxl002_fires_on_traced_branch_in_scan_body():
+    src = (
+        "import jax\n"
+        "def body(carry, x):\n"
+        "    if x > 0:\n"
+        "        carry = carry + x\n"
+        "    return carry, x\n"
+        "def run(xs):\n"
+        "    return jax.lax.scan(body, 0.0, xs)\n"
+    )
+    assert codes(src) == ["JXL002"]
+
+
+def test_jxl002_fires_on_int_cast_in_jitted_fn():
+    src = "import jax\n@jax.jit\ndef f(x):\n    return int(x) + 1\n"
+    assert codes(src) == ["JXL002"]
+
+
+def test_jxl002_clean_on_static_escapes():
+    src = (
+        "import jax\n"
+        "def body(carry, x):\n"
+        "    if x.shape[0] > 2:\n"
+        "        carry = carry * 2\n"
+        "    if x is not None:\n"
+        "        carry = carry + 1\n"
+        "    return carry, x\n"
+        "def run(xs):\n"
+        "    return jax.lax.scan(body, 0.0, xs)\n"
+    )
+    assert codes(src) == []
+
+
+def test_jxl002_clean_on_static_argnames():
+    src = (
+        "import jax\n"
+        "def step(params, j):\n"
+        "    if j > 0:\n"
+        "        params = params * j\n"
+        "    return params\n"
+        "step = jax.jit(step, static_argnames=('j',))\n"
+    )
+    assert codes(src) == []
+
+
+def test_jxl002_untraced_function_is_ignored():
+    src = "def host(x):\n    if x > 0:\n        return x\n    return -x\n"
+    assert codes(src) == []
+
+
+def test_jxl002_suppression_honored():
+    src = (
+        "import jax\n"
+        "def body(carry, x):\n"
+        "    # jaxlint: disable=JXL002 -- x is a host dict, truthiness static\n"
+        "    if x:\n"
+        "        carry = carry + 1\n"
+        "    return carry, x\n"
+        "def run(xs):\n"
+        "    return jax.lax.scan(body, 0.0, xs)\n"
+    )
+    assert codes(src) == []
+
+
+# ------------------------------------------------------------------- JXL003
+
+
+def test_jxl003_fires_on_math_ceil_and_int_product():
+    src = (
+        "import math\n"
+        "def caps(delta, m):\n"
+        "    return math.ceil(delta * m), int(delta * m)\n"
+    )
+    assert codes(src) == ["JXL003", "JXL003"]
+
+
+def test_jxl003_clean_on_nudged_and_non_product_forms():
+    src = "def caps(delta, m):\n    return int(round(delta)), int(m), m // 2\n"
+    assert codes(src) == []
+
+
+def test_jxl003_suppression_honored():
+    src = (
+        "import math\n"
+        "def count_ceil(v):\n"
+        "    # jaxlint: disable=JXL003 -- the sanctioned nudged helper\n"
+        "    return math.ceil(v - 1e-5)\n"
+    )
+    assert codes(src) == []
+
+
+# ------------------------------------------------------------------- JXL004
+
+
+def test_jxl004_fires_on_hash_seed():
+    src = "def seed_for(name):\n    return hash(name) % 2 ** 31\n"
+    assert codes(src) == ["JXL004"]
+
+
+def test_jxl004_fires_on_seedless_np_random():
+    src = (
+        "import numpy as np\n"
+        "def draw(m):\n"
+        "    return np.random.rand(m), np.random.default_rng()\n"
+    )
+    assert codes(src) == ["JXL004", "JXL004"]
+
+
+def test_jxl004_fires_on_wall_clock_in_deterministic_layer():
+    src = "import time\ndef seed():\n    return int(time.time())\n"
+    assert codes(src, path="src/repro/core/sched.py") == ["JXL004"]
+
+
+def test_jxl004_wall_clock_allowed_outside_deterministic_layers():
+    src = "import time\ndef bench():\n    return time.time()\n"
+    assert codes(src, path="benchmarks/bench_x.py") == []
+
+
+def test_jxl004_perf_counter_allowed_everywhere():
+    src = "import time\ndef wall():\n    return time.perf_counter()\n"
+    assert codes(src, path="src/repro/core/scenarios.py") == []
+
+
+def test_jxl004_fires_on_set_iteration():
+    src = (
+        "def f(d):\n"
+        "    out = []\n"
+        "    for k in set(d):\n"
+        "        out.append(k)\n"
+        "    return out\n"
+    )
+    assert codes(src) == ["JXL004"]
+
+
+def test_jxl004_seeded_rng_clean():
+    src = (
+        "import numpy as np\n"
+        "def draw(m, seed):\n"
+        "    return np.random.default_rng(seed).random(m)\n"
+    )
+    assert codes(src) == []
+
+
+def test_jxl004_suppression_honored():
+    src = (
+        "def seed_for(name):\n"
+        "    # jaxlint: disable=JXL004 -- never replayed, diagnostics only\n"
+        "    return hash(name)\n"
+    )
+    assert codes(src) == []
+
+
+# ------------------------------------------------------------------- JXL005
+
+
+def test_jxl005_fires_on_np_call_in_scan_body():
+    src = (
+        "import jax\n"
+        "import numpy as np\n"
+        "def body(carry, x):\n"
+        "    y = np.asarray(x)\n"
+        "    return carry + y.sum(), x\n"
+        "def run(xs):\n"
+        "    return jax.lax.scan(body, 0.0, xs)\n"
+    )
+    assert codes(src) == ["JXL005"]
+
+
+def test_jxl005_fires_on_item_in_shard_map_body():
+    src = (
+        "from jax.experimental.shard_map import shard_map\n"
+        "def body(x):\n"
+        "    return x.sum().item()\n"
+        "def run(mesh, xs):\n"
+        "    return shard_map(body, mesh, in_specs=None, out_specs=None)(xs)\n"
+    )
+    assert codes(src) == ["JXL005"]
+
+
+def test_jxl005_np_on_host_constants_clean():
+    src = (
+        "import jax\n"
+        "import numpy as np\n"
+        "SCHED = np.arange(8)\n"
+        "def body(carry, x):\n"
+        "    return carry + x, x\n"
+        "def run(xs):\n"
+        "    plan = np.asarray(SCHED)\n"
+        "    return jax.lax.scan(body, 0.0, xs)\n"
+    )
+    assert codes(src) == []
+
+
+def test_jxl005_suppression_honored():
+    src = (
+        "import jax\n"
+        "import numpy as np\n"
+        "def body(carry, x):\n"
+        "    # jaxlint: disable=JXL005 -- x is a host-side schedule here\n"
+        "    y = np.asarray(x)\n"
+        "    return carry + y.sum(), x\n"
+        "def run(xs):\n"
+        "    return jax.lax.scan(body, 0.0, xs)\n"
+    )
+    assert codes(src) == []
+
+
+# -------------------------------------------------------------- engine/CLI
+
+
+def test_reasonless_suppression_is_jxl000():
+    src = "import math\ndef f(v):\n    return math.ceil(v)  # jaxlint: disable=JXL003\n"
+    got = codes(src)
+    assert "JXL000" in got and "JXL003" in got
+
+
+def test_select_filters_rules():
+    src = "import math\ndef f(v, name):\n    return math.ceil(v), hash(name)\n"
+    assert codes(src, select=["JXL004"]) == ["JXL004"]
+
+
+def test_syntax_error_reported_not_raised():
+    assert codes("def f(:\n") == ["JXL999"]
+
+
+def test_repo_ships_clean():
+    trees = [
+        os.path.join(REPO, t)
+        for t in ("src", "benchmarks", "examples")
+        if os.path.exists(os.path.join(REPO, t))
+    ]
+    violations = lint_paths(trees)
+    assert not violations, "\n".join(v.render() for v in violations)
+
+
+def test_cli_importable_without_jax():
+    code = (
+        "import sys; sys.modules['jax'] = None; sys.modules['numpy'] = None\n"
+        "from repro.lint.engine import lint_source\n"
+        "from repro.lint.rules import RULES\n"
+        "import repro.lint\n"
+        "assert len(RULES) >= 5\n"
+        "assert lint_source('x = 1') == []\n"
+        "print('ok')\n"
+    )
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True
+    )
+    assert out.returncode == 0, out.stderr
+    assert "ok" in out.stdout
+
+
+def test_cli_list_rules():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.lint", "--list-rules"],
+        env=env,
+        capture_output=True,
+        text=True,
+    )
+    assert out.returncode == 0, out.stderr
+    for code in ("JXL001", "JXL002", "JXL003", "JXL004", "JXL005"):
+        assert code in out.stdout
+
+
+def test_no_tracked_bytecode():
+    try:
+        out = subprocess.run(
+            ["git", "ls-files", "*.pyc", "**/__pycache__/**"],
+            cwd=REPO,
+            capture_output=True,
+            text=True,
+            timeout=30,
+        )
+    except (OSError, subprocess.TimeoutExpired):
+        pytest.skip("git unavailable")
+    if out.returncode != 0:
+        pytest.skip("not a git checkout")
+    assert out.stdout.strip() == "", f"tracked bytecode: {out.stdout}"
+
+
+# ------------------------------------------------------- runtime sanitizers
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.lint.runtime import (  # noqa: E402
+    RecompileError,
+    assert_all_finite,
+    maybe_assert_finite,
+    recompile_guard,
+)
+
+
+def test_recompile_guard_catches_forced_recompile():
+    f = jax.jit(lambda x: x * 2.0)
+    f(jnp.ones(3))  # warm one shape
+    with pytest.raises(RecompileError, match="recompile"):
+        with recompile_guard("forced"):
+            f(jnp.ones(4))  # new shape inside the guarded window
+
+
+def test_recompile_guard_steady_state_clean():
+    f = jax.jit(lambda x: x * 3.0)
+    f(jnp.ones(5))
+    with recompile_guard("steady") as g:
+        for _ in range(4):
+            f(jnp.ones(5))
+    assert g.count == 0
+
+
+def test_recompile_guard_count_mode_never_raises():
+    f = jax.jit(lambda x: x * 5.0)
+    f(jnp.ones(2))
+    with recompile_guard("count", action="count") as g:
+        f(jnp.ones(6))
+    assert g.count >= 1
+
+
+def test_recompile_guard_does_not_mask_exceptions():
+    f = jax.jit(lambda x: x + 1.0)
+    f(jnp.ones(2))
+    with pytest.raises(RuntimeError, match="original"):
+        with recompile_guard("raise-through") as g:
+            f(jnp.ones(7))
+            raise RuntimeError("original failure")
+    assert g.count >= 1  # the delta is still recorded
+
+
+def test_session_steady_state_under_guard():
+    from repro.api import build_session
+    from repro.core.mlmc import MLMCConfig
+    from repro.core.robust_train import DynaBROConfig
+    from repro.core.scenarios import make_quadratic_task
+    from repro.core.switching import get_switcher
+    from repro.optim.optimizers import sgd
+
+    task = make_quadratic_task()
+    cfg = DynaBROConfig(
+        mlmc=MLMCConfig(T=16, m=5, V=3.0, kappa=1.0, j_cap=2),
+        aggregator="cwmed",
+        delta=0.4,
+        attack="sign_flip",
+    )
+    sess = build_session(
+        cfg,
+        task,
+        switcher=get_switcher("periodic", 5, n_byz=2, K=4, seed=0),
+        opt=sgd(2e-2),
+        seed=0,
+        guard_recompiles=True,
+    )
+    p1, _, _ = sess.run(16)  # warmup: records the segment signature
+    p2, _, _ = sess.run(16)  # steady state: guarded, must not recompile
+    np.testing.assert_array_equal(np.asarray(p1["x"]), np.asarray(p2["x"]))
+
+
+def test_nan_tripwire():
+    assert_all_finite({"x": np.ones(3)}, "fine")
+    with pytest.raises(FloatingPointError, match="non-finite"):
+        assert_all_finite({"x": np.array([1.0, np.inf])}, "agg")
+    with pytest.raises(FloatingPointError):
+        maybe_assert_finite({"x": np.array([np.nan])}, "agg", enabled=True)
+    maybe_assert_finite({"x": np.array([np.nan])}, "agg", enabled=False)
+    assert_all_finite({"i": np.array([1, 2], np.int64)}, "ints are exempt")
+
+
+# ----------------------------------------------- fixes the pass motivated
+
+
+def test_bernoulli_cap_exact_boundary():
+    from repro.core.switching import get_switcher
+
+    # int(0.3 * 10) == 2 under f64 truncation; the exact product is 3 — the
+    # old cap ran one Byzantine worker short of δmax·m at these boundaries
+    assert get_switcher("bernoulli", 10, p=0.3, D=2, delta_max=0.3).cap == 3
+    assert get_switcher("bernoulli", 30, p=0.3, D=2, delta_max=0.1).cap == 3
+
+
+def test_bernoulli_cap_parity_off_boundary():
+    from repro.core.switching import Bernoulli
+
+    # away from exact boundaries the nudged floor equals the old int()
+    # truncation, so masks/schedules are bitwise-unchanged there
+    for dm, m in [(0.25, 9), (0.3, 9), (0.2, 7), (0.45, 16), (0.5, 11)]:
+        new = Bernoulli(m, p=0.2, D=2, delta_max=dm, seed=1)
+        assert new.cap == int(dm * m), (dm, m)
+        old = Bernoulli(m, p=0.2, D=2, delta_max=dm, seed=1)
+        old.cap = int(dm * m)  # the pre-fix formula
+        np.testing.assert_array_equal(new.mask_schedule(64), old.mask_schedule(64))
+
+
+def test_bernoulli_schedule_respects_exact_cap():
+    from repro.core.switching import get_switcher
+
+    sched = get_switcher(
+        "bernoulli", 10, p=0.9, D=8, delta_max=0.3, seed=3
+    ).mask_schedule(128)
+    simul = sched.sum(axis=-1)
+    assert simul.max() == 3  # reaches the exact cap (old code topped out at 2)
+
+
+def test_count_floor_and_capacity_nudges():
+    from repro.core.agg_engine import count_ceil, count_floor
+    from repro.models.moe import _capacity
+
+    assert count_floor(0.3 * 10) == 3
+    assert count_floor(2.9) == 2
+    assert count_ceil(0.28 * 25) == 7
+    # capacity = floor(tokens·k·factor/E), immune to representation error
+    assert _capacity(64, 2, 1.25, 8) == 20
+    assert _capacity(10, 1, 0.3, 1) == 3
+    assert _capacity(1, 1, 0.1, 64) == 1  # floor clamps at 1
