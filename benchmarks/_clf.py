@@ -9,8 +9,27 @@ import time
 import jax
 
 from repro.data.classification import (  # noqa: F401 (re-exports)
-    DIM, HIDDEN, N_CLASSES, clf_logits, clf_loss, init_clf, make_task,
+    DIM, HIDDEN, N_CLASSES, clf_logits, clf_loss, init_clf,
+    make_index_sampler, make_task,
 )
+
+
+def seed_stat(label: str, vals, fmt: str = ".3f") -> str:
+    """Derived-field fragment for a multi-seed metric: honest error bars.
+
+    ``label=<mean>+-<std>;n_seeds=<n>`` with the *sample* std (ddof=1) when
+    the sample has 2+ seeds; with a single seed there is no spread to report,
+    so the ``+-`` is omitted entirely — a ``+-0.000`` from n=1 is typography,
+    not statistics (the ISSUE-10 bugfix; jaxlint JXL006 flags regressions).
+    ``n_seeds`` always rides along so ``check_regression.py`` can gate that
+    full-mode accuracy rows carry real replication."""
+    vals = [float(v) for v in vals]
+    n = len(vals)
+    mean = sum(vals) / n
+    if n == 1:
+        return f"{label}={mean:{fmt}};n_seeds=1"
+    var = sum((v - mean) ** 2 for v in vals) / (n - 1)
+    return f"{label}={mean:{fmt}}+-{var ** 0.5:{fmt}};n_seeds={n}"
 
 
 def timed(fn, *args, warmup: int = 1, iters: int = 5):

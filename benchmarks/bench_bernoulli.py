@@ -4,14 +4,22 @@ m=25 workers, IPM attack, CWMed aggregation. Configurations from Section 6:
 (p=0.01, D=10), (p=0.01, D=50), (p=0.05, D=10), with δmax ∈ {0.72, 0.48}.
 With transiently >50% Byzantine workers, momentum and SGD break; DynaBRO's
 short stochastic history window recovers.
+
+As in ``bench_periodic``, seeds are replicate lanes of ONE vmapped sweep
+dispatch (DESIGN.md §12): dataset + init fixed at the base seed, switcher /
+attack-key / batch-index streams folded per replicate. The whole
+δmax × (p, D) grid × seeds runs as a single dispatch; momentum baselines
+loop per seed with the same stream convention.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks._clf import make_task
+from benchmarks._clf import make_index_sampler, make_task, seed_stat
+from repro.api.session import Session
+from repro.api.specs import SweepSpec
 from repro.core.mlmc import MLMCConfig
-from repro.core.robust_train import DynaBROConfig, run_dynabro, run_momentum
+from repro.core.robust_train import DynaBROConfig, run_momentum
 from repro.core.switching import get_switcher
 from repro.optim.optimizers import sgd
 
@@ -19,41 +27,48 @@ M = 25
 
 
 def run(T: int = 400, seeds=(0, 1), dmaxes=(0.72, 0.48)):
+    base = seeds[0]
+    params0, grad_fn, sampler, eval_fn = make_task(M, seed=base)
+    cfg = DynaBROConfig(
+        mlmc=MLMCConfig(T=T, m=M, V=5.0, option=1, kappa=1.0, j_cap=5),
+        aggregator="cwmed", attack="ipm", attack_kwargs={"eps": 0.1})
+    sess = Session(cfg, grad_fn=grad_fn, params0=params0, opt=sgd(0.1), m=M,
+                   sample_batches=sampler, seed=base,
+                   sampler_factory=lambda s: make_index_sampler(M, seed=s))
+    grid = [(dmax, p, D) for dmax in dmaxes
+            for (p, D) in ((0.01, 10), (0.01, 50), (0.05, 10))]
+    spec = SweepSpec(
+        switchers=tuple(("bernoulli", dict(p=p, D=D, delta_max=dmax))
+                        for dmax, p, D in grid),
+        seeds=tuple(seeds))
+    outs = sess.sweep(spec, T)
+    cells = outs if len(seeds) > 1 else [[cell] for cell in outs]
+    # jaxlint: disable=JXL003 -- 2.5 = 5/2 is exact in binary, so T*2.5 is exact; intended grad-budget truncation
+    Tm = int(T * 2.5)
     rows = []
-    for dmax in dmaxes:
-        for (p, D) in ((0.01, 10), (0.01, 50), (0.05, 10)):
-            accs = {"dynabro": [], "momentum0.9": [], "sgd": []}
-            byz_frac = []
-            for s in seeds:
-                params0, grad_fn, sampler, eval_fn = make_task(M, seed=s)
-                cfg = DynaBROConfig(
-                    mlmc=MLMCConfig(T=T, m=M, V=5.0, option=1, kappa=1.0, j_cap=5),
-                    aggregator="cwmed", attack="ipm", attack_kwargs={"eps": 0.1})
-                sw = get_switcher("bernoulli", M, p=p, D=D, delta_max=dmax, seed=s)
-                pp, logs, _ = run_dynabro(grad_fn, params0, sgd(0.1), cfg, sw,
-                                          sampler, T, seed=s)
-                accs["dynabro"].append(eval_fn(pp, T)["test_acc"])
-                byz_frac.append(np.mean([l.n_byz for l in logs]) / M)
-                # jaxlint: disable=JXL003 -- 2.5 = 5/2 is exact in binary, so T*2.5 is exact; intended grad-budget truncation
-                Tm = int(T * 2.5)
-                for beta, tag in ((0.9, "momentum0.9"), (0.0, "sgd")):
-                    sw2 = get_switcher("bernoulli", M, p=p, D=D, delta_max=dmax,
-                                       seed=s)
-                    pm, _ = run_momentum(grad_fn, params0, cfg, sw2, sampler, Tm,
-                                         lr=0.05, beta=beta, seed=s)
-                    accs[tag].append(eval_fn(pm, Tm)["test_acc"])
-            for meth, vals in accs.items():
-                rows.append((f"p{p}_D{D}_dmax{dmax}/{meth}",
-                             float(np.mean(vals)), float(np.std(vals)),
-                             float(np.mean(byz_frac))))
+    for (dmax, p, D), cell in zip(grid, cells):
+        accs = {"dynabro": [eval_fn(pp, T)["test_acc"] for pp, _ in cell],
+                "momentum0.9": [], "sgd": []}
+        byz_frac = [np.mean([l.n_byz for l in logs]) / M for _, logs in cell]
+        for s in seeds:
+            sampler_s = make_index_sampler(M, seed=s)
+            for beta, tag in ((0.9, "momentum0.9"), (0.0, "sgd")):
+                sw = get_switcher("bernoulli", M, p=p, D=D, delta_max=dmax,
+                                  seed=s)
+                pm, _ = run_momentum(grad_fn, params0, cfg, sw, sampler_s,
+                                     Tm, lr=0.05, beta=beta, seed=s)
+                accs[tag].append(eval_fn(pm, Tm)["test_acc"])
+        for meth, vals in accs.items():
+            rows.append((f"p{p}_D{D}_dmax{dmax}/{meth}", vals,
+                         float(np.mean(byz_frac))))
     return rows
 
 
 def main(fast: bool = False):
     rows = run(T=120 if fast else 400, seeds=(0,) if fast else (0, 1),
                dmaxes=(0.72,) if fast else (0.72, 0.48))
-    return [f"bernoulli_ipm_cwmed/{n},,test_acc={m:.3f}+-{s:.3f};mean_byz_frac={b:.2f}"
-            for n, m, s, b in rows]
+    return [f"bernoulli_ipm_cwmed/{n},,{seed_stat('test_acc', vals)}"
+            f";mean_byz_frac={b:.2f}" for n, vals, b in rows]
 
 
 if __name__ == "__main__":

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._clf import seed_stat
 from repro.core.mlmc import MLMCConfig
 from repro.core.robust_train import DynaBROConfig, run_dynabro
 from repro.optim.optimizers import sgd
@@ -73,16 +74,16 @@ def run(T: int = 400, seeds=(0, 1, 2)):
                 trips.append(sum(1 for l in logs if l.level >= 1 and not l.failsafe_ok))
                 dyn.append(sum(1 for t_, l in enumerate(logs)
                                if l.level >= 1 and t_ % 10 == 0))
-            rows.append((f"v{v}_failsafe={'on' if use_fs else 'off'}",
-                         float(np.mean(finals)), float(np.std(finals)),
+            rows.append((f"v{v}_failsafe={'on' if use_fs else 'off'}", finals,
                          float(np.mean(trips)), float(np.mean(dyn))))
     return rows
 
 
 def main(fast: bool = False):
     rows = run(T=150 if fast else 400, seeds=(0,) if fast else (0, 1, 2))
-    return [f"failsafe_ablation/{n},,final_gap={g:.3f}+-{s:.3f};trips={t:.0f}/{d:.0f}_dyn_rounds"
-            for n, g, s, t, d in rows]
+    return [f"failsafe_ablation/{n},,{seed_stat('final_gap', finals)}"
+            f";trips={t:.0f}/{d:.0f}_dyn_rounds"
+            for n, finals, t, d in rows]
 
 
 if __name__ == "__main__":

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._clf import seed_stat
 from repro.core.mlmc import MLMCConfig
 from repro.core.robust_train import DynaBROConfig, run_dynabro, run_momentum
 from repro.core.switching import get_switcher
@@ -54,8 +55,7 @@ def run(T: int = 1500, seeds=(0, 1, 2)):
                     p, _ = run_momentum(grad_fn, P0, cfg, sw, sampler(m, s), T,
                                         lr=5e-3, beta=beta, seed=s)
                     finals.append(f_val(p))
-                rows.append((f"momentum_b{beta}_{mode}_lam{lam}",
-                             float(np.mean(finals)), float(np.std(finals))))
+                rows.append((f"momentum_b{beta}_{mode}_lam{lam}", finals))
         # DynaBRO under the dynamic attack (α of the strongest momentum)
         finals = []
         for s in seeds:
@@ -66,17 +66,14 @@ def run(T: int = 1500, seeds=(0, 1, 2)):
             p, _, _ = run_dynabro(grad_fn, P0, sgd(5e-3), cfg, sw,
                                   sampler(m, s), T, seed=s)
             finals.append(f_val(p))
-        rows.append((f"dynabro_dynamic_lam{lam}",
-                     float(np.mean(finals)), float(np.std(finals))))
+        rows.append((f"dynabro_dynamic_lam{lam}", finals))
     return rows
 
 
 def main(fast: bool = False):
     rows = run(T=300 if fast else 1500, seeds=(0,) if fast else (0, 1, 2))
-    out = []
-    for name, mean, std in rows:
-        out.append(f"momentum_fails/{name},,final_gap={mean:.4f}+-{std:.4f}")
-    return out
+    return [f"momentum_fails/{name},,{seed_stat('final_gap', finals, '.4f')}"
+            for name, finals in rows]
 
 
 if __name__ == "__main__":

@@ -4,14 +4,21 @@ m=17 workers, δm=8 Byzantine, SF attack, CWTM aggregation (the paper's MNIST
 configuration) on the synthetic classification task. Final test accuracy for
 K ∈ {5, 20, 100, ∞}: DynaBRO stays stable across K; worker-momentum degrades
 once K < 1/(1-β) (its effective averaging window).
+
+Seeds are replicate lanes of ONE vmapped sweep dispatch (DESIGN.md §12): the
+task (dataset + init) is fixed at the base seed, while each replicate folds
+its own switcher schedule, attack key stream and batch-index stream — so the
+error bars measure run-to-run stochasticity of the *algorithm*, and a 2-seed
+full run costs the same dispatches as fast mode. The momentum baselines have
+no sweep driver and loop per seed with the same per-seed stream convention.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks._clf import make_task
+from benchmarks._clf import make_index_sampler, make_task, seed_stat
+from repro.api.session import Session
+from repro.api.specs import SweepSpec
 from repro.core.mlmc import MLMCConfig
-from repro.core.robust_train import DynaBROConfig, run_dynabro, run_momentum
+from repro.core.robust_train import DynaBROConfig, run_momentum
 from repro.core.switching import get_switcher
 from repro.optim.optimizers import sgd
 
@@ -19,30 +26,36 @@ M, NBYZ = 17, 8
 
 
 def run(T: int = 400, Ks=(5, 20, 100, 10_000_000), seeds=(0, 1)):
+    base = seeds[0]
+    params0, grad_fn, sampler, eval_fn = make_task(M, seed=base)
+    cfg = DynaBROConfig(
+        mlmc=MLMCConfig(T=T, m=M, V=5.0, option=1, kappa=1.0, j_cap=5),
+        aggregator="cwtm", delta=NBYZ / M + 1e-3, attack="sign_flip")
+    sess = Session(cfg, grad_fn=grad_fn, params0=params0, opt=sgd(0.1), m=M,
+                   sample_batches=sampler, seed=base,
+                   sampler_factory=lambda s: make_index_sampler(M, seed=s))
+    spec = SweepSpec(
+        switchers=tuple(("periodic", dict(n_byz=NBYZ, K=K)) for K in Ks),
+        seeds=tuple(seeds))
+    outs = sess.sweep(spec, T)
+    cells = outs if len(seeds) > 1 else [[cell] for cell in outs]
+    # jaxlint: disable=JXL003 -- 2.5 = 5/2 is exact in binary, so T*2.5 is exact; intended grad-budget truncation
+    Tm = int(T * 2.5)  # equal grad budget: MLMC uses ~2.5 grads/round
     rows = []
-    for K in Ks:
+    for K, cell in zip(Ks, cells):
         kname = "inf" if K >= 10_000_000 else str(K)
-        accs = {"dynabro": [], "momentum0.9": [], "momentum0.99": [], "sgd": []}
+        accs = {"dynabro": [eval_fn(p, T)["test_acc"] for p, _ in cell],
+                "momentum0.9": [], "momentum0.99": [], "sgd": []}
         for s in seeds:
-            params0, grad_fn, sampler, eval_fn = make_task(M, seed=s)
-            cfg = DynaBROConfig(
-                mlmc=MLMCConfig(T=T, m=M, V=5.0, option=1, kappa=1.0, j_cap=5),
-                aggregator="cwtm", delta=NBYZ / M + 1e-3, attack="sign_flip")
-            sw = get_switcher("periodic", M, n_byz=NBYZ, K=K, seed=s)
-            p, _, _ = run_dynabro(grad_fn, params0, sgd(0.1), cfg, sw, sampler,
-                                  T, seed=s)
-            accs["dynabro"].append(eval_fn(p, T)["test_acc"])
-            # equal total gradient budget: MLMC uses ~2.5 grads/round in expectation
-            # jaxlint: disable=JXL003 -- 2.5 = 5/2 is exact in binary, so T*2.5 is exact; intended grad-budget truncation
-            Tm = int(T * 2.5)
+            sampler_s = make_index_sampler(M, seed=s)
             for beta in (0.9, 0.99, 0.0):
-                sw2 = get_switcher("periodic", M, n_byz=NBYZ, K=K, seed=s)
-                pm, _ = run_momentum(grad_fn, params0, cfg, sw2, sampler, Tm,
-                                     lr=0.05, beta=beta, seed=s)
+                sw = get_switcher("periodic", M, n_byz=NBYZ, K=K, seed=s)
+                pm, _ = run_momentum(grad_fn, params0, cfg, sw, sampler_s,
+                                     Tm, lr=0.05, beta=beta, seed=s)
                 tag = "sgd" if beta == 0.0 else f"momentum{beta}"
                 accs[tag].append(eval_fn(pm, Tm)["test_acc"])
         for meth, vals in accs.items():
-            rows.append((f"K={kname}/{meth}", float(np.mean(vals)), float(np.std(vals))))
+            rows.append((f"K={kname}/{meth}", vals))
     return rows
 
 
@@ -50,7 +63,8 @@ def main(fast: bool = False):
     rows = run(T=120 if fast else 400,
                Ks=(5, 10_000_000) if fast else (5, 20, 100, 10_000_000),
                seeds=(0,) if fast else (0, 1))
-    return [f"periodic_sf_cwtm/{n},,test_acc={m:.3f}+-{s:.3f}" for n, m, s in rows]
+    return [f"periodic_sf_cwtm/{n},,{seed_stat('test_acc', vals)}"
+            for n, vals in rows]
 
 
 if __name__ == "__main__":

@@ -305,6 +305,101 @@ def run_agg_sweep(T: int = 64, m: int = 9, iters: int = 3, seed: int = 0):
     return _time(t_loop, iters), _time(t_lanes, iters)
 
 
+def run_seed_sweep(T: int = 64, m: int = 9, iters: int = 3, seed: int = 0,
+                   R: int = 4):
+    """(us_loop, us_replanes) for the replicate-statistics axis
+    (DESIGN.md §12): C=4 switcher cells × R seed replicates as replicate
+    lanes of ONE vmapped dispatch vs the looped per-seed runs they replace —
+    one single-lane driver call per (cell, seed), the shape the benchmarks
+    ran before the replicate axis existed. The loop pays C·R batch-schedule
+    precomputes and dispatches where the lane axis pays R (replicate streams
+    shared across cells); that amortization is the cost-of-error-bars win
+    the gate keeps. Replicate lane (c, r) is bitwise the looped run at
+    (cell c, seed r) — asserted before timing."""
+    from repro.api.session import Session, _task_sampler_factory
+    from repro.api.specs import SweepSpec
+    task, cfg, sampler, opt = _setup(T, m)
+    scan_fn = make_dynabro_scan_fn(task.grad_fn, cfg, opt)
+    sess = Session(cfg, grad_fn=task.grad_fn, params0=task.params0, opt=opt,
+                   m=m, sample_batches=sampler, seed=seed,
+                   sampler_factory=_task_sampler_factory(task, m))
+    sws = tuple(("periodic", dict(n_byz=4, K=K)) for K in ATTACK_KS)
+    rep_seeds = tuple(seed + r for r in range(R))
+    spec_rep = SweepSpec(switchers=sws, seeds=rep_seeds, scan_fn=scan_fn)
+    spec_cells = [SweepSpec(switchers=(sw,), seeds=(s,), scan_fn=scan_fn)
+                  for s in rep_seeds for sw in sws]
+
+    def loop():
+        return [sess.sweep(sp, T) for sp in spec_cells]
+
+    def replanes():
+        return sess.sweep(spec_rep, T)
+
+    rep, per = replanes(), loop()
+    for i in range(len(spec_cells)):
+        r, c = divmod(i, len(sws))
+        assert rep[c][r][1] == per[i][0][1]
+        np.testing.assert_array_equal(np.asarray(rep[c][r][0]["x"]),
+                                      np.asarray(per[i][0][0]["x"]))
+
+    def t_loop():
+        outs = loop()
+        return (outs[-1][-1][0],)
+
+    def t_rep():
+        outs = replanes()
+        return (outs[-1][-1][0],)
+
+    return _time(t_loop, iters), _time(t_rep, iters)
+
+
+def run_big_grid(T: int = 8, m: int = 9, iters: int = 1, seed: int = 0,
+                 lane_chunk: int = 64):
+    """us + lane count for the 1000+-lane streamed grid (DESIGN.md §12):
+    4 attacks × 4 switchers × (4 rules × 4 hyperparameters) × 4 seed
+    replicates = 1024 lanes, streamed through ``lane_chunk``-cell dispatches
+    with incremental host-side accumulation. Rule-major cell order keeps
+    each chunk branch-homogeneous, and the prebuilt ``{rule: scan_fn}``
+    mapping keeps every chunk on the identity-cached vmapped wrapper."""
+    from repro.api.session import Session, _task_sampler_factory
+    from repro.api.specs import SweepSpec
+    task, cfg, sampler, opt = _setup(T, m)
+    rules = [("cwmed", lambda th: {"delta": th}),
+             ("cwtm", lambda th: {"delta": th}),
+             ("krum", lambda th: {"delta": th}),
+             ("mfm", lambda th: {"tau": th})]
+    thetas = (0.1, 0.2, 0.3, 0.45)
+    cells = [(atk, K, rule, mk(th))
+             for rule, mk in rules for th in thetas
+             for atk in ATTACK_SPECS for K in ATTACK_KS]
+    lane_names, _, _ = _lane_attack_plan(list(ATTACK_SPECS))
+    group_fns = {
+        rule: make_dynabro_scan_fn(task.grad_fn, cfg, opt,
+                                   lane_attacks=lane_names,
+                                   lane_aggregators=(rule,))
+        for rule, _ in rules}
+    sess = Session(cfg, grad_fn=task.grad_fn, params0=task.params0, opt=opt,
+                   m=m, sample_batches=sampler, seed=seed,
+                   sampler_factory=_task_sampler_factory(task, m))
+    spec = SweepSpec(
+        switchers=tuple(("periodic", dict(n_byz=4, K=K))
+                        for _, K, _, _ in cells),
+        attacks=tuple((a, {}) if isinstance(a, str) else a
+                      for a, _, _, _ in cells),
+        aggregators=tuple((r, kw) for _, _, r, kw in cells),
+        seeds=tuple(seed + r for r in range(4)),
+        scan_fn=group_fns)
+
+    def grid():
+        return sess.sweep(spec, T, lane_chunk=lane_chunk)
+
+    outs = grid()
+    n_lanes = sum(len(cell) for cell in outs)
+    assert n_lanes == len(cells) * 4 >= 1000, n_lanes
+    us = _time(lambda: (grid()[-1][-1][0],), iters)
+    return us, n_lanes, -(-len(cells) // lane_chunk)
+
+
 def run_mixed_agg_sweep(T: int = 64, m: int = 9, iters: int = 3,
                         seed: int = 0):
     """(us_cell_loop, us_grouped) for the 4-rule × 4-switcher MIXED-rule
@@ -395,6 +490,13 @@ def main(fast: bool = False):
     rows.append(f"scan_driver/sweep_agg_loop,{us_cells:.0f},")
     rows.append(f"scan_driver/sweep_vmap_mixed_aggs,{us_grouped:.0f},"
                 f"speedup={us_cells / us_grouped:.1f}x")
+    us_seed_loop, us_seed_lanes = run_seed_sweep(iters=iters)
+    rows.append(f"scan_driver/sweep_seed_loop_R4,{us_seed_loop:.0f},")
+    rows.append(f"scan_driver/sweep_vmap_seeds,{us_seed_lanes:.0f},"
+                f"speedup={us_seed_loop / us_seed_lanes:.1f}x")
+    us_grid, n_lanes, n_chunks = run_big_grid(iters=1 if fast else 2)
+    rows.append(f"scan_driver/grid1024_chunked,{us_grid:.0f},"
+                f"lanes={n_lanes};chunks={n_chunks}")
     rows.append(f"scan_driver/recompiles_steady,0,"
                 f"recompiles={_STEADY_RECOMPILES}")
     return rows

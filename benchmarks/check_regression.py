@@ -37,6 +37,10 @@ GATES = [
     # (one vmapped dispatch per distinct rule) vs the per-cell compiled
     # loop (~4x dev) — the grid shape that used to be break-even
     ("scan_driver/sweep_vmap_mixed_aggs", "speedup", 1.5, ">="),
+    # seed-replicate lanes (R=4 in one dispatch, ONE batch schedule) vs the
+    # pre-replicate shape: one single-lane sweep per (cell, seed), paying
+    # C*R host-side batch schedules (~3x dev, DESIGN.md §12)
+    ("scan_driver/sweep_vmap_seeds", "speedup", 1.5, ">="),
     # size-dispatched engine primitives vs forced references. Sort-kernel
     # rows dispatch to pallas and must keep a real win (~3.5-4.5x dev);
     # matmul rows dispatch to ref below the TPU threshold, so their ratio
@@ -72,6 +76,17 @@ GATES = [
 ]
 
 
+# full-mode accuracy floors (DESIGN.md §12). Checked against the conservative
+# edge of the error bar, mean - 2*stderr: a row passes only when its whole
+# ~95% interval clears the floor, so a lucky seed can't hide a regression.
+# Floors sit far below the recorded ~0.83-0.86 accuracies — they catch a
+# collapsed run (diverged optimizer, broken aggregation), not seed noise.
+ACC_GATES = [
+    ("periodic_sf_cwtm/K=5/dynabro", 0.6),
+    ("bernoulli_ipm_cwmed/p0.01_D10_dmax0.72/dynabro", 0.6),
+]
+
+
 def _metric(derived: str, key: str) -> float:
     """Parse ``key=<float>x`` out of a row's derived field."""
     if f"{key}=" not in derived:
@@ -79,13 +94,77 @@ def _metric(derived: str, key: str) -> float:
     return float(derived.split(f"{key}=")[1].split(";")[0].rstrip("x"))
 
 
+def _seed_metric(derived: str, key: str):
+    """Parse ``key=<mean>[+-<std>]`` plus ``n_seeds=<n>`` -> (mean, std, n).
+
+    The ``+-`` is present only for n_seeds >= 2 (the ISSUE-10 contract:
+    single-seed rows carry no spread); ``n_seeds`` itself is mandatory."""
+    if f"{key}=" not in derived:
+        raise ValueError(f"no '{key}=' in derived field {derived!r}")
+    frag = derived.split(f"{key}=")[1].split(";")[0]
+    mean_s, _, std_s = frag.partition("+-")
+    if "n_seeds=" not in derived:
+        raise ValueError(f"no 'n_seeds=' in derived field {derived!r}")
+    n = int(derived.split("n_seeds=")[1].split(";")[0])
+    return float(mean_s), float(std_s or 0.0), n
+
+
+def _check_stats(rows: dict, fast: bool) -> int:
+    """Full-mode statistics gates: replication metadata plus accuracy floors.
+
+    Every accuracy row must carry ``n_seeds``; in a full (non-fast) run it
+    must report n_seeds >= 2 — a single-seed accuracy has no error bar and
+    cannot be compared as mean - 2*stderr. Fast smokes run one seed by
+    design, so only the metadata requirement applies there."""
+    failures = 0
+    for name, row in sorted(rows.items()):
+        derived = row.get("derived") or ""
+        if "test_acc=" not in derived:
+            continue
+        try:
+            _, _, n = _seed_metric(derived, "test_acc")
+        except ValueError as e:
+            print(f"FAIL: row '{name}': {e}")
+            failures += 1
+            continue
+        if not fast and n < 2:
+            print(f"FAIL: row '{name}': full-mode accuracy from n_seeds={n} "
+                  f"— replicate over >= 2 seeds for an honest error bar")
+            failures += 1
+    if fast:
+        print("ok: accuracy replication (fast mode: n_seeds metadata only)")
+        return failures
+    for name, floor in ACC_GATES:
+        row = rows.get(name)
+        if row is None:
+            print(f"FAIL: accuracy row '{name}' missing")
+            failures += 1
+            continue
+        try:
+            mean, std, n = _seed_metric(row.get("derived") or "", "test_acc")
+        except ValueError as e:
+            print(f"FAIL: row '{name}': {e}")
+            failures += 1
+            continue
+        lo = mean - 2.0 * std / n ** 0.5 if n > 1 else mean
+        ok = lo >= floor
+        verdict = "ok" if ok else "FAIL"
+        print(f"{verdict}: {name} test_acc mean-2*stderr={lo:.3f} "
+              f"(n_seeds={n}, want >= {floor:g})")
+        if not ok:
+            failures += 1
+    return failures
+
+
 def check(path: str) -> int:
     try:
         with open(path) as f:
-            rows = {r["name"]: r for r in json.load(f)["rows"]}
+            doc = json.load(f)
+        rows = {r["name"]: r for r in doc["rows"]}
     except (OSError, KeyError, ValueError) as e:
         print(f"FAIL: cannot read bench rows from {path}: {e}")
         return 1
+    fast = bool(doc.get("fast"))
     failures = 0
     for name, key, bound, direction in GATES:
         row = rows.get(name)
@@ -106,6 +185,7 @@ def check(path: str) -> int:
         print(f"{verdict}: {name} {key}={val:g}x {want}")
         if not ok:
             failures += 1
+    failures += _check_stats(rows, fast)
     # bytes-moved budget: every aggregators/*_kernel row must stream no more
     # than its ideal once-through traffic (roofline.BYTES_TOL)
     try:

@@ -33,6 +33,7 @@ from repro.core.scenarios import (
     run_scenario, scenario_grid,
 )
 from repro.core.switching import Switcher, get_switcher
+from repro.launch.mesh import make_lane_mesh, make_worker_mesh
 from repro.optim.optimizers import Optimizer, adagrad_norm, adam, momentum, sgd
 
 __all__ = [
@@ -45,5 +46,6 @@ __all__ = [
     "Scenario", "Task", "format_table", "make_quadratic_task", "run_matrix",
     "run_scenario", "scenario_grid",
     "Switcher", "get_switcher",
+    "make_lane_mesh", "make_worker_mesh",
     "Optimizer", "adagrad_norm", "adam", "momentum", "sgd",
 ]

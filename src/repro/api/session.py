@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import inspect
 import os
 from typing import Any, Callable, Dict, List, Mapping, Optional, Set, Tuple
 
@@ -107,7 +108,8 @@ class Session:
                  mesh=None, worker_axis: str = "workers", param_specs=None,
                  microbatch: bool = False, m: Optional[int] = None,
                  guard_recompiles: Optional[bool] = None,
-                 nan_tripwire: Optional[bool] = None):
+                 nan_tripwire: Optional[bool] = None,
+                 sampler_factory: Optional[Callable[[int], Any]] = None):
         if mode not in ("dynabro", "momentum"):
             raise ValueError(
                 f"unknown session mode {mode!r}; expected 'dynabro' or "
@@ -122,6 +124,7 @@ class Session:
         self.opt = opt
         self.switcher = switcher
         self.sample_batches = sample_batches
+        self.sampler_factory = sampler_factory
         self.seed = seed
         self.mode = mode
         self.lr, self.beta = lr, beta
@@ -419,23 +422,171 @@ class Session:
 
     # ------------------------------------------------------------- sweep
 
-    def sweep(self, spec: SweepSpec, T: int, *,
-              chunk: int = 0) -> List[Tuple[Any, list]]:
+    def _sampler_for(self, seed: int):
+        """The batch sampler of one replicate stream: ``sampler_factory``
+        when the session carries one, else the bound ``sample_batches`` —
+        valid only for the session's own seed, because per-replicate data
+        streams must differ (DESIGN.md §12)."""
+        if self.sampler_factory is not None:
+            return self.sampler_factory(seed)
+        if seed == self.seed:
+            return self.sample_batches
+        raise ValueError(
+            "per-replicate batch streams need sampler_factory= (seed -> "
+            "sample_batches); build the session with sampler_factory=, or "
+            "via build_session with a Task whose make_sampler accepts "
+            "sampler_seed=")
+
+    def _sweep_streams(self, spec: SweepSpec, T: int):
+        """The host-side schedule precompute shared by ``sweep`` and
+        ``sweep_halving``: the session-seed level plan plus the
+        per-replicate mask / key / batch streams (DESIGN.md §12). Masks come
+        back ``(C, T, n_max, m)`` — or ``(C, R, T, n_max, m)`` when the spec
+        replicates — keys ``(T, 2)`` / ``(R, T, 2)``."""
+        cfg = self.cfg
+        C = spec.lanes
+        R = spec.n_replicates
+        rep_seeds = spec.replicate_seeds(self.seed)
+        replicated = R > 1
+        levels, ns, n_max = rt._level_plan(
+            cfg, np.random.default_rng(self.seed), T)
+        sw_reps = [spec.resolve_switchers(self.m, s) for s in rep_seeds]
+        if replicated:
+            masks = np.stack([
+                np.stack([rt._mask_schedule(sws[c], T, n_max, ns)
+                          for sws in sw_reps])  # (R, T, n_max, m)
+                for c in range(C)])              # -> (C, R, T, n_max, m)
+            keys = np.stack([
+                rt._np_prng_keys(s * 100_003 + np.arange(T, dtype=np.int64))
+                for s in rep_seeds])             # (R, T, 2)
+        else:
+            masks = np.stack([rt._mask_schedule(sw, T, n_max, ns)
+                              for sw in sw_reps[0]])
+            keys = rt._np_prng_keys(
+                rep_seeds[0] * 100_003 + np.arange(T, dtype=np.int64))
+        samplers = [self._sampler_for(s) for s in rep_seeds]
+        return (levels, ns, n_max, masks, keys, samplers, replicated,
+                sw_reps[0][0].m if sw_reps[0] else self.m)
+
+    def _sweep_batches(self, samplers, a: int, b: int, ns, n_max: int,
+                       replicated: bool):
+        """One segment's padded batch schedule: per-replicate schedules are
+        stacked on a leading R axis (the inner vmap's mapped axis)."""
+        tn = list(zip(range(a, b), ns[a:b]))
+        if not replicated:
+            return rt._batch_schedule(samplers[0], tn, n_max,
+                                      vectorize=self.vectorize_batches)
+        per_rep = [rt._batch_schedule(s, tn, n_max,
+                                      vectorize=self.vectorize_batches)
+                   for s in samplers]
+        return jax.tree.map(lambda *ls: jnp.stack(ls), *per_rep)
+
+    def _sweep_scan_fn(self, spec_scan_fn, cfg, atk_names, agg_names,
+                       lane_mesh, lane_axis: str):
+        """Build — or validate — the sweep's segment fn against the derived
+        lane-axis branch sets and the (normalized) lane mesh."""
+        lm = rt._norm_mesh(lane_mesh)
+        if spec_scan_fn is None:
+            return rt.make_dynabro_scan_fn(
+                self.grad_fn, cfg, self.opt, lane_attacks=atk_names,
+                lane_aggregators=agg_names, sweep_mesh=lm,
+                lane_axis=lane_axis, worker_axis=self.worker_axis), lm
+        scan_fn = spec_scan_fn
+        if getattr(scan_fn, "worker_mesh", None) is not None:
+            raise ValueError(
+                "scan_fn was built with mesh=; vmapped sweeps run "
+                "unsharded (DESIGN.md §7) — rebuild it without mesh")
+        have_sm = rt._norm_mesh(getattr(scan_fn, "sweep_mesh", None))
+        if have_sm != lm:
+            raise ValueError(
+                f"scan_fn was built with sweep_mesh={have_sm}, but this "
+                f"sweep passes lane_mesh={lm}; rebuild it with "
+                f"make_dynabro_scan_fn(..., sweep_mesh=...) to match")
+        # the lane ids index the derived name tuples; a scan_fn whose
+        # lax.switch branch order differs — or that lacks/adds a lane
+        # axis — would silently apply the wrong attack or rule per lane
+        for kind, want, arg in (
+                ("lane_attacks", atk_names, "attacks"),
+                ("lane_aggregators", agg_names, "aggregators")):
+            have = getattr(scan_fn, kind, None)
+            if have == want:
+                continue
+            if want is None:
+                raise ValueError(
+                    f"scan_fn was built with {kind}={have!r} but this "
+                    f"sweep passes no {arg}; rebuild it without {kind} "
+                    f"(or pass the per-lane {arg})")
+            raise ValueError(
+                f"scan_fn was built with {kind}={have!r} but this "
+                f"sweep's {arg} derive {want!r}; rebuild it with "
+                f"make_dynabro_scan_fn(..., {kind}={want!r})")
+        return scan_fn, lm
+
+    def _check_sweep_lane_mesh(self, lane_mesh, lane_axis: str, C: int,
+                               m: Optional[int]):
+        if lane_mesh is None:
+            return
+        rt._check_lane_mesh(lane_mesh, lane_axis, self.worker_axis, m)
+        n_lanes = lane_mesh.shape[lane_axis]
+        if C % n_lanes:
+            raise ValueError(
+                f"sweep cell count C={C} not divisible by the "
+                f"{lane_axis!r} mesh axis size {n_lanes}")
+
+    def sweep(self, spec: SweepSpec, T: int, *, chunk: int = 0,
+              lane_chunk: int = 0, lane_mesh=None,
+              lane_axis: str = "lanes") -> List[Any]:
         """Run ``spec.lanes`` cells as lanes of ONE vmapped compiled loop —
         the body behind ``run_dynabro_scan_sweep`` (see its docstring for
         the full lane/grouping/parity contracts, DESIGN.md §7). Mixed-rule
         grids recurse into branch-homogeneous sub-sweeps; results come back
-        in the caller's lane order."""
+        in the caller's lane order.
+
+        With spec ``seeds=`` / ``replicates=`` every cell additionally runs
+        one lane per replicate seed (DESIGN.md §12): masks, attack keys and
+        batch draws follow the replicate seed (batches through the session's
+        ``sampler_factory``), the MLMC level plan stays the session seed's
+        (replicates are level-paired across cells), and the return value
+        becomes a list over cells of per-replicate ``(params, logs)`` lists.
+        With one replicate the flat ``[(params, logs), ...]`` shape — and,
+        for the session's own seed, the exact schedule stream — of the
+        un-replicated sweep is preserved.
+
+        ``lane_chunk`` streams grids through fixed-size cell chunks (at most
+        ``lane_chunk`` cells per dispatch, results accumulated host-side in
+        caller order — chunking is bitwise-invariant, locked by
+        tests/test_replicates.py). ``lane_mesh`` (a 2-axis
+        ``launch.mesh.make_lane_mesh`` mesh) shards the cell axis — and,
+        with a multi-device worker axis, each lane's per-worker gradients —
+        across devices; a 1-device mesh is bitwise-identical to unsharded by
+        construction. Requires the cell count divisible by the lane axis
+        (per chunk, when combined with ``lane_chunk``)."""
         if self.mode != "dynabro":
             raise ValueError("sweeps are dynabro-mode only")
         spec = spec if isinstance(spec, SweepSpec) else SweepSpec(**spec)
         cfg, opt, params = self.cfg, self.opt, self.params0
-        switchers = spec.resolve_switchers(self.m, self.seed)
-        C = len(switchers)
+        C = spec.lanes
+        R = spec.n_replicates
+        replicated = R > 1
         if C == 0:
             return []
         if T <= 0:
-            return [(params, []) for _ in switchers]
+            return [[(params, [])] * R for _ in range(C)] if replicated \
+                else [(params, []) for _ in range(C)]
+
+        # ---- fixed-size lane chunks (DESIGN.md §12): split the cell axis
+        # up front and accumulate per-chunk results host-side, so 1000+-cell
+        # grids stream through bounded dispatches instead of one giant one
+        if lane_chunk and lane_chunk > 0 and C > lane_chunk:
+            outs: List[Any] = []
+            for a in range(0, C, lane_chunk):
+                sub = spec.lane_subset(range(a, min(a + lane_chunk, C)),
+                                       scan_fn=spec.scan_fn)
+                outs.extend(self.sweep(sub, T, chunk=chunk,
+                                       lane_mesh=lane_mesh,
+                                       lane_axis=lane_axis))
+            return outs
+
         attacks = spec.attack_lanes()
         aggregators = spec.agg_lanes()
         scan_fn = spec.scan_fn
@@ -455,9 +606,11 @@ class Session:
             group_fns = scan_fn
         if aggregators is not None:
             distinct = tuple(dict.fromkeys(name for name, _ in aggregators))
-            if group_fns is not None and set(group_fns) != set(distinct):
+            # a superset mapping is fine — lane_chunk sub-sweeps may see only
+            # a subset of the full grid's rules — but a missing key is a typo
+            if group_fns is not None and not set(distinct) <= set(group_fns):
                 raise ValueError(
-                    f"scan_fn mapping keys {sorted(group_fns)} do not match "
+                    f"scan_fn mapping keys {sorted(group_fns)} do not cover "
                     f"the grid's distinct aggregator names "
                     f"{sorted(distinct)}")
             if len(distinct) > 1 and (scan_fn is None
@@ -470,19 +623,17 @@ class Session:
                         spec.lane_subset(
                             idx, scan_fn=(None if group_fns is None
                                           else group_fns[name])),
-                        T, chunk=chunk)
+                        T, chunk=chunk, lane_mesh=lane_mesh,
+                        lane_axis=lane_axis)
                     for j, c in enumerate(idx):
                         outs[c] = sub[j]
                 return outs
             if group_fns is not None:  # single distinct rule: unwrap and run
                 scan_fn = group_fns[distinct[0]]
 
-        levels, ns, n_max = rt._level_plan(
-            cfg, np.random.default_rng(self.seed), T)
-        masks = np.stack([rt._mask_schedule(sw, T, n_max, ns)
-                          for sw in switchers])
-        keys = rt._np_prng_keys(
-            self.seed * 100_003 + np.arange(T, dtype=np.int64))
+        (levels, ns, n_max, masks, keys, samplers, replicated,
+         m) = self._sweep_streams(spec, T)
+        self._check_sweep_lane_mesh(lane_mesh, lane_axis, C, m)
         atk = agg = atk_names = agg_names = None
         if attacks is not None:
             atk_names, ids, thetas = rt._lane_attack_plan(attacks)
@@ -493,38 +644,17 @@ class Session:
             agg = (jnp.asarray(gids), jnp.asarray(gthetas),
                    jnp.asarray(coeffs))
         lane_mode = atk is not None or agg is not None
-        if scan_fn is None:
-            scan_fn = rt.make_dynabro_scan_fn(self.grad_fn, cfg, opt,
-                                              lane_attacks=atk_names,
-                                              lane_aggregators=agg_names)
-        else:
-            if getattr(scan_fn, "worker_mesh", None) is not None:
-                raise ValueError(
-                    "scan_fn was built with mesh=; vmapped sweeps run "
-                    "unsharded (DESIGN.md §7) — rebuild it without mesh")
-            # the lane ids index the derived name tuples; a scan_fn whose
-            # lax.switch branch order differs — or that lacks/adds a lane
-            # axis — would silently apply the wrong attack or rule per lane
-            for kind, want, arg in (
-                    ("lane_attacks", atk_names, "attacks"),
-                    ("lane_aggregators", agg_names, "aggregators")):
-                have = getattr(scan_fn, kind, None)
-                if have == want:
-                    continue
-                if want is None:
-                    raise ValueError(
-                        f"scan_fn was built with {kind}={have!r} but this "
-                        f"sweep passes no {arg}; rebuild it without {kind} "
-                        f"(or pass the per-lane {arg})")
-                raise ValueError(
-                    f"scan_fn was built with {kind}={have!r} but this "
-                    f"sweep's {arg} derive {want!r}; rebuild it with "
-                    f"make_dynabro_scan_fn(..., {kind}={want!r})")
-        vseg = rt._vmapped_scan_fn(scan_fn, lane=lane_mode)
+        scan_fn, lm = self._sweep_scan_fn(scan_fn, cfg, atk_names, agg_names,
+                                          lane_mesh, lane_axis)
+        vseg = rt._vmapped_scan_fn(scan_fn, lane=lane_mode,
+                                   replicated=replicated, lane_mesh=lm,
+                                   lane_axis=lane_axis,
+                                   worker_axis=self.worker_axis)
 
         def lanes(tree):  # identical initial state in every lane
+            lead = (C, R) if replicated else (C,)
             return jax.tree.map(
-                lambda l: jnp.broadcast_to(l, (C,) + l.shape), tree)
+                lambda l: jnp.broadcast_to(l, lead + l.shape), tree)
 
         carry = (lanes(params), lanes(opt.init(params)))
         masks_dev, keys_dev = jnp.asarray(masks), jnp.asarray(keys)
@@ -533,21 +663,193 @@ class Session:
         oks = []
         a = 0
         for b in rt._segment_bounds(T, 0, chunk):
-            batches = rt._batch_schedule(
-                self.sample_batches, list(zip(range(a, b), ns[a:b])), n_max,
-                vectorize=self.vectorize_batches)
-            xs = (levels_dev[a:b], batches, masks_dev[:, a:b], keys_dev[a:b])
+            batches = self._sweep_batches(samplers, a, b, ns, n_max,
+                                          replicated)
+            if replicated:
+                xs = (levels_dev[a:b], batches, masks_dev[:, :, a:b],
+                      keys_dev[:, a:b])
+            else:
+                xs = (levels_dev[a:b], batches, masks_dev[:, a:b],
+                      keys_dev[a:b])
             if lane_mode:
                 carry, (ok, _dn) = vseg(carry, xs, atk, agg)
             else:
                 carry, (ok, _dn) = vseg(carry, xs)
-            oks.append(np.asarray(ok))  # (C, b - a)
+            oks.append(np.asarray(ok))  # (C, [R,] b - a)
             a = b
-        ok_all = np.concatenate(oks, axis=1)
-        return [(jax.tree.map(lambda l, c=c: l[c], carry[0]),
-                 rt._round_logs(levels, ok_all[c], masks[c],
-                                cfg.mlmc.j_max))
+        ok_all = np.concatenate(oks, axis=-1)
+        if not replicated:
+            return [(jax.tree.map(lambda l, c=c: l[c], carry[0]),
+                     rt._round_logs(levels, ok_all[c], masks[c],
+                                    cfg.mlmc.j_max))
+                    for c in range(C)]
+        return [[(jax.tree.map(lambda l, c=c, r=r: l[c, r], carry[0]),
+                  rt._round_logs(levels, ok_all[c, r], masks[c, r],
+                                 cfg.mlmc.j_max))
+                 for r in range(R)]
                 for c in range(C)]
+
+    def sweep_halving(self, spec: SweepSpec, T: int, *,
+                      objective: Callable[[Any], float],
+                      keep: float = 0.5, rungs=None, lane_mesh=None,
+                      lane_axis: str = "lanes",
+                      min_cells: int = 1) -> List[Dict[str, Any]]:
+        """Adaptive successive-halving sweep (DESIGN.md §12): run every cell,
+        and at each rung boundary prune the worst cells — scored by the mean
+        of ``objective(params)`` (lower is better) over the cell's replicate
+        lanes — keeping a ``keep`` fraction (at least ``min_cells``; NaN
+        scores prune first). Survivors continue with their carries sliced to
+        the surviving lanes, so a survivor's trajectory is bitwise-identical
+        to a plain sweep of the surviving subset (lane-subset invariance,
+        locked by tests/test_replicates.py).
+
+        ``rungs`` is the increasing list of round counts at which to prune
+        (default: one prune at ``T // 2``). Mixed-rule grids run as one
+        multi-branch dispatch (no branch-homogeneous grouping — pruning
+        scores are global across rules). Returns one dict per cell, in
+        caller order: ``{"pruned": bool, "rounds_run": int, "results":
+        [(params, logs), ...]}`` with one entry per replicate; a pruned
+        cell's results are its state at the rung that dropped it."""
+        if self.mode != "dynabro":
+            raise ValueError("sweeps are dynabro-mode only")
+        spec = spec if isinstance(spec, SweepSpec) else SweepSpec(**spec)
+        if isinstance(spec.scan_fn, Mapping):
+            raise ValueError(
+                "sweep_halving runs mixed-rule grids as one multi-branch "
+                "dispatch; pass a plain scan_fn (or None), not a "
+                "{rule: scan_fn} mapping")
+        cfg = self.cfg
+        C = spec.lanes
+        R = spec.n_replicates
+        if C == 0:
+            return []
+        if T <= 0:
+            raise ValueError("sweep_halving needs T >= 1")
+        if not 0.0 < keep <= 1.0:
+            raise ValueError(f"keep= must be in (0, 1], got {keep}")
+        if rungs is None:
+            rungs = [T // 2] if T >= 2 else []
+        rungs = [int(r) for r in rungs]
+        if any(not 0 < r < T for r in rungs) or \
+                any(b <= a for a, b in zip(rungs, rungs[1:])):
+            raise ValueError(
+                f"rungs= must be strictly increasing round counts in "
+                f"(0, T={T}), got {rungs}")
+
+        attacks = spec.attack_lanes()
+        aggregators = spec.agg_lanes()
+        (levels, ns, n_max, masks, keys, samplers, replicated,
+         m) = self._sweep_streams(spec, T)
+        self._check_sweep_lane_mesh(lane_mesh, lane_axis, C, m)
+        atk = agg = atk_names = agg_names = None
+        if attacks is not None:
+            atk_names, ids, thetas = rt._lane_attack_plan(attacks)
+            atk = (jnp.asarray(ids), jnp.asarray(thetas))
+        if aggregators is not None:
+            agg_names, gids, gthetas, coeffs = rt._lane_agg_plan(aggregators,
+                                                                 cfg)
+            agg = (jnp.asarray(gids), jnp.asarray(gthetas),
+                   jnp.asarray(coeffs))
+        lane_mode = atk is not None or agg is not None
+        scan_fn, lm = self._sweep_scan_fn(spec.scan_fn, cfg, atk_names,
+                                          agg_names, lane_mesh, lane_axis)
+        vseg = rt._vmapped_scan_fn(scan_fn, lane=lane_mode,
+                                   replicated=replicated, lane_mesh=lm,
+                                   lane_axis=lane_axis,
+                                   worker_axis=self.worker_axis)
+        n_lanes_mesh = lm.shape[lane_axis] if lm is not None else 1
+
+        def lanes(tree):
+            lead = (C, R) if replicated else (C,)
+            return jax.tree.map(
+                lambda l: jnp.broadcast_to(l, lead + l.shape), tree)
+
+        def take(tree, idx):
+            return jax.tree.map(lambda l: l[jnp.asarray(idx)], tree)
+
+        def cell_out(carry, ok_rows, c_local: int, cell: int):
+            """(params, logs) per replicate for local lane ``c_local``."""
+            if not replicated:
+                p = jax.tree.map(lambda l: l[c_local], carry[0])
+                return [(p, rt._round_logs(levels[:ok_rows.shape[-1]],
+                                           ok_rows[c_local], masks[cell],
+                                           cfg.mlmc.j_max))]
+            return [(jax.tree.map(lambda l, r=r: l[c_local, r], carry[0]),
+                     rt._round_logs(levels[:ok_rows.shape[-1]],
+                                    ok_rows[c_local, r], masks[cell, r],
+                                    cfg.mlmc.j_max))
+                    for r in range(R)]
+
+        carry = (lanes(self.params0), lanes(self.opt.init(self.params0)))
+        masks_dev, keys_dev = jnp.asarray(masks), jnp.asarray(keys)
+        levels_dev = jnp.asarray(levels)
+        alive = list(range(C))  # original cell index per live lane
+        outs: List[Optional[Dict[str, Any]]] = [None] * C
+        oks: List[np.ndarray] = []
+        a = 0
+        for b in rungs + [T]:
+            batches = self._sweep_batches(samplers, a, b, ns, n_max,
+                                          replicated)
+            if replicated:
+                xs = (levels_dev[a:b], batches,
+                      masks_dev[jnp.asarray(alive)][:, :, a:b],
+                      keys_dev[:, a:b])
+            else:
+                xs = (levels_dev[a:b], batches,
+                      masks_dev[jnp.asarray(alive)][:, a:b], keys_dev[a:b])
+            if lane_mode:
+                carry, (ok, _dn) = vseg(carry, xs, atk, agg)
+            else:
+                carry, (ok, _dn) = vseg(carry, xs)
+            oks.append(np.asarray(ok))
+            ok_all = np.concatenate(oks, axis=-1)  # (C_live, [R,] b)
+            if b == T:
+                break
+            # ---- prune: mean objective over replicates, lower is better
+            finals = np.array(
+                [[float(objective(p)) for p, _ in
+                  cell_out(carry, ok_all, j, cell)]
+                 for j, cell in enumerate(alive)])
+            scores = np.where(np.isnan(finals), np.inf, finals).mean(axis=1)
+            k = max(int(min_cells), int(np.ceil(len(alive) * keep)))
+            if n_lanes_mesh > 1:  # keep the lane axis divisible
+                k = max(n_lanes_mesh,
+                        int(np.ceil(k / n_lanes_mesh)) * n_lanes_mesh)
+            k = min(k, len(alive))
+            order = np.argsort(scores, kind="stable")
+            keep_local = sorted(int(j) for j in order[:k])
+            if len(keep_local) < len(alive):
+                for j, cell in enumerate(alive):
+                    if j not in set(keep_local):
+                        outs[cell] = {
+                            "pruned": True, "rounds_run": b,
+                            "results": cell_out(carry, ok_all, j, cell)}
+                carry = (take(carry[0], keep_local),
+                         take(carry[1], keep_local))
+                if lane_mode:
+                    atk = None if atk is None else take(atk, keep_local)
+                    agg = None if agg is None else take(agg, keep_local)
+                oks = [o[np.asarray(keep_local)] for o in oks]
+                alive = [alive[j] for j in keep_local]
+            a = b
+        ok_all = np.concatenate(oks, axis=-1)
+        for j, cell in enumerate(alive):
+            outs[cell] = {"pruned": False, "rounds_run": T,
+                          "results": cell_out(carry, ok_all, j, cell)}
+        return outs
+
+
+def _task_sampler_factory(task, m: int):
+    """A seed -> sampler factory from a Task whose ``make_sampler`` accepts
+    ``sampler_seed=`` (the replicate-axis data-stream hook, DESIGN.md §12);
+    ``None`` when the task cannot re-seed its sampler."""
+    try:
+        params = inspect.signature(task.make_sampler).parameters
+    except (TypeError, ValueError):
+        return None
+    if "sampler_seed" not in params:
+        return None
+    return lambda s: task.make_sampler(m, sampler_seed=s)
 
 
 def build_session(cfg, task=None, *, m: Optional[int] = None,
@@ -555,8 +857,10 @@ def build_session(cfg, task=None, *, m: Optional[int] = None,
     """The facade constructor: ``build_session(cfg, task) -> Session``.
 
     ``task`` (a ``scenarios.Task``) supplies ``grad_fn`` / ``params0`` and —
-    given a worker count via ``m=`` or ``switcher=`` — the batch sampler;
-    any Session kwarg can override or extend it. Without a task, pass
+    given a worker count via ``m=`` or ``switcher=`` — the batch sampler
+    (plus, when ``task.make_sampler`` accepts ``sampler_seed=``, the
+    per-replicate ``sampler_factory`` the sweep's seed axis needs); any
+    Session kwarg can override or extend it. Without a task, pass
     ``grad_fn=`` / ``params0=`` / ``sample_batches=`` directly."""
     if m is None and switcher is not None:
         m = switcher.m
@@ -565,4 +869,7 @@ def build_session(cfg, task=None, *, m: Optional[int] = None,
         kw.setdefault("params0", task.params0)
         if m is not None:
             kw.setdefault("sample_batches", task.make_sampler(m))
+            factory = _task_sampler_factory(task, m)
+            if factory is not None:
+                kw.setdefault("sampler_factory", factory)
     return Session(cfg, switcher=switcher, m=m, **kw)

@@ -189,15 +189,47 @@ class SweepSpec:
     either one lane-built scan_fn for a branch-homogeneous grid, or a
     ``{rule_name: scan_fn}`` mapping with one single-rule scan_fn per
     distinct rule of a mixed grid.
+
+    ``seeds`` / ``replicates`` add the **replicate axis** (DESIGN.md §12):
+    every cell is run once per replicate seed, each replicate folding its
+    own data-sampler, switcher-mask and attack-key streams while the MLMC
+    level plan stays a function of the *session* seed alone — replicates
+    are paired on levels across cells, so cross-cell comparisons stay
+    low-variance and the ``lax.switch`` level index stays scalar. Pass
+    explicit ``seeds=(s0, s1, ...)`` or a count ``replicates=N`` (seeds
+    then default to ``session.seed + r``). With more than one replicate the
+    switchers must be name / ``(name, kwargs)`` specs — a prebuilt
+    ``Switcher`` instance carries one fixed seed and cannot be re-seeded
+    per replicate.
     """
 
     switchers: Tuple[SwitcherLike, ...]
     attacks: Optional[Tuple[AttackSpec, ...]] = None
     aggregators: Optional[Tuple[AggSpec, ...]] = None
     scan_fn: Any = None
+    seeds: Optional[Tuple[int, ...]] = None
+    replicates: Optional[int] = None
 
     def __post_init__(self):
         object.__setattr__(self, "switchers", tuple(self.switchers))
+        if self.seeds is not None:
+            seeds = tuple(int(s) for s in self.seeds)
+            if not seeds:
+                raise ValueError("seeds= must name at least one seed")
+            if len(set(seeds)) != len(seeds):
+                raise ValueError(f"seeds= has duplicates: {seeds}")
+            if self.replicates is not None \
+                    and int(self.replicates) != len(seeds):
+                raise ValueError(
+                    f"replicates={self.replicates} disagrees with "
+                    f"len(seeds)={len(seeds)}; pass one or the other")
+            object.__setattr__(self, "seeds", seeds)
+            object.__setattr__(self, "replicates", len(seeds))
+        elif self.replicates is not None:
+            if int(self.replicates) < 1:
+                raise ValueError(
+                    f"replicates= must be >= 1, got {self.replicates}")
+            object.__setattr__(self, "replicates", int(self.replicates))
         C = len(self.switchers)
         for axis_name, specs, coerce in (
                 ("attacks", self.attacks, AttackSpec.coerce),
@@ -219,12 +251,32 @@ class SweepSpec:
     def lanes(self) -> int:
         return len(self.switchers)
 
+    @property
+    def n_replicates(self) -> int:
+        return self.replicates if self.replicates is not None else 1
+
+    def replicate_seeds(self, base_seed: int) -> Tuple[int, ...]:
+        """The per-replicate seed tuple: explicit ``seeds=``, else
+        ``base_seed + r`` for ``replicates=N`` (r = 0 is the base run)."""
+        if self.seeds is not None:
+            return self.seeds
+        return tuple(base_seed + r for r in range(self.n_replicates))
+
     def resolve_switchers(self, m: Optional[int], seed: int):
         """Lane ``Switcher`` instances; name/(name, kwargs) entries need the
-        session's worker count ``m`` (instances pass through untouched)."""
+        session's worker count ``m`` (instances pass through untouched).
+        With more than one replicate every entry must be a re-seedable
+        name/(name, kwargs) spec — the sweep resolves the lane once per
+        replicate seed (DESIGN.md §12)."""
         out = []
         for sw in self.switchers:
             if isinstance(sw, Switcher):
+                if self.n_replicates > 1 or self.seeds is not None:
+                    raise ValueError(
+                        f"switcher instance {type(sw).__name__}(m={sw.m}, "
+                        f"seed={sw.seed}) cannot be re-seeded per replicate; "
+                        f"pass a name or (name, kwargs) spec when the sweep "
+                        f"carries seeds=/replicates=")
                 out.append(sw)
                 continue
             name, kw = (sw, {}) if isinstance(sw, str) else (sw[0], dict(sw[1]))
@@ -255,4 +307,6 @@ class SweepSpec:
                      else tuple(self.attacks[c] for c in idx)),
             aggregators=(None if self.aggregators is None
                          else tuple(self.aggregators[c] for c in idx)),
-            scan_fn=scan_fn)
+            scan_fn=scan_fn,
+            seeds=self.seeds,
+            replicates=self.replicates)

@@ -447,6 +447,33 @@ def _check_worker_mesh(mesh, worker_axis: str, m: int,
             f"axis size {n_dev}")
 
 
+def _check_lane_mesh(mesh, lane_axis: str, worker_axis: str,
+                     m: Optional[int] = None) -> None:
+    """Reject a sweep mesh that is not the 2-axis ``(lanes, workers)`` form
+    (DESIGN.md §12); with ``m`` also checks worker divisibility (the lane
+    divisibility check needs the lane count and lives in the sweep)."""
+    axes = tuple(mesh.axis_names)
+    if axes != (lane_axis, worker_axis):
+        raise ValueError(
+            f"sharded sweeps need a 2-axis ({lane_axis!r}, {worker_axis!r}) "
+            f"mesh, got axes {axes} (see launch.mesh.make_lane_mesh)")
+    if m is not None and m % mesh.shape[worker_axis]:
+        raise ValueError(
+            f"worker count m={m} not divisible by the {worker_axis!r} mesh "
+            f"axis size {mesh.shape[worker_axis]}")
+
+
+def _norm_mesh(mesh):
+    """The sweep's 1-device bitwise contract (DESIGN.md §12): a mesh whose
+    device count is 1 is the unsharded path — normalize it to ``None`` so
+    the shard_map wrap is skipped entirely."""
+    if mesh is None:
+        return None
+    if math.prod(list(mesh.shape.values())) == 1:
+        return None
+    return mesh
+
+
 def _segment_bounds(T: int, eval_every: int, chunk: int):
     stops = {T}
     if eval_every:
@@ -460,7 +487,8 @@ def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer,
                          *, mesh=None, worker_axis: str = "workers",
                          lane_attacks: Optional[Sequence[str]] = None,
                          lane_aggregators: Optional[Sequence[str]] = None,
-                         param_specs=None, microbatch: bool = False):
+                         param_specs=None, microbatch: bool = False,
+                         sweep_mesh=None, lane_axis: str = "lanes"):
     """Build the compiled DynaBRO round loop (DESIGN.md §5, §7).
 
     Returns a jitted ``seg((params, opt_state), xs)`` running ``lax.scan``
@@ -518,12 +546,40 @@ def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer,
     *not* bitwise against non-microbatched ones — the parity contract is
     microbatched-sharded == microbatched-unsharded. Incompatible with the
     lane axes (sweeps materialize by design).
+
+    ``sweep_mesh`` (a 2-axis ``(lanes, workers)`` mesh from
+    ``launch.mesh.make_lane_mesh``) builds the sweep variants for the
+    *sharded* vmapped sweep (DESIGN.md §12): the returned segment is
+    un-jitted (the sweep wraps it in ``shard_map`` around the vmapped
+    wrapper) and its per-worker gradient stack is re-assembled with a
+    ``worker_axis`` all_gather exactly as on the 1-axis mesh path — skipped
+    when the mesh's worker axis has one device, so a 1-device lane mesh
+    stays bitwise-identical to the unsharded sweep by construction.
+    Exclusive with ``mesh=`` and ``microbatch``.
     """
     if (lane_attacks is not None or lane_aggregators is not None) \
             and mesh is not None:
         raise ValueError(
             "lane_attacks/lane_aggregators are for the vmapped sweep, which "
             "runs unsharded; drop mesh= (DESIGN.md §7)")
+    if sweep_mesh is not None:
+        if mesh is not None:
+            raise ValueError(
+                "sweep_mesh= (the vmapped sweep's lane mesh) and mesh= (the "
+                "per-run worker mesh) are exclusive; see DESIGN.md §12")
+        if microbatch:
+            raise ValueError(
+                "microbatch streaming is not supported on the sweep "
+                "variants (DESIGN.md §9); drop sweep_mesh/microbatch")
+        _check_lane_mesh(sweep_mesh, lane_axis, worker_axis)
+        if math.prod(list(sweep_mesh.shape.values())) > 1:
+            # same backend freeze as the 1-axis mesh path: the sweep runs
+            # the segment inside a shard_map region, where interpret-mode
+            # pallas cannot lower (the 1-device mesh skips the shard_map
+            # and so keeps dynamic dispatch — bitwise with the unsharded
+            # sweep by construction)
+            cfg = dataclasses.replace(
+                cfg, agg_backend=agg_engine.resolve_backend(cfg.agg_backend))
     if microbatch and (lane_attacks is not None
                        or lane_aggregators is not None):
         raise ValueError(
@@ -543,7 +599,8 @@ def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer,
             cfg, agg_backend=agg_engine.resolve_backend(cfg.agg_backend))
     j_max = cfg.mlmc.j_max
     n_max = 2 ** j_max if cfg.use_mlmc else 1
-    gather = None if gspmd else _worker_gather(mesh, worker_axis)
+    gather = None if gspmd else _worker_gather(
+        mesh if mesh is not None else sweep_mesh, worker_axis)
     constrain = _gspmd_constraints(mesh, worker_axis, param_specs) \
         if gspmd else None
     atk_one = (attacks_lib.get_attack(cfg.attack, **(cfg.attack_kwargs or {}))
@@ -653,10 +710,20 @@ def make_dynabro_scan_fn(grad_fn: GradFn, cfg: DynaBROConfig, opt: Optimizer,
                                  if lane_attacks is not None else None)
         seg_lane.lane_aggregators = (tuple(lane_aggregators)
                                      if lane_aggregators is not None else None)
+        seg_lane.sweep_mesh = sweep_mesh
         return seg_lane
 
     def seg(carry, xs):
         return jax.lax.scan(body, carry, xs)
+
+    if sweep_mesh is not None:
+        # the no-lane-axis sweep form: un-jitted like seg_lane (the sweep
+        # jits the shard_map-wrapped vmapped wrapper), tagged so the sweep
+        # can reject a mesh mismatch
+        seg.lane_attacks = None
+        seg.lane_aggregators = None
+        seg.sweep_mesh = sweep_mesh
+        return seg
 
     if mesh is None or gspmd:
         # GSPMD path: no shard_map — the in-graph with_sharding_constraint
@@ -941,11 +1008,39 @@ def run_momentum_scan(
 # the wrapper closes over scan_fn, so any cache holding the wrapper pins
 # its key.)
 
-_VMAPPED_CACHE: list = []  # MRU-first [(scan_fn, lane_attacks, vseg), ...]
+_VMAPPED_CACHE: list = []  # MRU-first [(scan_fn, config_key, vseg), ...]
 _VMAPPED_CACHE_SIZE = 8
 
 
-def _vmapped_scan_fn(scan_fn, lane: bool = False):
+def _shard_sweep(vseg, mesh, lane_axis: str, worker_axis: str, *,
+                 lane: bool, replicated: bool):
+    """Wrap the vmapped sweep segment in ``shard_map`` over a 2-axis
+    ``(lanes, workers)`` mesh (DESIGN.md §12): lanes are split over the lane
+    axis (carry, mask schedule and the per-lane attack/agg plans), the batch
+    schedule over the worker axis (the segment re-assembles the gradient
+    stacks with a worker all_gather, exactly as on the 1-axis mesh path);
+    levels and keys are replicated. Callers skip this wrap entirely on a
+    1-device mesh — the bitwise contract by construction, as in
+    ``_worker_gather``."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import shard_map
+
+    lanes = P(lane_axis)
+    # batch leaves: (L, m, n_max, ...) — or (R, L, m, ...) with a replicate
+    # axis — split on the worker dim; masks lead with the lane (cell) axis
+    batch_spec = P(None, None, worker_axis) if replicated \
+        else P(None, worker_axis)
+    xs_specs = (P(), batch_spec, lanes, P())
+    in_specs = (lanes, xs_specs) + ((lanes, lanes) if lane else ())
+    return shard_map(vseg, mesh=mesh, in_specs=in_specs,
+                     out_specs=(lanes, lanes),
+                     axis_names={lane_axis, worker_axis}, check_vma=False)
+
+
+def _vmapped_scan_fn(scan_fn, lane: bool = False, replicated: bool = False,
+                     lane_mesh=None, lane_axis: str = "lanes",
+                     worker_axis: str = "workers"):
     """Lane-batched segment fn: model/optimizer state and the mask schedule
     are mapped over the lane axis; levels / batches / keys stay shared (they
     depend only on the sweep seed) — crucially the ``lax.switch`` level index
@@ -953,16 +1048,40 @@ def _vmapped_scan_fn(scan_fn, lane: bool = False):
     the segment's extra ``atk = (attack_id, theta)`` and ``agg = (agg_id,
     theta, thr_coeff)`` arguments are mapped over lanes as well (both
     dispatches are per-lane data; an absent axis is just ``None``, an empty
-    pytree vmap maps over trivially)."""
+    pytree vmap maps over trivially).
+
+    ``replicated`` nests a second vmap for the replicate axis (DESIGN.md
+    §12): the outer map stays the cell axis above; the inner map runs each
+    cell's replicates over per-replicate batch schedules (leading R axis),
+    masks (cells carry a (C, R, T, n_max, m) schedule) and key streams
+    ((R, T, 2)), while the level plan — and with it the ``lax.switch``
+    index — stays scalar and shared, and the per-lane attack/agg plans stay
+    per-cell. ``lane_mesh`` (2-axis, multi-device) additionally wraps the
+    result in ``_shard_sweep``; a 1-device mesh is ignored here so the
+    traced graph is the unsharded one (bitwise by construction)."""
+    if lane_mesh is not None and \
+            math.prod(list(lane_mesh.shape.values())) == 1:
+        lane_mesh = None
+    key = (lane, replicated, lane_mesh, lane_axis, worker_axis)
     for i, entry in enumerate(_VMAPPED_CACHE):
-        if entry[0] is scan_fn and entry[1] == lane:
+        if entry[0] is scan_fn and entry[1] == key:
             _VMAPPED_CACHE.insert(0, _VMAPPED_CACHE.pop(i))
             return entry[2]
+    inner = scan_fn
+    if replicated:
+        rep_axes = ((0, 0), (None, 0, 0, 0))
+        if lane:
+            rep_axes = rep_axes + (None, None)
+        inner = jax.vmap(scan_fn, in_axes=rep_axes)
     in_axes = ((0, 0), (None, None, 0, None))
     if lane:
         in_axes = in_axes + (0, 0)
-    vseg = jax.jit(jax.vmap(scan_fn, in_axes=in_axes))
-    _VMAPPED_CACHE.insert(0, (scan_fn, lane, vseg))
+    vseg = jax.vmap(inner, in_axes=in_axes)
+    if lane_mesh is not None:
+        vseg = _shard_sweep(vseg, lane_mesh, lane_axis, worker_axis,
+                            lane=lane, replicated=replicated)
+    vseg = jax.jit(vseg)
+    _VMAPPED_CACHE.insert(0, (scan_fn, key, vseg))
     del _VMAPPED_CACHE[_VMAPPED_CACHE_SIZE:]
     return vseg
 

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 from repro.core.agg_engine import agg_param_names
 from repro.core.mlmc import MLMCConfig
 from repro.core.robust_train import (
-    DynaBROConfig, run_dynabro, run_dynabro_scan, run_dynabro_scan_sweep,
+    DynaBROConfig, run_dynabro, run_dynabro_scan,
 )
 from repro.core.switching import get_switcher
 from repro.optim.optimizers import Optimizer, sgd
@@ -127,10 +127,11 @@ def make_quadratic_task(sigma: float = 0.5, seed: int = 0) -> Task:
     def grad_fn(params, unit_key):
         return {"x": A @ params["x"] + sigma * jax.random.normal(unit_key, (2,))}
 
-    def make_sampler(m):
+    def make_sampler(m, sampler_seed=None):
+        s = seed if sampler_seed is None else sampler_seed
         def sample(t, n):
             keys = jax.random.split(
-                jax.random.fold_in(jax.random.PRNGKey(seed), t), m * n)
+                jax.random.fold_in(jax.random.PRNGKey(s), t), m * n)
             return keys.reshape(m, n, *keys.shape[1:])
         return sample
 
@@ -179,6 +180,37 @@ def _row(task: Task, sc: Scenario, params, logs, *, driver: str, m: int,
         "cost": sum(l.cost for l in logs),
         "wall_s": wall,
     }
+
+
+def _stat_row(task: Task, sc: Scenario, cell, *, m: int, T: int,
+              wall: float) -> Dict[str, Any]:
+    """One results row for a cell's replicate lanes (``cell`` is the
+    ``[(params, logs), ...]`` list of one cell): the single-run row shape
+    plus the replicate statistics columns ``final_mean`` / ``final_std`` /
+    ``final_stderr`` / ``n_seeds`` (DESIGN.md §12). With one replicate the
+    statistics degenerate (std = stderr = 0.0, ``final`` untouched); with
+    several, ``final`` becomes the replicate mean — honest sample std
+    (ddof=1), not a typographic ±0 — and the log-derived columns
+    (``failsafe_trips`` / ``mean_level`` / ``cost``) average over lanes."""
+    per = [_row(task, sc, p, logs, driver="vmap", m=m, T=T, wall=wall)
+           for p, logs in cell]
+    r = dict(per[0])
+    n = len(per)
+    finals = [p["final"] for p in per]
+    mean = sum(finals) / n
+    r["n_seeds"] = n
+    r["final_mean"] = mean
+    if n > 1:
+        var = sum((f - mean) ** 2 for f in finals) / (n - 1)
+        r["final_std"] = var ** 0.5
+        r["final_stderr"] = (var / n) ** 0.5
+        r["final"] = mean
+        for k in ("failsafe_trips", "mean_level", "cost"):
+            r[k] = sum(p[k] for p in per) / n
+    else:
+        r["final_std"] = 0.0
+        r["final_stderr"] = 0.0
+    return r
 
 
 def run_scenario(
@@ -239,16 +271,26 @@ def run_matrix(
     """Sweep every scenario through the compiled driver -> results table.
 
     ``driver="vmap"`` routes through ``run_matrix_vmapped`` (the whole grid
-    as lanes of ONE vmapped compiled dispatch; unsharded only — combine with
-    ``mesh=`` and it raises); ``"scan"`` / ``"legacy"`` run one driver call
-    per cell."""
+    as lanes of ONE vmapped compiled dispatch; combine with the per-run
+    worker ``mesh=`` and it raises — lane-axis sharding goes through
+    ``lane_mesh=`` instead) and is the only driver that takes the replicate
+    statistics axis (``seeds=`` / ``replicates=``, plus ``lane_chunk=`` /
+    ``lane_mesh=`` scaling knobs); ``"scan"`` / ``"legacy"`` run one driver
+    call per cell."""
     if kw.get("driver") == "vmap":
         if kw.get("mesh") is not None:
             raise ValueError(
-                "driver='vmap' sweeps run unsharded; drop mesh= or use "
-                "driver='scan' for the sharded per-cell driver")
+                "driver='vmap' sweeps run unsharded per lane; drop mesh= "
+                "(lane_mesh= shards the lane axis) or use driver='scan' "
+                "for the sharded per-cell driver")
         kw = {k: v for k, v in kw.items() if k not in ("driver", "mesh")}
         return run_matrix_vmapped(task, scenarios, m=m, T=T, V=V, **kw)
+    for rep_kw in ("seeds", "replicates", "lane_chunk", "lane_mesh"):
+        if kw.get(rep_kw):
+            raise ValueError(
+                f"{rep_kw}= is a replicate-lane option of the vmapped sweep; "
+                f"pass driver='vmap' (per-cell drivers run one seed per "
+                f"call)")
     return [run_scenario(task, sc, m=m, T=T, V=V, **kw) for sc in scenarios]
 
 
@@ -266,6 +308,10 @@ def run_matrix_vmapped(
     use_mlmc: bool = True,
     seed: int = 0,
     chunk: int = 0,
+    seeds=None,
+    replicates=None,
+    lane_chunk: int = 0,
+    lane_mesh=None,
 ) -> List[Dict[str, Any]]:
     """Sweep a grid with every cell a lane of ONE vmapped dispatch
     (DESIGN.md §7).
@@ -282,28 +328,58 @@ def run_matrix_vmapped(
     its lanes. One sampler is shared by every lane (lanes share batch draws
     by construction), so ``task.make_sampler`` must return *pure* samplers —
     samplers with hidden per-call state need the per-cell drivers
-    (``driver="scan"`` with ``vectorize_batches=False``)."""
+    (``driver="scan"`` with ``vectorize_batches=False``).
+
+    ``seeds=`` / ``replicates=`` add the replicate statistics axis
+    (DESIGN.md §12): every cell runs one extra lane per replicate seed —
+    switcher mask schedule, attack key stream AND data sampler each fold the
+    replicate seed (the sampler through ``task.make_sampler(m,
+    sampler_seed=...)``, which the task must accept), so replicate lanes are
+    genuinely distinct draws, paired across cells. Rows then carry
+    ``final_mean`` / ``final_std`` / ``final_stderr`` (``final`` = the mean)
+    with ``n_seeds`` = the replicate count; without the axis the columns
+    degenerate to std = stderr = 0.0, ``n_seeds`` = 1 and the row values are
+    bitwise those of the un-replicated sweep. ``lane_chunk`` streams huge
+    grids through fixed-size cell chunks; ``lane_mesh`` (a
+    ``launch.mesh.make_lane_mesh`` mesh) shards the cell axis across
+    devices."""
     scs = list(scenarios)
     if not scs:
         return []
-    sampler = task.make_sampler(m)
     # the shared cfg's aggregator/option fields are inert in lane mode (rule
     # and fail-safe coefficient are per-lane data), but build it through
     # _cell_cfg anyway so the two paths cannot drift
     cfg = _cell_cfg(scs[0], m, T, V, kappa, j_cap, use_mlmc, delta)
-    switchers = [get_switcher(sc.switcher, m, seed=seed,
-                              **dict(sc.switcher_kwargs)) for sc in scs]
-    attacks = [(sc.attack, dict(sc.attack_kwargs)) for sc in scs]
-    aggregators = [_agg_spec(sc, delta) for sc in scs]
+    from repro.api.session import Session, _task_sampler_factory
+    from repro.api.specs import SweepSpec
+    spec = SweepSpec(
+        switchers=tuple((sc.switcher, dict(sc.switcher_kwargs))
+                        for sc in scs),
+        attacks=tuple((sc.attack, dict(sc.attack_kwargs)) for sc in scs),
+        aggregators=tuple(_agg_spec(sc, delta) for sc in scs),
+        seeds=None if seeds is None else tuple(int(s) for s in seeds),
+        replicates=None if replicates is None else int(replicates))
+    factory = None
+    if spec.n_replicates > 1 or spec.seeds is not None:
+        factory = _task_sampler_factory(task, m)
+        if factory is None:
+            raise ValueError(
+                "seeds=/replicates= need per-replicate data streams, but "
+                "task.make_sampler does not accept sampler_seed=; add the "
+                "kwarg (see make_quadratic_task) or drop the replicate axis")
+    sess = Session(cfg, grad_fn=task.grad_fn, params0=task.params0,
+                   opt=make_opt(), m=m, sample_batches=task.make_sampler(m),
+                   seed=seed, sampler_factory=factory)
+    replicated = spec.n_replicates > 1
     t0 = time.perf_counter()
-    outs = run_dynabro_scan_sweep(task.grad_fn, task.params0, make_opt(),
-                                  cfg, switchers, sampler, T, seed=seed,
-                                  chunk=chunk, attacks=attacks,
-                                  aggregators=aggregators)
-    jax.block_until_ready([l for p, _ in outs for l in jax.tree.leaves(p)])
+    outs = sess.sweep(spec, T, chunk=chunk, lane_chunk=lane_chunk,
+                      lane_mesh=lane_mesh)
+    cells = outs if replicated else [[cell] for cell in outs]
+    jax.block_until_ready([l for cell in cells for p, _ in cell
+                           for l in jax.tree.leaves(p)])
     wall = (time.perf_counter() - t0) / len(scs)
-    return [_row(task, sc, params, logs, driver="vmap", m=m, T=T, wall=wall)
-            for sc, (params, logs) in zip(scs, outs)]
+    return [_stat_row(task, sc, cell, m=m, T=T, wall=wall)
+            for sc, cell in zip(scs, cells)]
 
 
 def format_table(rows: Sequence[Dict[str, Any]], value: str = "final",
@@ -316,7 +392,12 @@ def format_table(rows: Sequence[Dict[str, Any]], value: str = "final",
     (row, col) cell with *different* values — a residual collision the labels
     cannot split, e.g. pivoting away a varying axis — a RuntimeWarning names
     the cell and the first value is shown; duplicate rows with equal values
-    (duplicate scenarios) stay silent."""
+    (duplicate scenarios) stay silent.
+
+    Rows carrying the replicate statistics columns (``n_seeds > 1`` with a
+    ``<value>_mean`` / ``<value>_std`` pair, DESIGN.md §12) render as
+    ``mean±std``; single-seed rows render the bare value — never a
+    typographic ``±0.0000``."""
     def label(r, k):
         return str(r.get(f"{k}_label", r[k]))
 
@@ -325,22 +406,33 @@ def format_table(rows: Sequence[Dict[str, Any]], value: str = "final",
         # scenario (both NaN) are still duplicates, not a collision
         return a != b and not (a != a and b != b)
 
+    def cell_str(r):
+        if r.get("n_seeds", 1) > 1 and f"{value}_mean" in r:
+            return f"{r[f'{value}_mean']:.4f}±{r[f'{value}_std']:.4f}"
+        return f"{r[value]:.4f}"
+
     cols = list(dict.fromkeys(label(r, col_key) for r in rows))
     rks = list(dict.fromkeys(label(r, row_key) for r in rows))
-    cw = max([12] + [len(c) + 2 for c in cols])
-    rw = max([12] + [len(rk) + 1 for rk in rks])
-    lines = [" " * rw + "".join(f"{c:>{cw}s}" for c in cols)]
+    cells = {}
     for rk in rks:
-        cells = []
         for c in cols:
-            sel = [r[value] for r in rows
+            sel = [r for r in rows
                    if label(r, row_key) == rk and label(r, col_key) == c]
-            if len(sel) > 1 and any(differs(v, sel[0]) for v in sel[1:]):
+            if not sel:
+                continue
+            if len(sel) > 1 and any(differs(v[value], sel[0][value])
+                                    for v in sel[1:]):
                 warnings.warn(
                     f"format_table: {len(sel)} rows collide on cell "
                     f"({rk!r}, {c!r}) with differing {value!r} values; "
                     f"showing the first — pivot on a distinguishing key",
                     RuntimeWarning, stacklevel=2)
-            cells.append(f"{sel[0]:{cw}.4f}" if sel else f"{'—':>{cw}s}")
-        lines.append(f"{rk:{rw}s}" + "".join(cells))
+            cells[(rk, c)] = cell_str(sel[0])
+    cw = max([12] + [len(c) + 2 for c in cols]
+             + [len(s) + 2 for s in cells.values()])
+    rw = max([12] + [len(rk) + 1 for rk in rks])
+    lines = [" " * rw + "".join(f"{c:>{cw}s}" for c in cols)]
+    for rk in rks:
+        lines.append(f"{rk:{rw}s}" + "".join(
+            f"{cells.get((rk, c), '—'):>{cw}s}" for c in cols))
     return "\n".join(lines)

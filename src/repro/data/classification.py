@@ -39,6 +39,18 @@ def clf_loss(params, batch):
     return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(y.shape[0]), y])
 
 
+def make_index_sampler(m: int, unit_batch: int = 32, seed: int = 0,
+                       n_train: int = 20000):
+    """The deterministic training-index sampler of ``make_task``, standalone
+    so the replicate-seed axis can fold a distinct draw stream per replicate
+    (DESIGN.md §12) while the dataset itself stays fixed: a
+    ``(t, k) -> (m, k, unit_batch)`` index tensor seeded by ``seed``."""
+    def sampler(t, k):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed + 17), t)
+        return jax.random.randint(key, (m, k, unit_batch), 0, n_train)
+    return sampler
+
+
 def make_task(m: int, unit_batch: int = 32, seed: int = 0, noise: float = 1.0):
     """Returns (params0, grad_fn, sampler, eval_fn)."""
     X, y = gaussian_mixture_dataset(N_CLASSES, DIM, 24000, seed=seed,
@@ -52,10 +64,7 @@ def make_task(m: int, unit_batch: int = 32, seed: int = 0, noise: float = 1.0):
     def grad_fn(params, idx):
         return jax.grad(clf_loss)(params, (Xtr[idx], ytr[idx]))
 
-    def sampler(t, k):
-        # deterministic index tensor (m, k, unit_batch)
-        key = jax.random.fold_in(jax.random.PRNGKey(seed + 17), t)
-        return jax.random.randint(key, (m, k, unit_batch), 0, n)
+    sampler = make_index_sampler(m, unit_batch, seed=seed, n_train=n)
 
     @jax.jit
     def test_acc(params):

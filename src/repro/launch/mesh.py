@@ -96,3 +96,24 @@ def make_worker_mesh(n_devices: int = 0, axis: str = "workers",
     if n > len(devs):
         raise ValueError(f"requested {n} devices, have {len(devs)}")
     return jax.make_mesh((n,), (axis,), devices=devs[:n])
+
+
+def make_lane_mesh(n_lanes: int = 0, n_workers: int = 1,
+                   lane_axis: str = "lanes", worker_axis: str = "workers"):
+    """2-axis ``(lanes, workers)`` mesh for the sharded vmapped sweep
+    (DESIGN.md §12): the sweep's cell lanes are split over ``lane_axis``
+    and, with ``n_workers > 1``, each lane's per-worker gradient vmap over
+    ``worker_axis`` (the 1-axis driver's worker sharding, nested inside the
+    lane split). ``n_lanes=0`` uses whatever the worker axis leaves over;
+    a ``(1, 1)`` mesh is this path's parity-contract mesh — the sweep skips
+    the shard_map wrap entirely, so it is bitwise-identical to the
+    unsharded sweep by construction."""
+    devs = jax.devices()
+    if n_workers < 1:
+        raise ValueError(f"n_workers must be >= 1, got {n_workers}")
+    n = n_lanes or max(1, len(devs) // n_workers)
+    if n * n_workers > len(devs):
+        raise ValueError(
+            f"requested {n}x{n_workers} devices, have {len(devs)}")
+    return jax.make_mesh((n, n_workers), (lane_axis, worker_axis),
+                         devices=devs[: n * n_workers])

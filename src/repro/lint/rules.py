@@ -641,3 +641,75 @@ def jxl005(tree: ast.Module, path: str) -> Iterator[RuleHit]:
                     f"'{tf.node.name}' ({tf.via}) — host materialization "
                     f"in traced code",
                 )
+
+
+# ------------------------------------------------------------------- JXL006
+
+
+def _enclosing_scopes(tree: ast.Module) -> Dict[ast.AST, ast.AST]:
+    """Map each node to its nearest enclosing function (module as fallback)."""
+    scope_of: Dict[ast.AST, ast.AST] = {}
+
+    def visit(node: ast.AST, scope: ast.AST) -> None:
+        scope_of[node] = scope
+        child_scope = (
+            node
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+            else scope
+        )
+        for child in ast.iter_child_nodes(node):
+            visit(child, child_scope)
+
+    visit(tree, tree)
+    return scope_of
+
+
+def _mentions_n_seeds(scope: ast.AST) -> bool:
+    for node in ast.walk(scope):
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            if "n_seeds" in node.value:
+                return True
+        elif isinstance(node, ast.Name) and node.id == "n_seeds":
+            return True
+        elif isinstance(node, ast.Attribute) and node.attr == "n_seeds":
+            return True
+    return False
+
+
+@rule("JXL006", "'+-' spread formatted with no n_seeds handling in scope")
+def jxl006(tree: ast.Module, path: str) -> Iterator[RuleHit]:
+    """An f-string that renders ``...+-{spread}`` (or ``±``) is an error bar.
+
+    Error bars computed from a length-1 sample print ``+-0.000`` — typography
+    masquerading as statistics (the ISSUE-10 reporting bug: fast-mode bench
+    rows ran one seed and still printed a spread). A formatter that handles
+    the degenerate case necessarily talks about ``n_seeds`` somewhere in the
+    same function (to branch on it or to report it alongside); one that never
+    mentions it cannot be guarding, so flag it."""
+    scope_of = _enclosing_scopes(tree)
+    guarded: Dict[ast.AST, bool] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.JoinedStr):
+            continue
+        parts = node.values
+        for lit, nxt in zip(parts, parts[1:]):
+            if not (
+                isinstance(lit, ast.Constant)
+                and isinstance(lit.value, str)
+                and (lit.value.endswith("+-") or lit.value.endswith("±"))
+                and isinstance(nxt, ast.FormattedValue)
+            ):
+                continue
+            scope = scope_of.get(node, tree)
+            if scope not in guarded:
+                guarded[scope] = _mentions_n_seeds(scope)
+            if guarded[scope]:
+                continue
+            yield (
+                node,
+                "f-string renders a '+-' spread but the enclosing scope "
+                "never mentions n_seeds — a single-seed sample prints a "
+                "fake '+-0.000' error bar; carry n_seeds in the output and "
+                "omit the spread when n_seeds == 1",
+            )
+            break

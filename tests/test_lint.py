@@ -305,6 +305,57 @@ def test_jxl005_suppression_honored():
     assert codes(src) == []
 
 
+# ------------------------------------------------------------------- JXL006
+
+
+def test_jxl006_fires_on_unguarded_spread():
+    src = (
+        "def main(rows):\n"
+        '    return [f"x/{n},,gap={m:.3f}+-{s:.3f}" for n, m, s in rows]\n'
+    )
+    assert codes(src) == ["JXL006"]
+
+
+def test_jxl006_fires_on_pm_sign():
+    src = 'def fmt(m, s):\n    return f"acc {m:.2f}±{s:.2f}"\n'
+    assert codes(src) == ["JXL006"]
+
+
+def test_jxl006_fires_at_module_scope():
+    src = 'ROW = f"gap={1.0:.3f}+-{0.0:.3f}"\n'
+    assert codes(src) == ["JXL006"]
+
+
+def test_jxl006_clean_when_scope_handles_n_seeds():
+    src = (
+        "def fmt(vals):\n"
+        "    n = len(vals)\n"
+        "    m = sum(vals) / n\n"
+        "    if n == 1:\n"
+        '        return f"gap={m:.3f};n_seeds=1"\n'
+        "    s = 1.0\n"
+        '    return f"gap={m:.3f}+-{s:.3f};n_seeds={n}"\n'
+    )
+    assert codes(src) == []
+
+
+def test_jxl006_clean_on_literal_pm_without_formatted_value():
+    src = (
+        'def fmt(r):\n    return f"a +- b literal {r}"\n'
+        'def fmt2(m):\n    return f"gap={m}+-const"\n'
+    )
+    assert codes(src) == []
+
+
+def test_jxl006_suppression_honored():
+    src = (
+        "def main(m, s):\n"
+        '    return f"gap={m:.3f}+-{s:.3f}"'
+        "  # jaxlint: disable=JXL006 -- spread is always multi-sample here\n"
+    )
+    assert codes(src) == []
+
+
 # -------------------------------------------------------------- engine/CLI
 
 

@@ -138,16 +138,24 @@ def test_vmapped_matrix_single_dispatch_whole_grid(monkeypatch):
     runs as ONE sweep call for the WHOLE grid — every cell a lane, the
     aggregator axis dispatched per lane like the attack axis (not one call
     per aggregator group)."""
-    import repro.core.scenarios as scen
+    from repro.api.session import Session
 
     lane_counts = []
-    orig = scen.run_dynabro_scan_sweep
+    orig = Session.sweep
+    depth = [0]
 
-    def counting(*args, **kw):
-        lane_counts.append(len(args[4]))  # the switchers argument
-        return orig(*args, **kw)
+    def counting(self, spec, *args, **kw):
+        # grouping/chunking recurse through sweep(); the contract is about
+        # the driver's TOP-LEVEL calls — one for the whole grid
+        if depth[0] == 0:
+            lane_counts.append(spec.lanes)
+        depth[0] += 1
+        try:
+            return orig(self, spec, *args, **kw)
+        finally:
+            depth[0] -= 1
 
-    monkeypatch.setattr(scen, "run_dynabro_scan_sweep", counting)
+    monkeypatch.setattr(Session, "sweep", counting)
     grid = scenario_grid(
         ["sign_flip", ("ipm", {"eps": 0.3}), "alie", "none"],
         [("periodic", {"n_byz": 3, "K": K}) for K in (5, 8, 13, 20)],
@@ -255,8 +263,9 @@ def test_grouped_sweep_shuffled_lanes_caller_order_and_dispatch(monkeypatch):
 
 
 def test_grouped_sweep_scan_fn_mapping_validation():
-    """The {rule_name: scan_fn} steady-state form: keys must equal the
-    grid's distinct rules, and a mapping without aggregators is an error."""
+    """The {rule_name: scan_fn} steady-state form: keys must cover the
+    grid's distinct rules (a superset is fine — lane_chunk sub-sweeps see
+    rule subsets), and a mapping without aggregators is an error."""
     from repro.core.robust_train import make_dynabro_scan_fn
     from repro.optim.optimizers import sgd
 
@@ -265,7 +274,7 @@ def test_grouped_sweep_scan_fn_mapping_validation():
     fns = {name: make_dynabro_scan_fn(TASK.grad_fn, cfg, sgd(2e-2),
                                       lane_aggregators=(name,))
            for name in ("cwmed", "cwtm")}
-    with pytest.raises(ValueError, match="do not match"):
+    with pytest.raises(ValueError, match="do not cover"):
         run_dynabro_scan_sweep(
             TASK.grad_fn, TASK.params0, sgd(2e-2), cfg, sws,
             TASK.make_sampler(M), 8, scan_fn={"cwmed": fns["cwmed"]},
